@@ -1,0 +1,31 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV lines:
+  table1.*    — paper Table I analogue (blocked matmul config sweep)
+  table2.*    — paper Table II analogue (SpMV on the four matrices)
+  bandwidth.* — paper §V-B bandwidth-extrapolation figure
+  roofline.*  — §Roofline rows from the dry-run artifacts (if present)
+"""
+
+from __future__ import annotations
+
+
+def main() -> None:
+    from benchmarks import (bandwidth_extrapolation, roofline_report,
+                            table1_matmul, table2_spmv)
+
+    lines: list[str] = []
+    lines += table1_matmul.main()
+    lines += table2_spmv.main()
+    lines += bandwidth_extrapolation.main()
+    try:
+        lines += roofline_report.main()
+    except Exception as e:  # dry-run artifacts may not exist yet
+        lines.append(f"roofline.unavailable,0.0,{e!r}")
+    print("name,us_per_call,derived")
+    for ln in lines:
+        print(ln)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,88 @@
+"""Table I analogue: blocked dense matmul efficiency vs configuration.
+
+The paper's Table I sweeps the many-core configuration (16 vs 32 cores,
+local-memory size) and reports cycles + GFLOPs + efficiency (measured/peak)
+from their SystemC machine model.  Here the configuration axis is the VMEM
+tile plan; efficiency comes from the same style of analytical machine model
+(`core.cost_model.matmul_time_model`), and the kernel itself is additionally
+executed (interpret mode, small sizes) to verify the plan is real.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import cost_model, dse, tiling
+from repro.core.hardware import TPU_V5E
+from repro.kernels.matmul import matmul
+from repro.kernels.matmul.ref import matmul_ref
+
+
+def rows():
+    out = []
+    # Configuration sweep: the paper's {16 cores/32KB, 32 cores/16KB} becomes
+    # {VMEM budget} x {problem size}; eq.2 picks the tile.  Small budgets
+    # reproduce the paper's regime where the memory term eats into
+    # efficiency (their 84-86%); VMEM-scale budgets saturate compute.
+    for vmem_mb, n in [(0.25, 4096), (0.5, 4096), (1, 4096), (2, 4096),
+                       (8, 8192), (32, 4096), (64, 8192), (96, 8192),
+                       (96, 16384)]:
+        t = tiling.solve_tpu(vmem_bytes=int(vmem_mb * 2**20), m=n, n=n, k=n)
+        res = cost_model.matmul_time_model(n, n, n, t)
+        out.append({
+            "name": f"matmul_n{n}_vmem{vmem_mb}MB",
+            "tile": f"y{t.y}/x{t.x}/z{t.z}",
+            "gflops_model": res["gflops"],
+            "efficiency": res["efficiency"],
+            "time_model_s": res["time_s"],
+        })
+    # DSE-autotuned point (paper flow, automated)
+    t = dse.autotune_matmul_tile(8192, 8192, 8192)
+    res = cost_model.matmul_time_model(8192, 8192, 8192, t)
+    out.append({
+        "name": "matmul_n8192_dse",
+        "tile": f"y{t.y}/x{t.x}/z{t.z}",
+        "gflops_model": res["gflops"],
+        "efficiency": res["efficiency"],
+        "time_model_s": res["time_s"],
+    })
+    return out
+
+
+def kernel_check(reps: int = 3):
+    """Execute the kernel (interpret) and the oracle; report us/call + error."""
+    key = jax.random.PRNGKey(0)
+    a = jax.random.normal(key, (256, 256), jnp.float32)
+    b = jax.random.normal(key, (256, 256), jnp.float32)
+    t = tiling.Tile(128, 128, 128)
+    out = matmul(a, b, tile=t, interpret=True)
+    err = float(jnp.max(jnp.abs(out - matmul_ref(a, b))))
+    ref_fn = jax.jit(lambda a, b: matmul_ref(a, b))
+    ref_fn(a, b).block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        ref_fn(a, b).block_until_ready()
+    us = (time.perf_counter() - t0) / reps * 1e6
+    return {"name": "matmul_kernel_check_256", "us_per_call": us,
+            "max_err": err}
+
+
+def main():
+    lines = []
+    for r in rows():
+        lines.append(
+            f"table1.{r['name']},{r['time_model_s'] * 1e6:.1f},"
+            f"eff={r['efficiency']:.3f};gflops={r['gflops_model']:.0f};"
+            f"tile={r['tile']}")
+    kc = kernel_check()
+    lines.append(f"table1.{kc['name']},{kc['us_per_call']:.1f},"
+                 f"max_err={kc['max_err']:.2e}")
+    return lines
+
+
+if __name__ == "__main__":
+    print("\n".join(main()))

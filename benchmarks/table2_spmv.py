@@ -1,0 +1,122 @@
+"""Table II analogue: sparse matrix-vector multiplication across the paper's
+four test matrices (synthesized to their published NNZ / M / NNZ-per-column
+statistics), HW-vs-baseline ratio, and the load-balance measurement.
+
+Paper columns: NNZ, M, NNZ/col range, ARM exec, HW exec, ratio.  Ours: same
+matrix stats; "ARM" = jnp dense matvec baseline; "HW" = the balanced-ELL
+SpMV path; plus the paper's §V-B balance stat (fraction of nnz per worker,
+round-robin vs LPT) and the TPU-adaptation metric (ELL padding waste).
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import loadbalance
+from repro.kernels.spmv import pack_csr, spmv
+
+# Published stats: name -> (NNZ, M(rows), nnz_per_col_range)
+MATRICES = {
+    "Maragal_2": (4_357, 555, (0, 139)),
+    "flower_5_4": (43_942, 5_226, (1, 3)),
+    "BIBD_14_7": (72_072, 91, (21, 21)),
+    "LD_pilot87": (74_949, 2_030, (1, 96)),
+}
+
+
+def synthesize(name: str, seed: int = 0):
+    """Random matrix matching (NNZ, M, nnz-per-row range) of the original."""
+    nnz, m, (lo, hi) = MATRICES[name]
+    rng = np.random.default_rng(seed + hash(name) % 1000)
+    if lo == hi:
+        per_row = np.full(m, nnz // m)
+    else:
+        raw = rng.integers(max(lo, 0), hi + 1, size=m).astype(np.float64)
+        per_row = np.maximum((raw / raw.sum() * nnz).astype(int), 0)
+    n_cols = max(int(per_row.max()) + 1, 128)
+    indptr = np.concatenate([[0], np.cumsum(per_row)]).astype(np.int32)
+    indices = np.concatenate([
+        rng.choice(n_cols, size=c, replace=False) for c in per_row
+    ]).astype(np.int32)
+    data = rng.standard_normal(indptr[-1]).astype(np.float32)
+    return indptr, indices, data, (m, n_cols)
+
+
+def bench_one(name: str, reps: int = 5):
+    indptr, indices, data, shape = synthesize(name)
+    m, n = shape
+    x = np.random.default_rng(1).standard_normal(n).astype(np.float32)
+
+    # "ARM baseline": dense matvec
+    dense = np.zeros(shape, np.float32)
+    for r in range(m):
+        dense[r, indices[indptr[r]:indptr[r + 1]]] = \
+            data[indptr[r]:indptr[r + 1]]
+    dense_j = jnp.asarray(dense)
+    xj = jnp.asarray(x)
+    base_fn = jax.jit(lambda A, v: A @ v)
+    base_fn(dense_j, xj).block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        y_base = base_fn(dense_j, xj).block_until_ready()
+    base_us = (time.perf_counter() - t0) / reps * 1e6
+
+    # "HW": balanced-ELL SpMV (oracle path times the same math the kernel
+    # does; kernel itself is validated in tests via interpret mode)
+    mat = pack_csr(indptr, indices, data, shape, scheme="round_robin")
+    spmv(mat, xj, use_kernel=False).block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        y_hw = spmv(mat, xj, use_kernel=False).block_until_ready()
+    hw_us = (time.perf_counter() - t0) / reps * 1e6
+    err = float(jnp.max(jnp.abs(y_hw - y_base)))
+
+    # paper's balance stat for 4 workers
+    _, rr = loadbalance.nnz_balanced_row_order(indptr, 4)
+    _, greedy = loadbalance.nnz_balanced_row_order(indptr, 4, "lpt")
+
+    # Machine-model HW/baseline ratio at TARGET bandwidth (the paper's
+    # HW/ARM column): sparse traffic (vals+cols, sliced-ELL with the
+    # sorted packing law) vs dense matvec traffic, both bandwidth-bound.
+    sorted_mat = pack_csr(indptr, indices, data, shape, scheme="sorted")
+    sliced = {
+        "round_robin": mat.sliced_waste(),
+        "sorted": sorted_mat.sliced_waste(),
+    }
+    sparse_bytes = int(indptr[-1]) * sliced["sorted"] * 8
+    dense_bytes = m * n * 4
+    ratio_model = dense_bytes / max(sparse_bytes, 1)
+
+    return {
+        "name": name,
+        "nnz": int(indptr[-1]), "m": m,
+        "base_us": base_us, "hw_us": hw_us,
+        "ratio_model": ratio_model,
+        "rr_max_frac": rr.max_fraction,
+        "lpt_max_frac": greedy.max_fraction,
+        "ell_waste": mat.padding_waste,
+        "sliced_rr": sliced["round_robin"],
+        "sliced_sorted": sliced["sorted"],
+        "err": err,
+    }
+
+
+def main():
+    lines = []
+    for name in MATRICES:
+        r = bench_one(name)
+        lines.append(
+            f"table2.{r['name']},{r['hw_us']:.1f},"
+            f"base_us={r['base_us']:.1f};ratio_model={r['ratio_model']:.2f};"
+            f"rr_frac={r['rr_max_frac']:.3f};lpt_frac={r['lpt_max_frac']:.3f};"
+            f"sliced_rr={r['sliced_rr']:.2f};"
+            f"sliced_sorted={r['sliced_sorted']:.2f};err={r['err']:.2e}")
+    return lines
+
+
+if __name__ == "__main__":
+    print("\n".join(main()))

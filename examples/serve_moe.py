@@ -1,0 +1,20 @@
+"""Batched MoE serving example: continuous batching on a smoke-scale
+Phi-3.5-MoE through the serving stack (prefill + KV-cached decode + expert
+routing on every token).
+
+Run:  PYTHONPATH=src python examples/serve_moe.py
+"""
+
+from repro.launch import serve
+
+
+def main():
+    serve.main([
+        "--arch", "phi3_5_moe_42b", "--smoke",
+        "--requests", "6", "--batch", "2",
+        "--prompt-len", "12", "--gen", "8",
+    ])
+
+
+if __name__ == "__main__":
+    main()

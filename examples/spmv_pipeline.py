@@ -1,0 +1,56 @@
+"""Sparse matrix-vector pipeline (paper §V-B) through the public API:
+pack with each balancing law, compare balance + padding, execute the kernel,
+and report the Table-II-style summary.
+
+Run:  PYTHONPATH=src python examples/spmv_pipeline.py
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import loadbalance
+from repro.kernels.spmv import pack_csr, spmv
+
+
+def make_matrix(m=2030, n=512, lo=1, hi=96, seed=87):
+    """LD_pilot87-like row-length distribution."""
+    rng = np.random.default_rng(seed)
+    per_row = rng.integers(lo, hi + 1, size=m)
+    indptr = np.concatenate([[0], np.cumsum(per_row)]).astype(np.int32)
+    indices = np.concatenate(
+        [rng.choice(n, size=c, replace=False) for c in per_row]
+    ).astype(np.int32)
+    data = rng.standard_normal(indptr[-1]).astype(np.float32)
+    return indptr, indices, data, (m, n)
+
+
+def main():
+    indptr, indices, data, shape = make_matrix()
+    x = np.random.default_rng(1).standard_normal(shape[1]).astype(np.float32)
+    nnz = int(indptr[-1])
+    print(f"matrix: {shape[0]}x{shape[1]}, nnz={nnz}")
+
+    # paper claim: round-robin balances nnz across p workers (~1/p each)
+    for p in (2, 4, 8):
+        _, st = loadbalance.nnz_balanced_row_order(indptr, p)
+        print(f"  round-robin p={p}: max worker share "
+              f"{st.max_fraction:.3f} (ideal {1 / p:.3f})")
+
+    print("\npacking law comparison (SIMD padding waste, lower=better):")
+    y_ref = None
+    for scheme in ("none", "round_robin", "lpt", "sorted"):
+        mat = pack_csr(indptr, indices, data, shape, scheme=scheme)
+        y = spmv(mat, jnp.asarray(x), use_kernel=False)
+        if y_ref is None:
+            y_ref = y
+        err = float(jnp.max(jnp.abs(y - y_ref)))
+        print(f"  {scheme:12s} sliced waste {mat.sliced_waste():.2f}x "
+              f"(global {mat.padding_waste:.2f}x)  err vs first: {err:.1e}")
+
+    print("\nresult: the paper's balancing law survives the port, but on a "
+          "SIMD target the optimal permutation is SORTED (equal widths), "
+          "not round-robin — see DESIGN.md §Hardware adaptation.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,20 @@
+"""Core library: the paper's contribution as composable JAX-side modules.
+
+- `hardware`  — target-machine constants (the fixed "FPGA" we generate for)
+- `manycore`  — ManyCoreConfig: system-level parameter set -> concrete plan
+- `tiling`    — eq.2 communication-minimizing tile solver (VMEM-adapted)
+- `cost_model`— 3-term analytical roofline (the SystemC-simulation analogue)
+- `hlo_stats` — compiled-HLO parser (FLOPs / bytes / per-collective bytes)
+- `dse`       — automated design-space exploration over the parameter set
+- `loadbalance` — round-robin / LPT nnz balancing (SpMV rows, MoE experts)
+"""
+
+from repro.core import (  # noqa: F401
+    cost_model,
+    dse,
+    hardware,
+    hlo_stats,
+    loadbalance,
+    manycore,
+    tiling,
+)

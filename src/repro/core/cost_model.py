@@ -1,0 +1,136 @@
+"""Three-term analytical roofline — the dry-run replacement for the paper's
+SystemC cycle simulation.
+
+The paper evaluates every candidate many-core configuration by simulating the
+generated SystemC model to get a cycle count.  On a fixed TPU target the same
+role is played by an analytical machine model evaluated on the *compiled*
+program:
+
+    compute   = HLO_FLOPs            / (chips * peak_FLOP/s)
+    memory    = HLO_bytes            / (chips * HBM_bw)
+    collective= collective_bytes     / (chips * ICI_link_bw)
+
+The dominant term is the bottleneck the perf loop iterates on.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core import hardware
+
+
+@dataclasses.dataclass(frozen=True)
+class Roofline:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    chips: int
+    flops: float
+    bytes_accessed: float
+    collective_bytes: float
+    model_flops: float = 0.0  # 6*N*D useful flops, if known
+
+    @property
+    def dominant(self) -> str:
+        terms = {
+            "compute": self.compute_s,
+            "memory": self.memory_s,
+            "collective": self.collective_s,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_s(self) -> float:
+        """Roofline-model step time: the max of the three terms."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_fraction(self) -> float:
+        """MODEL_FLOPS / HLO_FLOPs — how much compiled compute is useful."""
+        return self.model_flops / self.flops if self.flops else 0.0
+
+    @property
+    def mfu_bound(self) -> float:
+        """Upper bound on MFU implied by the roofline (useful flops / peak)."""
+        if self.bound_s <= 0:
+            return 0.0
+        peak = self.chips * hardware.TPU_V5E.peak_flops
+        return (self.model_flops / self.bound_s) / peak if self.model_flops else 0.0
+
+    def row(self) -> dict:
+        return {
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "dominant": self.dominant,
+            "flops": self.flops,
+            "bytes": self.bytes_accessed,
+            "collective_bytes": self.collective_bytes,
+            "model_flops": self.model_flops,
+            "useful_fraction": self.useful_fraction,
+            "mfu_bound": self.mfu_bound,
+        }
+
+
+def roofline(
+    flops: float,
+    bytes_accessed: float,
+    collective_bytes: float,
+    chips: int,
+    model_flops: float = 0.0,
+    chip: hardware.Chip = hardware.TPU_V5E,
+) -> Roofline:
+    """Build the three-term roofline for a compiled step.
+
+    ``flops``/``bytes_accessed`` from ``cost_analysis()`` are whole-program
+    (all chips); collective_bytes likewise is the summed operand traffic.
+    """
+    return Roofline(
+        compute_s=flops / (chips * chip.peak_flops),
+        memory_s=bytes_accessed / (chips * chip.hbm_bw),
+        collective_s=collective_bytes / (chips * chip.ici_bw_per_link),
+        chips=chips,
+        flops=flops,
+        bytes_accessed=bytes_accessed,
+        collective_bytes=collective_bytes,
+        model_flops=model_flops,
+    )
+
+
+def model_flops_train(n_params_active: float, tokens: float) -> float:
+    """6*N*D rule of thumb for a train step (fwd + bwd)."""
+    return 6.0 * n_params_active * tokens
+
+
+def model_flops_decode(n_params_active: float, tokens: float) -> float:
+    """2*N per generated token (forward only)."""
+    return 2.0 * n_params_active * tokens
+
+
+def matmul_time_model(
+    m: int, n: int, k: int, tile, chip: hardware.Chip = hardware.TPU_V5E,
+    dtype_bytes: int = 2, p: int = 1,
+) -> dict:
+    """Analytical cycle-model for the paper's Table-I style evaluation.
+
+    Returns compute-bound and memory-bound times plus the 'efficiency' the
+    paper reports (peak/measured) under the machine model: the run time is
+    max(compute, traffic) assuming perfect overlap (their double-buffering).
+    """
+    from repro.core import tiling as _tiling
+
+    flops = 2.0 * m * n * k
+    traffic_elems = _tiling.comm_volume_rect(m, n, k, tile, p=p)
+    compute_s = flops / chip.peak_flops
+    memory_s = traffic_elems * dtype_bytes / chip.hbm_bw
+    total_s = max(compute_s, memory_s)
+    return {
+        "flops": flops,
+        "traffic_bytes": traffic_elems * dtype_bytes,
+        "compute_s": compute_s,
+        "memory_s": memory_s,
+        "time_s": total_s,
+        "efficiency": compute_s / total_s,
+        "gflops": flops / total_s / 1e9,
+    }

@@ -1,0 +1,106 @@
+"""Design-space exploration — the paper's flow, automated.
+
+The paper's designer manually picks a configuration, auto-generates a SystemC
+model, simulates for a cycle count, and iterates.  Here the candidate space is
+enumerated programmatically and each point is scored either by the fast
+analytical machine model (`core.cost_model`) or by an actual dry-run
+lower+compile (`score=\"compiled\"`), which is the exact analogue of "simulate
+the generated model".  Going from manual to automated DSE is a deliberate
+beyond-paper improvement (recorded in DESIGN.md).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Any, Callable, Iterable, Sequence
+
+from repro.core import cost_model, hardware, tiling
+
+
+@dataclasses.dataclass
+class Candidate:
+    knobs: dict
+    score: float = float("inf")   # seconds — lower is better
+    detail: dict | None = None
+
+    def __repr__(self) -> str:
+        return f"Candidate({self.knobs}, score={self.score:.6g})"
+
+
+def grid(space: dict) -> Iterable[dict]:
+    """Cartesian product of a {knob: [values]} space."""
+    keys = list(space)
+    for combo in itertools.product(*(space[k] for k in keys)):
+        yield dict(zip(keys, combo))
+
+
+def explore(
+    space: dict | Sequence[dict],
+    evaluate: Callable[[dict], tuple[float, dict]],
+    top: int = 5,
+) -> list[Candidate]:
+    """Score every candidate; return the best `top`, ascending by score."""
+    cands = []
+    points = grid(space) if isinstance(space, dict) else space
+    for knobs in points:
+        try:
+            score, detail = evaluate(knobs)
+        except Exception as e:  # infeasible point (OOM, indivisible shard…)
+            score, detail = float("inf"), {"error": repr(e)}
+        cands.append(Candidate(knobs, score, detail))
+    cands.sort(key=lambda c: c.score)
+    return cands[:top]
+
+
+# ---------------------------------------------------------------------------
+# Ready-made explorations
+# ---------------------------------------------------------------------------
+
+def autotune_matmul_tile(
+    m: int, n: int, k: int,
+    vmem_bytes: int | None = None,
+    dtype_bytes: int = 2,
+    align: int = hardware.MXU_DIM,
+) -> tiling.Tile:
+    """Sweep aligned (y, x) pairs; score with the analytical matmul model.
+
+    This is the paper's Table-I exploration (vary cores/local-mem, simulate,
+    pick best) compressed to one call.  The eq.2 seed is always included, so
+    the result is never worse than the paper's closed form.
+    """
+    chip = hardware.TPU_V5E
+    budget = vmem_bytes if vmem_bytes is not None else chip.usable_vmem()
+
+    def evaluate(knobs: dict) -> tuple[float, dict]:
+        y, x = knobs["y"], knobs["x"]
+        z_budget = (budget - y * x * 4) // max((y + 2 * x) * dtype_bytes, 1)
+        z = max(align, (min(z_budget, k) // align) * align)
+        t = tiling.Tile(y, x, z)
+        if t.vmem_elems() * dtype_bytes + y * x * 4 > budget + y * x * dtype_bytes:
+            return float("inf"), {}
+        res = cost_model.matmul_time_model(m, n, k, t, dtype_bytes=dtype_bytes)
+        return res["time_s"], {"tile": t, **res}
+
+    seed = tiling.solve_tpu(budget, dtype_bytes, m=m, n=n, k=k)
+    ys = sorted({align, 2 * align, 4 * align, 8 * align, seed.y})
+    xs = sorted({align, 2 * align, 4 * align, 8 * align, seed.x})
+    space = {"y": [v for v in ys if v <= max(m, align)],
+             "x": [v for v in xs if v <= max(n, align)]}
+    best = explore(space, evaluate, top=1)
+    if best and best[0].detail and "tile" in best[0].detail:
+        return best[0].detail["tile"]
+    return seed
+
+
+def sharding_candidates(num_chips: int, min_model: int = 1) -> list[dict]:
+    """Enumerate (data, model) factorizations — the interconnect DSE axis."""
+    out = []
+    d = 1
+    while d <= num_chips:
+        if num_chips % d == 0:
+            mdl = num_chips // d
+            if mdl >= min_model:
+                out.append({"data": d, "model": mdl})
+        d *= 2
+    return out

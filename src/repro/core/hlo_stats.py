@@ -1,0 +1,133 @@
+"""Parse compiled/lowered HLO text for roofline inputs.
+
+`cost_analysis()` reports FLOPs and bytes accessed but NOT collective traffic,
+so we reconstruct it from the HLO: map every instruction name to its result
+shape, then for each collective op sum the byte sizes of its *operands* (per
+the roofline methodology).  This is the dry-run analogue of the paper's
+SystemC cycle trace: a machine-model-level account of what the generated
+design moves over the interconnect.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+from repro.core.hardware import DTYPE_BYTES
+
+COLLECTIVE_OPS = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+# `%name = <shape> opcode(...)` — shape may be a tuple.
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(\([^=]*?\)|[\w\[\],{}\/#:]+)\s+([\w\-]+)")
+_SHAPE_RE = re.compile(r"([a-z]\d+|pred|token|bf16|f8e4m3|f8e5m2)\[([\d,]*)\]")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+
+
+def shape_bytes(shape_str: str) -> int:
+    """Bytes of an HLO shape string (handles tuples by summing)."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype == "token":
+            continue
+        nbytes = DTYPE_BYTES.get(dtype)
+        if nbytes is None:
+            # e.g. u16/s16 style "x16" dtypes
+            m = re.match(r"[a-z](\d+)", dtype)
+            nbytes = int(m.group(1)) // 8 if m else 4
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * nbytes
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    bytes_by_op: dict
+    count_by_op: dict
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes_by_op.values())
+
+    def summary(self) -> str:
+        parts = [
+            f"{op}: n={self.count_by_op.get(op, 0)} bytes={self.bytes_by_op.get(op, 0):,}"
+            for op in COLLECTIVE_OPS
+            if self.count_by_op.get(op)
+        ]
+        return "; ".join(parts) if parts else "none"
+
+
+def collect_collectives(hlo_text: str) -> CollectiveStats:
+    """Sum operand bytes of every collective in an HLO module dump."""
+    # Pass 1: instruction name -> result shape bytes.
+    def_shape: dict[str, int] = {}
+    lines = hlo_text.splitlines()
+    for ln in lines:
+        m = _DEF_RE.match(ln)
+        if m:
+            name, shape_str, _op = m.groups()
+            def_shape[name] = shape_bytes(shape_str)
+
+    bytes_by_op: dict[str, int] = defaultdict(int)
+    count_by_op: dict[str, int] = defaultdict(int)
+    for ln in lines:
+        m = _DEF_RE.match(ln)
+        if not m:
+            continue
+        name, shape_str, opcode = m.groups()
+        base = None
+        for coll in COLLECTIVE_OPS:
+            if opcode == coll or opcode.startswith(coll + "-start"):
+                base = coll
+                break
+        if base is None:
+            continue
+        # Operand bytes: everything referenced inside the call parens.
+        paren = ln.find("(", m.end(3) - len(opcode))
+        operand_bytes = 0
+        if paren >= 0:
+            # First level of parens only (arguments).
+            depth, j = 0, paren
+            args_end = len(ln)
+            for j in range(paren, len(ln)):
+                if ln[j] == "(":
+                    depth += 1
+                elif ln[j] == ")":
+                    depth -= 1
+                    if depth == 0:
+                        args_end = j
+                        break
+            args = ln[paren + 1 : args_end]
+            for opname in _OPERAND_RE.findall(args):
+                operand_bytes += def_shape.get(opname, 0)
+            if operand_bytes == 0:
+                # Operands may be unprefixed (no %) in newer dumps: fall back
+                # to inline shapes in the arg list, else the result shape.
+                inline = shape_bytes(args)
+                operand_bytes = inline if inline else def_shape.get(name, 0)
+        else:
+            operand_bytes = def_shape.get(name, 0)
+        bytes_by_op[base] += operand_bytes
+        count_by_op[base] += 1
+    return CollectiveStats(dict(bytes_by_op), dict(count_by_op))
+
+
+def cost_analysis_stats(compiled) -> tuple[float, float]:
+    """(flops, bytes accessed) from a compiled executable's cost analysis."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    flops = float(ca.get("flops", 0.0))
+    bytes_accessed = float(ca.get("bytes accessed", ca.get("bytes_accessed", 0.0)))
+    return flops, bytes_accessed

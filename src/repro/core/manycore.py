@@ -1,0 +1,109 @@
+"""ManyCoreConfig — the paper's system-level parameter set, on a TPU pod.
+
+The paper's generator takes {number of cores, local-memory sizes, interconnect
+topology, per-core arithmetic repertoire, number formats} and emits a concrete
+machine plus its SystemC model.  Here the same parameter set describes how a
+JAX program is laid onto a pod: mesh geometry (cores + interconnect), VMEM
+budget (local memory), kernel repertoire (arithmetic ops), and dtype policy
+(number formats).  `plan()` emits the concrete artifacts: a mesh, tile plans
+for the kernel library, and a sharding-rule table — i.e. the "generated
+design" — without the user writing any distribution code by hand.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Sequence
+
+import jax
+
+from repro.core import hardware, tiling
+
+
+@dataclasses.dataclass(frozen=True)
+class DTypePolicy:
+    """The paper's 'number format' parameter."""
+
+    param_dtype: str = "bfloat16"
+    compute_dtype: str = "bfloat16"
+    accum_dtype: str = "float32"
+
+    @property
+    def param_bytes(self) -> int:
+        return hardware.DTYPE_BYTES[self.param_dtype]
+
+    @property
+    def compute_bytes(self) -> int:
+        return hardware.DTYPE_BYTES[self.compute_dtype]
+
+
+# Kernel repertoire — the paper's per-core arithmetic-operation library.
+KERNEL_LIBRARY = ("matmul", "spmv", "flash_attention")
+
+
+@dataclasses.dataclass(frozen=True)
+class ManyCoreConfig:
+    """System-level description of the machine + how to use it."""
+
+    # interconnect topology: mesh axis sizes and names (paper: bus/ring/NoC).
+    mesh_shape: tuple = (16, 16)
+    mesh_axes: tuple = ("data", "model")
+    # local memory per core (paper's L); None = chip default.
+    vmem_bytes: int | None = None
+    # arithmetic repertoire each core is configured with.
+    kernels: tuple = KERNEL_LIBRARY
+    # number formats.
+    dtypes: DTypePolicy = DTypePolicy()
+    chip: hardware.Chip = hardware.TPU_V5E
+
+    @property
+    def num_chips(self) -> int:
+        return math.prod(self.mesh_shape)
+
+    @property
+    def usable_vmem(self) -> int:
+        return self.vmem_bytes if self.vmem_bytes is not None else self.chip.usable_vmem()
+
+    def make_mesh(self) -> jax.sharding.Mesh:
+        return jax.make_mesh(self.mesh_shape, self.mesh_axes)
+
+    def axis(self, name: str) -> int:
+        return self.mesh_shape[self.mesh_axes.index(name)]
+
+    def data_axes(self) -> tuple:
+        return tuple(a for a in self.mesh_axes if a in ("pod", "data"))
+
+    def model_axis(self) -> str:
+        return "model"
+
+    def matmul_tile(self, m: int | None = None, n: int | None = None,
+                    k: int | None = None) -> tiling.Tile:
+        """Eq.2-derived VMEM tile plan for this config's matmul kernel."""
+        return tiling.solve_tpu(
+            vmem_bytes=self.usable_vmem,
+            dtype_bytes=self.dtypes.compute_bytes,
+            m=m, n=n, k=k,
+        )
+
+    def peak_flops(self) -> float:
+        return self.num_chips * self.chip.peak_flops
+
+    def describe(self) -> str:
+        lines = [
+            f"many-core: {self.num_chips} chips, mesh {dict(zip(self.mesh_axes, self.mesh_shape))}",
+            f"local memory (VMEM budget): {self.usable_vmem / 2**20:.0f} MiB/core",
+            f"kernel repertoire: {', '.join(self.kernels)}",
+            f"number formats: params={self.dtypes.param_dtype} compute={self.dtypes.compute_dtype} accum={self.dtypes.accum_dtype}",
+            f"peak: {self.peak_flops() / 1e12:.0f} TFLOP/s aggregate",
+        ]
+        return "\n".join(lines)
+
+
+SINGLE_POD = ManyCoreConfig(mesh_shape=(16, 16), mesh_axes=("data", "model"))
+MULTI_POD = ManyCoreConfig(mesh_shape=(2, 16, 16), mesh_axes=("pod", "data", "model"))
+
+
+def host_test_config(data: int = 1, model: int = 1) -> ManyCoreConfig:
+    """A 1-chip (or tiny) config for CPU tests — the paper's '1 core' point."""
+    return ManyCoreConfig(mesh_shape=(data, model), mesh_axes=("data", "model"))

@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for the perf-critical compute layers.
+
+- matmul/    — paper §V-A: eq.2-tiled blocked dense matmul
+- spmv/      — paper §V-B: nnz-balanced ELL sparse matvec
+- attention/ — flash attention (prefill hot spot; beyond-paper)
+
+Each has kernel.py (pl.pallas_call + BlockSpec), ops.py (jitted wrapper with
+backend dispatch), ref.py (pure-jnp oracle).  Tests sweep shapes/dtypes in
+interpret mode against the oracles.
+"""

@@ -1,0 +1,1 @@
+from repro.kernels.attention.ops import mha_attention  # noqa: F401

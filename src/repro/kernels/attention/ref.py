@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for flash attention (materialized-logits softmax)."""
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, scale, causal=True, window=None):
+    """q: (BH, Sq, dh); k, v: (BH, Sk, dh)."""
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    sq, sk = s.shape[1], s.shape[2]
+    q_pos = jnp.arange(sq)[:, None]
+    k_pos = jnp.arange(sk)[None, :]
+    ok = jnp.ones((sq, sk), bool)
+    if causal:
+        ok &= q_pos >= k_pos
+    if window is not None:
+        ok &= (q_pos - k_pos) < window
+    s = jnp.where(ok[None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p,
+                      v.astype(jnp.float32)).astype(q.dtype)

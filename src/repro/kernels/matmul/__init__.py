@@ -1,0 +1,1 @@
+from repro.kernels.matmul.ops import matmul, pick_tile  # noqa: F401

@@ -1,0 +1,68 @@
+"""Blocked dense matmul Pallas kernel — the paper's §V-A workload on the MXU.
+
+The BlockSpec tiling is the paper's eq.2 law adapted to VMEM
+(`core.tiling.solve_tpu`): the C tile (y, x) is the stationary accumulator in
+VMEM (f32), A (y, z) and B (z, x) tiles stream HBM->VMEM with Pallas's
+automatic double-buffering — the hardware analogue of the paper's doubled B
+buffer.  The A tile's reuse across the N grid axis plays the role of the
+paper's broadcast of A to all cores.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core import tiling
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref, acc_ref, *, k_steps: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(pl.program_id(2) == k_steps - 1)
+    def _store():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def blocked_matmul(
+    a: jax.Array,
+    b: jax.Array,
+    tile: tiling.Tile,
+    out_dtype=None,
+    interpret: bool = False,
+) -> jax.Array:
+    """(M, K) @ (K, N) with explicit (y, x, z) VMEM tiling.
+
+    Shapes must be multiples of the tile (ops.py pads).
+    """
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, (a.shape, b.shape)
+    y, x, z = tile.y, tile.x, tile.z
+    assert m % y == 0 and n % x == 0 and k % z == 0, (a.shape, b.shape, tile)
+    out_dtype = out_dtype or a.dtype
+    k_steps = k // z
+
+    grid = (m // y, n // x, k_steps)
+    return pl.pallas_call(
+        functools.partial(_matmul_kernel, k_steps=k_steps),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((y, z), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((z, x), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((y, x), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        scratch_shapes=[pltpu.VMEM((y, x), jnp.float32)],
+        interpret=interpret,
+    )(a, b)

@@ -1,0 +1,54 @@
+"""Jitted public wrapper: tile selection (eq.2/DSE), padding, and backend
+dispatch (Pallas on TPU, oracle elsewhere, interpret for tests)."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import dse, tiling
+from repro.kernels.matmul import kernel, ref
+
+
+def _pad_to(v: int, mult: int) -> int:
+    return (v + mult - 1) // mult * mult
+
+
+def pick_tile(m: int, n: int, k: int, dtype_bytes: int = 2,
+              vmem_bytes: int | None = None, align: int = 128) -> tiling.Tile:
+    """DSE-autotuned tile (never worse than the paper's eq.2 seed), clamped
+    to the (padded) problem."""
+    t = dse.autotune_matmul_tile(m, n, k, vmem_bytes=vmem_bytes,
+                                 dtype_bytes=dtype_bytes, align=align)
+    return tiling.Tile(
+        y=min(t.y, _pad_to(m, align)),
+        x=min(t.x, _pad_to(n, align)),
+        z=min(t.z, _pad_to(k, align)),
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("tile", "interpret", "use_kernel"))
+def matmul(a: jax.Array, b: jax.Array, tile: tiling.Tile | None = None,
+           interpret: bool = False, use_kernel: bool | None = None):
+    """C = A @ B with eq.2-tiled Pallas execution on TPU.
+
+    ``use_kernel=None`` auto-selects: Pallas on TPU backend, oracle on CPU
+    (the multi-pod dry-run lowers the oracle path; tests pass
+    ``interpret=True`` to execute the kernel body on CPU).
+    """
+    if use_kernel is None:
+        use_kernel = interpret or jax.default_backend() == "tpu"
+    if not use_kernel:
+        return ref.matmul_ref(a, b)
+
+    m, k = a.shape
+    _, n = b.shape
+    if tile is None:
+        tile = pick_tile(m, n, k, dtype_bytes=a.dtype.itemsize)
+    mp, np_, kp = _pad_to(m, tile.y), _pad_to(n, tile.x), _pad_to(k, tile.z)
+    ap = jnp.pad(a, ((0, mp - m), (0, kp - k)))
+    bp = jnp.pad(b, ((0, kp - k), (0, np_ - n)))
+    out = kernel.blocked_matmul(ap, bp, tile, interpret=interpret)
+    return out[:m, :n]

@@ -1,0 +1,1 @@
+from repro.kernels.spmv.ops import EllMatrix, pack_csr, spmv  # noqa: F401

@@ -1,0 +1,20 @@
+"""Pure-jnp oracle for sparse matrix-vector multiplication (CSR)."""
+
+import jax
+import jax.numpy as jnp
+
+
+def spmv_csr_ref(indptr, indices, data, x, num_rows: int) -> jax.Array:
+    """y = A @ x from CSR arrays (host-precomputed row ids)."""
+    row_ids = jnp.repeat(
+        jnp.arange(num_rows, dtype=jnp.int32),
+        jnp.diff(indptr),
+        total_repeat_length=indices.shape[0],
+    )
+    prods = data * x[indices]
+    return jax.ops.segment_sum(prods, row_ids, num_segments=num_rows)
+
+
+def spmv_ell_ref(ell_cols, ell_vals, x) -> jax.Array:
+    """Oracle on the padded ELL representation itself (pads have val 0)."""
+    return jnp.sum(ell_vals * x[ell_cols], axis=1)

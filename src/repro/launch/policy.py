@@ -1,0 +1,30 @@
+"""Number-format policy per architecture (the paper's 'number format' knob).
+
+Models above ~100B parameters store bf16 weights and int8 blockwise optimizer
+moments so state fits 16 GB/chip HBM on the 256-chip pod (DESIGN.md §Risks);
+smaller models keep f32 master weights and f32 moments.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+BIG_MODEL_PARAMS = 100e9
+FSDP_PARAMS = 10e9
+
+
+def param_dtype(cfg: ModelConfig):
+    return jnp.bfloat16 if cfg.param_count() > BIG_MODEL_PARAMS else jnp.float32
+
+
+def moment_dtype(cfg: ModelConfig) -> str:
+    return "int8" if cfg.param_count() > BIG_MODEL_PARAMS else "float32"
+
+
+def use_fsdp(cfg: ModelConfig) -> bool:
+    """>=10B params: store parameters sharded over the DP axes too (FSDP);
+    XLA gathers weights at use — per-layer weight all-gathers are tiny next
+    to activation traffic, and TP-only storage doesn't fit 16 GB/chip."""
+    return cfg.param_count() >= FSDP_PARAMS

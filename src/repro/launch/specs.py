@@ -1,0 +1,228 @@
+"""ShapeDtypeStruct stand-ins + shardings for every (arch x shape) cell.
+
+`input_specs` produces the exact abstract inputs a step function consumes —
+weak-type-correct and shardable, with zero device allocation.  The dry-run
+lowers against these.  Modality frontends are STUBS per the brief: [audio]
+gets precomputed frame embeddings, [vlm] precomputed patch embeddings.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import internvl2_2b
+from repro.configs.shapes import ShapeSpec
+from repro.models import transformer
+from repro.models.config import ModelConfig
+from repro.optim import adamw
+from repro.parallel import sharding as shd
+
+Pytree = Any
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def rules_for(mesh: jax.sharding.Mesh, shape: ShapeSpec | None = None) -> shd.Rules:
+    multi = "pod" in mesh.axis_names
+    rules = shd.multi_pod_rules() if multi else shd.single_pod_rules()
+    if shape is not None and shape.kind == "decode":
+        dp = 1
+        for a in rules.table["dp"]:
+            dp *= mesh.shape[a]
+        rules = shd.decode_rules(
+            rules, batch_replicated=bool(shape.global_batch % dp))
+    return rules.with_sizes(mesh)
+
+
+# ---------------------------------------------------------------------------
+# Batch specs (train / prefill)
+# ---------------------------------------------------------------------------
+
+def batch_specs(cfg: ModelConfig, shape: ShapeSpec) -> dict:
+    """Abstract train/prefill batch: inputs dict + labels."""
+    b, s = shape.global_batch, shape.seq_len
+    batch: dict = {}
+    if cfg.frontend == "frame":
+        batch["frames"] = _sds((b, s, cfg.frontend_dim), jnp.bfloat16)
+        batch["labels"] = _sds((b, s), jnp.int32)
+        return batch
+    if cfg.frontend == "patch":
+        npatch = min(internvl2_2b.NUM_PATCHES, s // 4)
+        batch["patches"] = _sds((b, npatch, cfg.frontend_dim), jnp.bfloat16)
+        batch["tokens"] = _sds((b, s - npatch), jnp.int32)
+        batch["labels"] = _sds((b, s), jnp.int32)
+        return batch
+    batch["tokens"] = _sds((b, s), jnp.int32)
+    batch["labels"] = _sds((b, s), jnp.int32)
+    return batch
+
+
+def batch_shardings(cfg: ModelConfig, shape: ShapeSpec, mesh, rules) -> dict:
+    def shard_one(sds):
+        axes = ("batch",) + (None,) * (len(sds.shape) - 1)
+        return NamedSharding(mesh, fit_spec(rules.spec(*axes), sds.shape,
+                                            rules))
+
+    return {k: shard_one(v) for k, v in batch_specs(cfg, shape).items()}
+
+
+# ---------------------------------------------------------------------------
+# State specs (params + optimizer)
+# ---------------------------------------------------------------------------
+
+def abstract_params(cfg: ModelConfig, dtype=None) -> Pytree:
+    if dtype is None:
+        from repro.launch import policy
+        dtype = policy.param_dtype(cfg)
+    return jax.eval_shape(
+        lambda: transformer.init(cfg, jax.random.PRNGKey(0), dtype=dtype))
+
+
+def abstract_opt_state(params: Pytree, opt_cfg: adamw.AdamWConfig) -> Pytree:
+    return jax.eval_shape(lambda: adamw.init_state(
+        jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), params), opt_cfg))
+
+
+def _is_axes(x) -> bool:
+    return isinstance(x, tuple)
+
+
+def logical_to_pspec(tree: Pytree, rules: shd.Rules) -> Pytree:
+    return jax.tree.map(lambda axes: rules.spec(*axes), tree, is_leaf=_is_axes)
+
+
+def fit_spec(spec: P, shape: tuple, rules: shd.Rules) -> P:
+    """Drop spec entries whose mesh-axis product does not divide the dim —
+    jit-boundary shardings (unlike internal constraints) must divide exactly."""
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+    out = []
+    for dim, e in zip(shape, entries):
+        size = rules.axis_size(e)
+        out.append(e if (size > 1 and dim % size == 0) else None)
+    return P(*out)
+
+
+def fit_pspecs(pspec_tree: Pytree, abs_tree: Pytree,
+               rules: shd.Rules) -> Pytree:
+    return jax.tree.map(
+        lambda ps, sds: fit_spec(ps, sds.shape, rules),
+        pspec_tree, abs_tree, is_leaf=lambda x: isinstance(x, P))
+
+
+def param_pspecs(cfg: ModelConfig, rules: shd.Rules, mesh=None) -> Pytree:
+    base = fit_pspecs(logical_to_pspec(transformer.param_specs(cfg), rules),
+                      abstract_params(cfg), rules)
+    from repro.launch import policy
+    if mesh is None or not policy.use_fsdp(cfg):
+        return base
+    # FSDP storage: add the DP axes on the first free divisible dim of each
+    # leaf (beyond TP).  XLA all-gathers weights at use; required for >=10B
+    # models to fit 16 GB/chip (see EXPERIMENTS §Dry-run).
+    dp_axes = tuple(rules.table.get("dp") or ())
+    return jax.tree.map(
+        lambda ps, sds: zero_shard(ps, sds.shape, mesh, dp_axes),
+        base, abstract_params(cfg),
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def zero_shard(pspec: P, shape: tuple, mesh, dp_axes: tuple) -> P:
+    """ZeRO-1/FSDP: add the DP axes to the first unsharded, divisible dim.
+    No-op if the spec already uses any DP axis (idempotent)."""
+    dp = 1
+    for a in dp_axes:
+        dp *= mesh.shape[a]
+    if dp <= 1:
+        return pspec
+    used = set()
+    for e in pspec:
+        if e is None:
+            continue
+        for a in (e if isinstance(e, tuple) else (e,)):
+            used.add(a)
+    if used & set(dp_axes):
+        return pspec
+    entries = list(pspec) + [None] * (len(shape) - len(pspec))
+    for i, (e, dim) in enumerate(zip(entries, shape)):
+        if e is None and dim % dp == 0 and dim >= dp:
+            entries[i] = tuple(dp_axes) if len(dp_axes) > 1 else dp_axes[0]
+            return P(*entries)
+    return pspec
+
+
+def opt_pspecs(cfg: ModelConfig, params_abs: Pytree, opt_abs: Pytree,
+               rules: shd.Rules, mesh, zero: bool = True) -> Pytree:
+    """Moment shardings: parameter sharding + extra ZeRO DP-axis shard.
+
+    int8-quantized moments are {"q","scale"} dicts; both inherit the
+    parameter's (zero-sharded) spec, truncated to their rank.
+    """
+    p_pspecs = param_pspecs(cfg, rules, mesh)
+    dp_axes = tuple(rules.table.get("dp") or ())
+
+    def moment_spec(ps: P, p_sds, m_sds):
+        spec = zero_shard(ps, p_sds.shape, mesh, dp_axes) if zero else ps
+        if isinstance(m_sds, dict):  # quantized {"q","scale"}
+            entries = list(spec) + [None] * (len(p_sds.shape) - len(spec))
+            return {
+                "q": fit_spec(P(*entries), m_sds["q"].shape, rules),
+                "scale": fit_spec(P(*entries[: len(m_sds["scale"].shape)]),
+                                  m_sds["scale"].shape, rules),
+            }
+        return fit_spec(spec, m_sds.shape, rules)
+
+    m_specs = jax.tree.map(
+        moment_spec, p_pspecs, params_abs,
+        jax.tree.map(lambda x: x, opt_abs["m"],
+                     is_leaf=adamw._is_moment_leaf),
+        is_leaf=lambda x: isinstance(x, P),
+    )
+    return {"step": P(), "m": m_specs, "v": m_specs}
+
+
+def state_shardings(cfg: ModelConfig, opt_cfg: adamw.AdamWConfig, mesh,
+                    rules: shd.Rules, zero: bool = True):
+    """(abstract_state, shardings) for {"params", "opt"}."""
+    params_abs = abstract_params(cfg)
+    opt_abs = abstract_opt_state(params_abs, opt_cfg)
+    p_pspecs = param_pspecs(cfg, rules, mesh)
+    o_pspecs = opt_pspecs(cfg, params_abs, opt_abs, rules, mesh, zero)
+    to_sh = lambda tree: jax.tree.map(
+        lambda ps: NamedSharding(mesh, ps), tree,
+        is_leaf=lambda x: isinstance(x, P))
+    state_abs = {"params": params_abs, "opt": opt_abs}
+    state_sh = {"params": to_sh(p_pspecs), "opt": to_sh(o_pspecs)}
+    return state_abs, state_sh
+
+
+# ---------------------------------------------------------------------------
+# Decode specs
+# ---------------------------------------------------------------------------
+
+def decode_specs(cfg: ModelConfig, shape: ShapeSpec, mesh, rules,
+                 state_rules=None):
+    """(abstract {params, cache, tokens}, shardings) for serve_step."""
+    params_abs = abstract_params(cfg)
+    b = shape.global_batch
+    cache_abs = jax.eval_shape(
+        lambda: transformer.cache_init(cfg, b, shape.seq_len,
+                                       dtype=jnp.bfloat16))
+    p_pspecs = param_pspecs(cfg, state_rules or rules, mesh)
+    c_pspecs = fit_pspecs(
+        logical_to_pspec(transformer.cache_specs(cfg), rules), cache_abs,
+        rules)
+    tok_abs = _sds((b, 1), jnp.int32)
+    tok_spec = fit_spec(P(rules.table.get("batch"), None), (b, 1), rules)
+    to_sh = lambda tree: jax.tree.map(
+        lambda ps: NamedSharding(mesh, ps), tree,
+        is_leaf=lambda x: isinstance(x, P))
+    abs_ = {"params": params_abs, "cache": cache_abs, "tokens": tok_abs}
+    sh = {"params": to_sh(p_pspecs), "cache": to_sh(c_pspecs),
+          "tokens": NamedSharding(mesh, tok_spec)}
+    return abs_, sh

@@ -1,0 +1,78 @@
+"""Step functions: train_step (fwd+bwd+AdamW) and serve_step (decode)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer
+from repro.models.config import ModelConfig
+from repro.optim import adamw
+from repro.parallel.loss import cross_entropy, fused_cross_entropy
+
+AUX_WEIGHT = 1e-2
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: adamw.AdamWConfig,
+                    grad_dtype=None):
+    """``grad_dtype=jnp.bfloat16`` compresses the gradient all-reduce
+    (beyond-paper distributed trick; moments still accumulate in f32)."""
+
+    def train_step(state, batch):
+        inputs = {k: v for k, v in batch.items() if k != "labels"}
+
+        def loss_fn(params):
+            hidden, _, aux = transformer.forward(cfg, params, inputs,
+                                                 return_hidden=True)
+            head = params["embed" if cfg.tie_embeddings else "head"]["table"]
+            loss, metrics = fused_cross_entropy(
+                hidden, head, batch["labels"], chunk=cfg.loss_chunk,
+                unroll=cfg.probe_unroll)
+            return loss + AUX_WEIGHT * aux, (metrics, aux)
+
+        (total, (metrics, aux)), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(state["params"])
+        if grad_dtype is not None:
+            grads = jax.tree.map(lambda g: g.astype(grad_dtype), grads)
+        new_params, new_opt, opt_metrics = adamw.update(
+            state["params"], grads, state["opt"], opt_cfg)
+        out_metrics = {**metrics, **opt_metrics,
+                       "total_loss": total, "aux_loss": aux}
+        return {"params": new_params, "opt": new_opt}, out_metrics
+
+    return train_step
+
+
+def make_eval_step(cfg: ModelConfig):
+    def eval_step(params, batch):
+        inputs = {k: v for k, v in batch.items() if k != "labels"}
+        logits, _, _ = transformer.forward(cfg, params, inputs)
+        loss, metrics = cross_entropy(logits, batch["labels"])
+        return metrics
+
+    return eval_step
+
+
+def make_prefill_step(cfg: ModelConfig):
+    """Serving prefill: forward over the prompt, no cache mutation needed for
+    the dry-run shape (prefill_32k measures the forward itself)."""
+
+    def prefill_step(params, batch):
+        inputs = {k: v for k, v in batch.items() if k != "labels"}
+        logits, _, _ = transformer.forward(cfg, params, inputs,
+                                           last_only=True)
+        return jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig):
+    """One decode step: new token in, next token + updated cache out."""
+
+    def serve_step(params, cache, tokens):
+        logits, new_cache, _ = transformer.forward(
+            cfg, params, {"tokens": tokens}, cache=cache)
+        nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        return nxt[:, None], new_cache
+
+    return serve_step

@@ -1,0 +1,2 @@
+from repro.models import config, layers, moe, rwkv, ssm, transformer  # noqa: F401
+from repro.models.config import ModelConfig  # noqa: F401

@@ -1,0 +1,306 @@
+"""Shared neural-net layers (functional JAX): norms, RoPE, GQA attention,
+SwiGLU/GELU MLPs, embeddings.
+
+Everything is init/apply pairs over plain dict pytrees; layer stacks hold
+*stacked* params (leading layer axis) so the model can `lax.scan` over depth.
+Sharding is expressed through logical-axis constraints (`parallel.sharding`).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.parallel.sharding import constrain
+
+Params = dict
+DEFAULT_INIT_SCALE = 0.02
+
+
+def _dense_init(key, shape, scale=DEFAULT_INIT_SCALE, dtype=jnp.float32):
+    return (jax.random.normal(key, shape, dtype=jnp.float32) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm_init(d: int, dtype=jnp.float32) -> Params:
+    return {"scale": jnp.ones((d,), dtype=dtype)}
+
+
+def rmsnorm(params: Params, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embedding
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., seq, heads, head_dim); positions: (..., seq) int32."""
+    half = x.shape[-1] // 2
+    freqs = rope_frequencies(x.shape[-1], theta)                     # (half,)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs    # (..., seq, half)
+    cos = jnp.cos(angles)[..., :, None, :]                           # (..., seq, 1, half)
+    sin = jnp.sin(angles)[..., :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    x1f, x2f = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate([x1f * cos - x2f * sin, x2f * cos + x1f * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention (options: qk-norm, qkv-bias, sliding window, non-causal)
+# ---------------------------------------------------------------------------
+
+def attention_init(key, cfg, dtype=jnp.float32) -> Params:
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": _dense_init(ks[0], (cfg.d_model, cfg.q_dim), dtype=dtype),
+        "wk": _dense_init(ks[1], (cfg.d_model, cfg.kv_dim), dtype=dtype),
+        "wv": _dense_init(ks[2], (cfg.d_model, cfg.kv_dim), dtype=dtype),
+        "wo": _dense_init(ks[3], (cfg.q_dim, cfg.d_model), dtype=dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((cfg.q_dim,), dtype)
+        p["bk"] = jnp.zeros((cfg.kv_dim,), dtype)
+        p["bv"] = jnp.zeros((cfg.kv_dim,), dtype)
+    if cfg.qk_norm:
+        p["q_norm"] = rmsnorm_init(cfg.head_dim, dtype)
+        p["k_norm"] = rmsnorm_init(cfg.head_dim, dtype)
+    return p
+
+
+def attention_param_specs(cfg) -> Params:
+    """Logical axes per attention param leaf (mirrors attention_init)."""
+    p = {
+        "wq": ("embed", "heads"),
+        "wk": ("embed", "kv_heads"),
+        "wv": ("embed", "kv_heads"),
+        "wo": ("heads", "embed"),
+    }
+    if cfg.qkv_bias:
+        p.update({"bq": ("heads",), "bk": ("kv_heads",), "bv": ("kv_heads",)})
+    if cfg.qk_norm:
+        p["q_norm"] = {"scale": (None,)}
+        p["k_norm"] = {"scale": (None,)}
+    return p
+
+
+def _mask_block(q_pos, k_pos, causal: bool, window: int | None,
+                k_valid=None):
+    """(q_len, k_len) boolean mask from position vectors."""
+    diff = q_pos[:, None] - k_pos[None, :]
+    ok = jnp.ones(diff.shape, dtype=bool)
+    if causal:
+        ok &= diff >= 0
+    if window is not None:
+        ok &= diff < window
+    if k_valid is not None:
+        ok &= k_valid[None, :]
+    return ok
+
+
+def attention_core(q, k, v, q_pos, k_pos, *, causal, window, scale,
+                   k_valid=None, chunk_q: int | None = None,
+                   unroll: bool = False, remat_chunks: bool = False):
+    """Memory-safe multi-head attention with GQA grouping.
+
+    q: (B,Sq,Hq,dh), k/v: (B,Sk,Hkv,dh), q_pos: (Sq,), k_pos: (Sk,).
+    When ``chunk_q`` divides Sq, query blocks are processed sequentially with
+    `lax.scan` so the (Sq, Sk) logits never materialize — the jnp analogue of
+    the Pallas flash-attention kernel's VMEM blocking.
+    """
+    b, sq, hq, dh = q.shape
+    hkv = k.shape[2]
+    g = hq // hkv
+    qr = q.reshape(b, sq, hkv, g, dh)
+
+    def blk(q_blk, qp_blk):
+        # bf16 operands, f32 accumulation — no f32 copies of Q/K/V in HBM.
+        logits = jnp.einsum("bqhgd,bkhd->bhgqk", q_blk, k,
+                            preferred_element_type=jnp.float32) * scale
+        mask = _mask_block(qp_blk, k_pos, causal, window, k_valid)
+        logits = jnp.where(mask[None, None, None], logits, -1e30)
+        probs = jax.nn.softmax(logits, axis=-1)
+        return jnp.einsum("bhgqk,bkhd->bqhgd", probs.astype(v.dtype), v,
+                          preferred_element_type=jnp.float32)
+
+    if chunk_q and sq > chunk_q and sq % chunk_q == 0:
+        nchunks = sq // chunk_q
+        qc = jnp.moveaxis(qr.reshape(b, nchunks, chunk_q, hkv, g, dh), 1, 0)
+        pc = q_pos.reshape(nchunks, chunk_q)
+        fn = blk
+        if remat_chunks and not unroll:
+            # backward recomputes each chunk's logits/probs instead of
+            # saving nchunks of them (flash-attention-style memory)
+            fn = jax.checkpoint(blk, prevent_cse=False)
+        if unroll:
+            # python loop: identical math, fully visible to cost analysis
+            out = jnp.stack([blk(qc[i], pc[i]) for i in range(nchunks)])
+        else:
+            _, out = jax.lax.scan(lambda c, xs: (c, fn(*xs)), None, (qc, pc))
+        out = jnp.moveaxis(out, 0, 1).reshape(b, sq, hkv, g, dh)
+    else:
+        out = blk(qr, q_pos)
+    return out.reshape(b, sq, hq, dh)
+
+
+def attention_apply(
+    params: Params,
+    x: jax.Array,                       # (B, S, D)
+    cfg,
+    positions: jax.Array,               # (S,) int32 absolute positions
+    cache: Params | None = None,        # {"k","v": (B, S_cache, Hkv, dh)}
+    index: jax.Array | None = None,     # decode write position (scalar)
+    chunk_q: int | None = None,
+) -> tuple[jax.Array, Params | None]:
+    from repro.parallel.sharding import gather_weight
+    b, s, _ = x.shape
+    q = x @ gather_weight(params["wq"]).astype(x.dtype)
+    k = x @ gather_weight(params["wk"]).astype(x.dtype)
+    v = x @ gather_weight(params["wv"]).astype(x.dtype)
+    if cfg.qkv_bias:
+        q = q + params["bq"].astype(x.dtype)
+        k = k + params["bk"].astype(x.dtype)
+        v = v + params["bv"].astype(x.dtype)
+    q = q.reshape(b, s, cfg.num_heads, cfg.head_dim)
+    k = k.reshape(b, s, cfg.num_kv_heads, cfg.head_dim)
+    v = v.reshape(b, s, cfg.num_kv_heads, cfg.head_dim)
+    if cfg.qk_norm:
+        q = rmsnorm(params["q_norm"], q, cfg.norm_eps)
+        k = rmsnorm(params["k_norm"], k, cfg.norm_eps)
+    q = apply_rope(q, positions[None], cfg.rope_theta)
+    k = apply_rope(k, positions[None], cfg.rope_theta)
+    q = constrain(q, "batch", "seq", "heads", None)
+    scale = 1.0 / math.sqrt(cfg.head_dim)
+    if chunk_q is None:
+        if cfg.attn_chunk == 0:
+            chunk_q = None
+        elif cfg.attn_chunk > 0:
+            chunk_q = cfg.attn_chunk
+        elif s > 2048:
+            chunk_q = 512
+
+    if cache is None:
+        k = constrain(k, "batch", "seq", "kv_heads", None)
+        v = constrain(v, "batch", "seq", "kv_heads", None)
+        out = attention_core(q, k, v, positions, positions, causal=cfg.causal,
+                             window=cfg.sliding_window, scale=scale,
+                             chunk_q=chunk_q, unroll=cfg.probe_unroll,
+                             remat_chunks=(cfg.remat == "full"))
+        new_cache = None
+    else:
+        # Decode: write new K/V at `index` (ring buffer for SWA), attend over
+        # the whole (possibly sequence-sharded) cache.
+        ck, cv = cache["k"], cache["v"]
+        cache_len = ck.shape[1]
+        write = index % cache_len if cfg.sliding_window else index
+        ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype), (0, write, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype), (0, write, 0, 0))
+        ck = constrain(ck, "batch", "kv_seq", "kv_heads", None)
+        cv = constrain(cv, "batch", "kv_seq", "kv_heads", None)
+        k_slots = jnp.arange(cache_len, dtype=jnp.int32)
+        if cfg.sliding_window:
+            # Ring buffer: slot holds absolute position idx - ((w - slot) % L)
+            k_pos = index - ((write - k_slots) % cache_len)
+        else:
+            k_pos = k_slots
+        k_valid = (k_pos <= index) & (k_pos >= 0)
+        out = attention_core(q, ck, cv, positions, k_pos, causal=cfg.causal,
+                             window=cfg.sliding_window, scale=scale,
+                             k_valid=k_valid)
+        new_cache = {"k": ck, "v": cv}
+
+    out = out.reshape(b, s, cfg.q_dim).astype(x.dtype)
+    y = out @ gather_weight(params["wo"]).astype(x.dtype)
+    return constrain(y, "batch", "res_seq", "embed"), new_cache
+
+
+def attention_cache_init(cfg, batch: int, cache_len: int, dtype=jnp.bfloat16) -> Params:
+    if cfg.sliding_window:
+        cache_len = min(cache_len, cfg.sliding_window)
+    return {
+        "k": jnp.zeros((batch, cache_len, cfg.num_kv_heads, cfg.head_dim), dtype),
+        "v": jnp.zeros((batch, cache_len, cfg.num_kv_heads, cfg.head_dim), dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def swiglu_init(key, d_model: int, d_ff: int, dtype=jnp.float32) -> Params:
+    ks = jax.random.split(key, 3)
+    return {
+        "w_gate": _dense_init(ks[0], (d_model, d_ff), dtype=dtype),
+        "w_up": _dense_init(ks[1], (d_model, d_ff), dtype=dtype),
+        "w_down": _dense_init(ks[2], (d_ff, d_model), dtype=dtype),
+    }
+
+
+def swiglu_param_specs() -> Params:
+    return {
+        "w_gate": ("embed", "ff"),
+        "w_up": ("embed", "ff"),
+        "w_down": ("ff", "embed"),
+    }
+
+
+def swiglu_apply(params: Params, x: jax.Array) -> jax.Array:
+    h = jax.nn.silu(x @ params["w_gate"].astype(x.dtype)) * (
+        x @ params["w_up"].astype(x.dtype)
+    )
+    h = constrain(h, "batch", "seq", "ff")
+    return constrain(h @ params["w_down"].astype(x.dtype), "batch", "res_seq", "embed")
+
+
+def gelu_mlp_init(key, d_model: int, d_ff: int, dtype=jnp.float32) -> Params:
+    ks = jax.random.split(key, 2)
+    return {
+        "w_up": _dense_init(ks[0], (d_model, d_ff), dtype=dtype),
+        "w_down": _dense_init(ks[1], (d_ff, d_model), dtype=dtype),
+    }
+
+
+def gelu_mlp_param_specs() -> Params:
+    return {"w_up": ("embed", "ff"), "w_down": ("ff", "embed")}
+
+
+def gelu_mlp_apply(params: Params, x: jax.Array) -> jax.Array:
+    h = jax.nn.gelu(x @ params["w_up"].astype(x.dtype))
+    h = constrain(h, "batch", "seq", "ff")
+    return constrain(h @ params["w_down"].astype(x.dtype), "batch", "res_seq", "embed")
+
+
+# ---------------------------------------------------------------------------
+# Embeddings / heads
+# ---------------------------------------------------------------------------
+
+def embedding_init(key, vocab: int, d_model: int, dtype=jnp.float32) -> Params:
+    return {"table": _dense_init(key, (vocab, d_model), dtype=dtype)}
+
+
+def embedding_lookup(params: Params, tokens: jax.Array) -> jax.Array:
+    out = jnp.take(params["table"], tokens, axis=0)
+    return constrain(out, "batch", "res_seq", "embed")
+
+
+def unembed(params: Params, x: jax.Array) -> jax.Array:
+    """Logits (vocab-sharded; never gathered — the loss is sharded too)."""
+    logits = x @ params["table"].T.astype(x.dtype)
+    return constrain(logits, "batch", "seq", "vocab")

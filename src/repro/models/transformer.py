@@ -1,0 +1,334 @@
+"""Model assembly: embeddings -> scanned block stack -> head.
+
+One entry point serves every assigned architecture family:
+
+- dense / moe / encoder : uniform layers, `lax.scan` over stacked params
+- ssm (RWKV6)           : uniform RWKV layers, same scan
+- hybrid (Jamba)        : period-`attn_period` heterogeneous groups; scan over
+                          groups, sub-layers unrolled inside the group body
+
+`forward` handles train (cache=None) and decode (cache given, S small).
+Decode state is {"blocks": stacked per-layer caches, "index": scalar}.
+Layer stacks always scan (compact HLO — a 94-layer model lowers to one loop).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers, moe, rwkv, ssm
+from repro.models.config import ModelConfig
+from repro.parallel.sharding import constrain
+
+Params = dict
+
+
+# ---------------------------------------------------------------------------
+# Per-layer init / apply / cache-init, keyed by the cfg-static layer kind
+# ---------------------------------------------------------------------------
+
+def _layer_init(key, cfg: ModelConfig, l: int, dtype) -> Params:
+    k1, k2 = jax.random.split(key)
+    p: Params = {"ln1": layers.rmsnorm_init(cfg.d_model),
+                 "ln2": layers.rmsnorm_init(cfg.d_model)}
+    if cfg.family == "ssm":
+        p["mixer"] = rwkv.rwkv_time_init(k1, cfg, dtype)
+        p["mlp"] = rwkv.rwkv_channel_init(k2, cfg, dtype)
+        return p
+    if cfg.is_attn_layer(l):
+        p["mixer"] = layers.attention_init(k1, cfg, dtype)
+    else:
+        p["mixer"] = ssm.mamba_init(k1, cfg, dtype)
+    if cfg.is_moe_layer(l):
+        p["mlp"] = moe.moe_init(k2, cfg, dtype)
+    elif cfg.family == "encoder":
+        p["mlp"] = layers.gelu_mlp_init(k2, cfg.d_model, cfg.d_ff, dtype)
+    else:
+        p["mlp"] = layers.swiglu_init(k2, cfg.d_model, cfg.d_ff, dtype)
+    return p
+
+
+def _layer_apply(p: Params, x, cfg: ModelConfig, l: int, positions,
+                 cache: Params | None, index):
+    """Pre-norm block l.  Returns (x, new_cache, aux)."""
+    aux = jnp.zeros((), jnp.float32)
+    h = layers.rmsnorm(p["ln1"], x, cfg.norm_eps)
+    if cfg.family == "ssm":
+        h, new_t = rwkv.rwkv_time_mix(p["mixer"], h, cfg, cache)
+        x = x + h
+        h2 = layers.rmsnorm(p["ln2"], x, cfg.norm_eps)
+        h2, new_c = rwkv.rwkv_channel_mix(p["mlp"], h2, cfg, cache)
+        x = x + h2
+        new_cache = {**new_t, **new_c} if cache is not None else None
+        return x, new_cache, aux
+
+    if cfg.is_attn_layer(l):
+        h, new_mix_cache = layers.attention_apply(
+            p["mixer"], h, cfg, positions, cache=cache, index=index)
+    else:
+        h, new_mix_cache = ssm.mamba_apply(p["mixer"], h, cfg, cache=cache)
+    x = x + h
+
+    h2 = layers.rmsnorm(p["ln2"], x, cfg.norm_eps)
+    if cfg.is_moe_layer(l):
+        h2, aux = moe.apply_sharded(p["mlp"], h2, cfg)
+    elif cfg.family == "encoder":
+        h2 = layers.gelu_mlp_apply(p["mlp"], h2)
+    else:
+        h2 = layers.swiglu_apply(p["mlp"], h2)
+    x = x + h2
+    return x, new_mix_cache, aux
+
+
+def _layer_cache_init(cfg: ModelConfig, l: int, batch: int, cache_len: int,
+                      dtype=jnp.bfloat16) -> Params:
+    if cfg.family == "ssm":
+        return rwkv.rwkv_cache_init(cfg, batch, dtype)
+    if cfg.is_attn_layer(l):
+        return layers.attention_cache_init(cfg, batch, cache_len, dtype)
+    return ssm.mamba_cache_init(cfg, batch, dtype)
+
+
+def _stack(dicts: list) -> Params:
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *dicts)
+
+
+# ---------------------------------------------------------------------------
+# Logical sharding specs (mirror the init/cache structures exactly)
+# ---------------------------------------------------------------------------
+
+def _mlp_specs(cfg: ModelConfig, l: int):
+    if cfg.family == "ssm":
+        return rwkv.rwkv_channel_param_specs(cfg)
+    if cfg.is_moe_layer(l):
+        return moe.moe_param_specs()
+    if cfg.family == "encoder":
+        return layers.gelu_mlp_param_specs()
+    return layers.swiglu_param_specs()
+
+
+def _layer_specs(cfg: ModelConfig, l: int):
+    p = {"ln1": {"scale": (None,)}, "ln2": {"scale": (None,)}}
+    if cfg.family == "ssm":
+        p["mixer"] = rwkv.rwkv_time_param_specs(cfg)
+    elif cfg.is_attn_layer(l):
+        p["mixer"] = layers.attention_param_specs(cfg)
+    else:
+        p["mixer"] = ssm.mamba_param_specs(cfg)
+    p["mlp"] = _mlp_specs(cfg, l)
+    return p
+
+
+def _is_axes(x) -> bool:
+    return isinstance(x, tuple)
+
+
+def _prepend_layer_axis(tree):
+    return jax.tree.map(lambda axes: (None, *axes), tree, is_leaf=_is_axes)
+
+
+def param_specs(cfg: ModelConfig):
+    """Pytree of logical-axis tuples matching `init`'s structure."""
+    specs: dict = {"embed": {"table": ("vocab", "embed")}}
+    if cfg.frontend:
+        specs["frontend"] = {"proj": (None, "embed")}
+    if cfg.family == "hybrid":
+        period = cfg.attn_period
+        group = {str(i): _layer_specs(cfg, i) for i in range(period)}
+        specs["blocks"] = _prepend_layer_axis(group)
+    else:
+        specs["blocks"] = _prepend_layer_axis(_layer_specs(cfg, 0))
+    specs["final_norm"] = {"scale": (None,)}
+    if not cfg.tie_embeddings:
+        specs["head"] = {"table": ("vocab", "embed")}
+    return specs
+
+
+def _layer_cache_specs(cfg: ModelConfig, l: int):
+    if cfg.family == "ssm":
+        return {"shift_t": ("batch", None, "embed"),
+                "wkv": ("batch", "heads", None, None),
+                "shift_c": ("batch", None, "embed")}
+    if cfg.is_attn_layer(l):
+        return {"k": ("batch", "kv_seq", "kv_heads", None),
+                "v": ("batch", "kv_seq", "kv_heads", None)}
+    return {"conv": ("batch", None, "ff"), "h": ("batch", "ff", None)}
+
+
+def cache_specs(cfg: ModelConfig):
+    """Pytree of logical-axis tuples matching `cache_init`'s structure."""
+    if cfg.family == "hybrid":
+        period = cfg.attn_period
+        group = {str(i): _layer_cache_specs(cfg, i) for i in range(period)}
+        blocks = _prepend_layer_axis(group)
+    else:
+        blocks = _prepend_layer_axis(_layer_cache_specs(cfg, 0))
+    return {"blocks": blocks, "index": ()}
+
+
+# ---------------------------------------------------------------------------
+# Init / cache init
+# ---------------------------------------------------------------------------
+
+def init(cfg: ModelConfig, key, dtype=jnp.float32) -> Params:
+    ke, kl, kh, kf = jax.random.split(key, 4)
+    params: Params = {"embed": layers.embedding_init(ke, cfg.vocab_size,
+                                                     cfg.d_model, dtype)}
+    if cfg.frontend:
+        params["frontend"] = {
+            "proj": layers._dense_init(kf, (cfg.frontend_dim, cfg.d_model),
+                                       dtype=dtype)
+        }
+    keys = jax.random.split(kl, cfg.num_layers)
+    if cfg.family == "hybrid":
+        period = cfg.attn_period
+        groups = [
+            {str(i): _layer_init(keys[g * period + i], cfg, g * period + i,
+                                 dtype)
+             for i in range(period)}
+            for g in range(cfg.num_layers // period)
+        ]
+        params["blocks"] = _stack(groups)
+    else:
+        params["blocks"] = _stack(
+            [_layer_init(k, cfg, 0, dtype) for k in keys])
+    params["final_norm"] = layers.rmsnorm_init(cfg.d_model)
+    if not cfg.tie_embeddings:
+        params["head"] = layers.embedding_init(kh, cfg.vocab_size,
+                                               cfg.d_model, dtype)
+    return params
+
+
+def cache_init(cfg: ModelConfig, batch: int, cache_len: int,
+               dtype=jnp.bfloat16, index: int = 0) -> Params:
+    if cfg.family == "hybrid":
+        period = cfg.attn_period
+        groups = [
+            {str(i): _layer_cache_init(cfg, g * period + i, batch, cache_len,
+                                       dtype)
+             for i in range(period)}
+            for g in range(cfg.num_layers // period)
+        ]
+        blocks = _stack(groups)
+    else:
+        blocks = _stack([
+            _layer_cache_init(cfg, l, batch, cache_len, dtype)
+            for l in range(cfg.num_layers)
+        ])
+    return {"blocks": blocks, "index": jnp.full((), index, jnp.int32)}
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+def _embed_inputs(cfg: ModelConfig, params: Params, inputs: dict) -> jax.Array:
+    parts = []
+    key = "frames" if cfg.frontend == "frame" else "patches"
+    if cfg.frontend in ("frame", "patch") and key in inputs:
+        # modality frontends feed prompts; decode steps are token-only
+        feats = inputs[key]
+        parts.append(feats @ params["frontend"]["proj"].astype(feats.dtype))
+    if "tokens" in inputs:
+        parts.append(layers.embedding_lookup(params["embed"],
+                                             inputs["tokens"]))
+    x = parts[0] if len(parts) == 1 else jnp.concatenate(parts, axis=1)
+    return constrain(x, "batch", "res_seq", "embed")
+
+
+def forward(cfg: ModelConfig, params: Params, inputs: dict,
+            cache: Params | None = None, compute_dtype=jnp.bfloat16,
+            return_hidden: bool = False, last_only: bool = False):
+    """Returns (logits-or-hidden, new_cache, aux_loss).
+
+    ``return_hidden`` skips the unembedding (the caller fuses it into a
+    chunked loss); ``last_only`` unembeds only the final position (prefill).
+    """
+    x = _embed_inputs(cfg, params, inputs).astype(compute_dtype)
+    b, s, _ = x.shape
+    index = cache["index"] if cache is not None else None
+    if cache is not None:
+        positions = index + jnp.arange(s, dtype=jnp.int32)
+    else:
+        positions = jnp.arange(s, dtype=jnp.int32)
+
+    blocks = params["blocks"]
+    block_caches = cache["blocks"] if cache is not None else None
+    decode = cache is not None
+
+    if cfg.family == "hybrid":
+        period = cfg.attn_period
+        # Per-SUB-layer checkpointing: a period-8 Jamba group holds 7 mamba
+        # layers whose scan inputs are large; rematting each sub-layer keeps
+        # only one sub-layer's working set live during the group's backward.
+        lapply = (jax.checkpoint(_layer_apply, static_argnums=(2, 3),
+                                 prevent_cse=False)
+                  if cfg.remat == "full" and not decode else _layer_apply)
+
+        def body(xx, gp, gc):
+            new_gc = {}
+            aux_tot = jnp.zeros((), jnp.float32)
+            for i in range(period):
+                lc = gc[str(i)] if decode else None
+                xx, nc, aux = lapply(gp[str(i)], xx, cfg, i, positions,
+                                     lc, index)
+                aux_tot += aux
+                if decode:
+                    new_gc[str(i)] = nc
+            return xx, (new_gc if decode else 0), aux_tot
+    else:
+
+        def body(xx, gp, gc):
+            xx, nc, aux = _layer_apply(gp, xx, cfg, 0, positions, gc, index)
+            return xx, (nc if decode else 0), aux
+
+    if cfg.remat == "full":
+        body = jax.checkpoint(body, prevent_cse=False)
+
+    if cfg.scan_layers:
+        if decode:
+            def scan_fn(carry, pc):
+                gp, gc = pc
+                xx, nc, aux = body(carry, gp, gc)
+                return xx, (nc, aux)
+
+            x, (new_caches, auxs) = jax.lax.scan(scan_fn, x,
+                                                 (blocks, block_caches))
+        else:
+            def scan_fn(carry, gp):
+                xx, _, aux = body(carry, gp, None)
+                return xx, aux
+
+            x, auxs = jax.lax.scan(scan_fn, x, blocks)
+            new_caches = None
+        aux = jnp.sum(auxs)
+    else:
+        # Unrolled stack — used by the dry-run's differential cost probes
+        # (XLA cost analysis counts while-loop bodies once; unrolled layers
+        # are counted fully).
+        n = jax.tree.leaves(blocks)[0].shape[0]
+        aux = jnp.zeros((), jnp.float32)
+        caches_out = []
+        for l in range(n):
+            gp = jax.tree.map(lambda a: a[l], blocks)
+            gc = (jax.tree.map(lambda a: a[l], block_caches)
+                  if decode else None)
+            x, nc, a = body(x, gp, gc)
+            aux = aux + a
+            if decode:
+                caches_out.append(nc)
+        new_caches = (jax.tree.map(lambda *xs: jnp.stack(xs), *caches_out)
+                      if decode else None)
+
+    x = layers.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    new_cache = None
+    if cache is not None:
+        new_cache = {"blocks": new_caches, "index": index + s}
+    if return_hidden:
+        return x, new_cache, aux
+    head = params["embed"] if cfg.tie_embeddings else params["head"]
+    if last_only:
+        x = x[:, -1:]
+    logits = layers.unembed(head, x)
+    return logits, new_cache, aux

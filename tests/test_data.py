@@ -1,0 +1,88 @@
+"""Data pipeline: determinism, sharding, prefetch, memmap source."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.data import (DataConfig, MemmapSource, Prefetcher,
+                        SyntheticSource)
+
+
+def _cfg(**kw):
+    base = dict(vocab_size=101, seq_len=16, global_batch=8, seed=7)
+    base.update(kw)
+    return DataConfig(**base)
+
+
+@settings(max_examples=20, deadline=None)
+@given(step=st.integers(0, 10_000), shards=st.sampled_from([1, 2, 4, 8]))
+def test_synthetic_determinism(step, shards):
+    cfg = _cfg()
+    a = SyntheticSource(cfg).batch(step, 0, shards)
+    b = SyntheticSource(cfg).batch(step, 0, shards)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    np.testing.assert_array_equal(a["labels"], b["labels"])
+    assert a["tokens"].shape == (cfg.global_batch // shards, cfg.seq_len)
+
+
+def test_labels_are_next_tokens():
+    cfg = _cfg()
+    b = SyntheticSource(cfg).batch(0, 0, 1)
+    np.testing.assert_array_equal(b["tokens"][:, 1:], b["labels"][:, :-1])
+
+
+def test_synthetic_has_learnable_structure():
+    """Affine recurrence: one (a, c) per seed, stable across steps."""
+    cfg = _cfg(global_batch=4, seq_len=256)
+    src = SyntheticSource(cfg)
+    b0 = src.batch(0, 0, 1)
+    b9 = src.batch(9, 0, 1)
+    # brute-force the (a, c); the SAME one must explain both steps
+    best = (0, None)
+    for a in range(2, 8):
+        for c in range(1, 101):
+            ok = int(((a * b0["tokens"] + c) % 101 == b0["labels"]).mean()
+                     * 100)
+            if ok > best[0]:
+                best = (ok, (a, c))
+    assert best[0] > 90
+    a, c = best[1]
+    assert (((a * b9["tokens"] + c) % 101) == b9["labels"]).mean() > 0.9
+
+
+def test_frontend_batches():
+    cfg = _cfg(frontend="frame", frontend_dim=12)
+    b = SyntheticSource(cfg).batch(3, 0, 2)
+    assert b["frames"].shape == (4, 16, 12)
+    cfg = _cfg(frontend="patch", frontend_dim=12, num_patches=4)
+    b = SyntheticSource(cfg).batch(3, 0, 2)
+    assert b["patches"].shape == (4, 4, 12)
+    assert b["tokens"].shape == (4, 12)
+    assert (b["labels"][:, :4] == -1).all()
+
+
+def test_memmap_source(tmp_path):
+    tokens = np.arange(10_000, dtype=np.int32) % 97
+    f = tmp_path / "tokens.bin"
+    tokens.tofile(f)
+    cfg = _cfg(kind="memmap", path=str(f), vocab_size=97)
+    src = MemmapSource(cfg)
+    a = src.batch(2, 0, 1)
+    b = src.batch(2, 0, 1)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    assert a["tokens"].max() < 97
+
+
+def test_prefetcher_orders_steps():
+    cfg = _cfg()
+    src = SyntheticSource(cfg)
+    pf = Prefetcher(src, start_step=10, shard=0, num_shards=1, depth=2)
+    try:
+        it = iter(pf)
+        s0, b0 = next(it)
+        s1, b1 = next(it)
+        assert (s0, s1) == (10, 11)
+        direct = src.batch(10, 0, 1)
+        np.testing.assert_array_equal(b0["tokens"], direct["tokens"])
+    finally:
+        pf.close()

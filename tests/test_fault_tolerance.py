@@ -1,0 +1,96 @@
+"""Fault-tolerance runtime: injected failures, resume correctness, straggler
+detection, data determinism under re-sharding (elastic)."""
+
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager
+from repro.core import loadbalance
+from repro.data import DataConfig, SyntheticSource
+from repro.runtime import elastic
+from repro.runtime.fault_tolerance import (Heartbeat, ResilienceConfig,
+                                           StragglerMonitor, run_resilient)
+
+
+def test_run_resilient_recovers_from_injected_fault(tmp_path):
+    ckpt = CheckpointManager(tmp_path, keep=3)
+    calls = {"faults": 0}
+
+    def step_fn(state, batch):
+        return state + batch, {"loss": float(state)}
+
+    def batch_fn(step):
+        return 1
+
+    def fault_hook(step):
+        if step == 7 and calls["faults"] == 0:
+            calls["faults"] += 1
+            raise RuntimeError("injected node failure")
+
+    def on_restore(step):
+        st, meta = ckpt.restore(None, np.asarray(0))
+        return np.asarray(st), meta["step"]
+
+    state, history, _ = run_resilient(
+        step_fn, np.asarray(0), 12, ckpt, batch_fn,
+        config=ResilienceConfig(checkpoint_every=5),
+        fault_hook=fault_hook, on_restore=on_restore)
+    assert calls["faults"] == 1
+    # replayed from step 5; final state is exactly 12 increments' worth
+    assert int(state) == 12
+    assert ckpt.latest_step() == 12
+
+
+def test_run_resilient_gives_up_after_max_restarts(tmp_path):
+    ckpt = CheckpointManager(tmp_path)
+
+    def always_fail(step):
+        raise RuntimeError("hard failure")
+
+    with pytest.raises(RuntimeError):
+        run_resilient(lambda s, b: (s, {}), 0, 5, ckpt, lambda s: 0,
+                      config=ResilienceConfig(max_restarts=2),
+                      fault_hook=always_fail,
+                      on_restore=lambda step: (0, 0))
+
+
+def test_straggler_monitor_flags_slow_steps():
+    mon = StragglerMonitor(window=16, threshold=2.0)
+    for i in range(16):
+        assert mon.observe(i, 0.1) is None
+    rep = mon.observe(16, 0.5)
+    assert rep is not None and rep.ratio == pytest.approx(5.0, rel=0.01)
+
+
+def test_heartbeat_detects_dead_host():
+    t = [0.0]
+    hb = Heartbeat(4, timeout_s=10, clock=lambda: t[0])
+    t[0] = 5.0
+    hb.beat(0); hb.beat(1); hb.beat(2)  # host 3 silent
+    t[0] = 12.0
+    assert hb.dead() == [3]
+
+
+def test_data_determinism_across_restart_and_remesh():
+    """(seed, step, shard) determinism: restarting at a step reproduces the
+    same batch; re-sharding 4->2 shards keeps per-shard streams pure."""
+    cfg = DataConfig(vocab_size=101, seq_len=8, global_batch=8, seed=42)
+    src = SyntheticSource(cfg)
+    b1 = src.batch(5, 0, 4)
+    b2 = SyntheticSource(cfg).batch(5, 0, 4)  # "restarted" pipeline
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    # different shards differ
+    b3 = src.batch(5, 1, 4)
+    assert not np.array_equal(b1["tokens"], b3["tokens"])
+    # re-meshed to 2 shards: still deterministic
+    c1 = src.batch(5, 0, 2)
+    c2 = SyntheticSource(cfg).batch(5, 0, 2)
+    np.testing.assert_array_equal(c1["tokens"], c2["tokens"])
+    assert c1["tokens"].shape[0] == 4
+
+
+def test_elastic_mesh_shrinks_sanely():
+    assert elastic.largest_mesh_shape(256, 16) == (16, 16)
+    assert elastic.largest_mesh_shape(192, 16) == (12, 16)
+    assert elastic.largest_mesh_shape(8, 16) == (1, 8)   # degrade TP
+    assert elastic.largest_mesh_shape(1, 16) == (1, 1)

@@ -1,0 +1,113 @@
+"""Per-arch smoke tests (deliverable f): every assigned architecture's
+reduced config runs one forward + one train step on CPU with shape and
+finiteness asserts."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.configs as configs
+from repro.launch import steps
+from repro.models import transformer
+from repro.optim import adamw
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _batch_for(cfg, b=2, s=16):
+    rng = np.random.default_rng(0)
+    batch = {}
+    if cfg.frontend == "frame":
+        batch["frames"] = jnp.asarray(
+            rng.standard_normal((b, s, cfg.frontend_dim)), jnp.float32)
+        batch["labels"] = jnp.asarray(
+            rng.integers(0, cfg.vocab_size, (b, s)), jnp.int32)
+    elif cfg.frontend == "patch":
+        npatch = 4
+        batch["patches"] = jnp.asarray(
+            rng.standard_normal((b, npatch, cfg.frontend_dim)), jnp.float32)
+        batch["tokens"] = jnp.asarray(
+            rng.integers(0, cfg.vocab_size, (b, s - npatch)), jnp.int32)
+        batch["labels"] = jnp.asarray(
+            rng.integers(0, cfg.vocab_size, (b, s)), jnp.int32)
+    else:
+        batch["tokens"] = jnp.asarray(
+            rng.integers(0, cfg.vocab_size, (b, s)), jnp.int32)
+        batch["labels"] = jnp.asarray(
+            rng.integers(0, cfg.vocab_size, (b, s)), jnp.int32)
+    return batch
+
+
+@pytest.mark.parametrize("arch", configs.list_archs())
+def test_smoke_forward_shapes_and_finite(arch):
+    cfg = configs.get_smoke(arch)
+    params = transformer.init(cfg, KEY)
+    b, s = 2, 16
+    batch = _batch_for(cfg, b, s)
+    inputs = {k: v for k, v in batch.items() if k != "labels"}
+    logits, _, aux = transformer.forward(cfg, params, inputs,
+                                         compute_dtype=jnp.float32)
+    assert logits.shape == (b, s, cfg.vocab_size)
+    assert np.all(np.isfinite(np.asarray(logits, np.float32)))
+    assert np.isfinite(float(aux))
+
+
+@pytest.mark.parametrize("arch", configs.list_archs())
+def test_smoke_train_step(arch):
+    cfg = configs.get_smoke(arch)
+    opt_cfg = adamw.AdamWConfig(peak_lr=1e-3, warmup_steps=2, total_steps=10)
+    params = transformer.init(cfg, KEY)
+    state = {"params": params, "opt": adamw.init_state(params, opt_cfg)}
+    step = jax.jit(steps.make_train_step(cfg, opt_cfg))
+    batch = _batch_for(cfg)
+    state, metrics = step(state, batch)
+    assert np.isfinite(float(metrics["loss"]))
+    assert np.isfinite(float(metrics["grad_norm"]))
+    assert int(state["opt"]["step"]) == 1
+    # params actually changed
+    delta = sum(
+        float(jnp.sum(jnp.abs(a.astype(jnp.float32) - b.astype(jnp.float32))))
+        for a, b in zip(jax.tree.leaves(params),
+                        jax.tree.leaves(state["params"])))
+    assert delta > 0
+
+
+@pytest.mark.parametrize("arch", [a for a in configs.list_archs()
+                                  if configs.get_smoke(a).family != "encoder"])
+def test_smoke_decode_step(arch):
+    cfg = configs.get_smoke(arch)
+    params = transformer.init(cfg, KEY)
+    serve = jax.jit(steps.make_serve_step(cfg))
+    cache = transformer.cache_init(cfg, 2, 32, dtype=jnp.float32)
+    tok = jnp.ones((2, 1), jnp.int32)
+    for _ in range(3):
+        tok, cache = serve(params, cache, tok)
+    assert tok.shape == (2, 1)
+    assert int(cache["index"]) == 3
+
+
+def test_full_config_param_counts_match_published():
+    expected = {
+        "jamba_1_5_large_398b": (398e9, 0.05),
+        "phi3_5_moe_42b": (42e9, 0.05),
+        "qwen3_moe_235b": (235e9, 0.05),
+        "phi3_mini_3_8b": (3.8e9, 0.06),
+        "qwen3_14b": (14e9, 0.08),
+        "qwen2_5_32b": (32e9, 0.06),
+        "h2o_danube_1_8b": (1.8e9, 0.06),
+        "rwkv6_7b": (7e9, 0.2),
+        "internvl2_2b": (2e9, 0.1),
+    }
+    for arch, (target, tol) in expected.items():
+        n = configs.get(arch).param_count()
+        assert abs(n - target) / target < tol, (arch, n)
+
+
+def test_active_params_match_published_moe():
+    assert abs(configs.get("qwen3_moe_235b").active_param_count()
+               - 22e9) / 22e9 < 0.05
+    assert abs(configs.get("phi3_5_moe_42b").active_param_count()
+               - 6.6e9) / 6.6e9 < 0.05
+    assert abs(configs.get("jamba_1_5_large_398b").active_param_count()
+               - 94e9) / 94e9 < 0.05

@@ -1,0 +1,88 @@
+"""AdamW: convergence, schedule properties, int8 blockwise moments."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.optim import adamw
+
+
+def _rosenbrockish(params):
+    x, y = params["x"], params["y"]
+    return jnp.sum((1 - x) ** 2) + 5 * jnp.sum((y - x**2) ** 2)
+
+
+@pytest.mark.parametrize("moment_dtype", ["float32", "int8"])
+def test_adamw_converges(moment_dtype):
+    cfg = adamw.AdamWConfig(peak_lr=5e-2, warmup_steps=10, total_steps=300,
+                            weight_decay=0.0, moment_dtype=moment_dtype)
+    params = {"x": jnp.zeros(4), "y": jnp.zeros(4)}
+    state = adamw.init_state(params, cfg)
+
+    @jax.jit
+    def step(params, state):
+        loss, g = jax.value_and_grad(_rosenbrockish)(params)
+        params, state, _ = adamw.update(params, g, state, cfg)
+        return params, state, loss
+
+    first = None
+    for _ in range(300):
+        params, state, loss = step(params, state)
+        if first is None:
+            first = float(loss)
+    assert float(loss) < first * 0.01, (first, float(loss))
+
+
+def test_int8_tracks_f32_closely():
+    cfg32 = adamw.AdamWConfig(peak_lr=1e-2, warmup_steps=5, total_steps=100)
+    cfg8 = adamw.AdamWConfig(peak_lr=1e-2, warmup_steps=5, total_steps=100,
+                             moment_dtype="int8")
+    params32 = {"w": jnp.ones(300) * 2.0}
+    params8 = {"w": jnp.ones(300) * 2.0}
+    s32 = adamw.init_state(params32, cfg32)
+    s8 = adamw.init_state(params8, cfg8)
+    loss = lambda p: jnp.sum(jnp.square(p["w"] - 0.5))
+    for _ in range(50):
+        g32 = jax.grad(loss)(params32)
+        params32, s32, _ = adamw.update(params32, g32, s32, cfg32)
+        g8 = jax.grad(loss)(params8)
+        params8, s8, _ = adamw.update(params8, g8, s8, cfg8)
+    np.testing.assert_allclose(np.asarray(params8["w"]),
+                               np.asarray(params32["w"]), atol=5e-2)
+
+
+@settings(max_examples=30, deadline=None)
+@given(shape=st.sampled_from([(7,), (3, 130), (2, 5, 128), (1, 256)]),
+       seed=st.integers(0, 1000))
+def test_quantize_roundtrip_error_bounded(shape, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal(shape) * 10, jnp.float32)
+    packed = adamw.quantize_blockwise(x)
+    back = adamw.dequantize_blockwise(packed, shape[-1])
+    assert back.shape == x.shape
+    # blockwise absmax/127 quantization error bound
+    blocks = np.asarray(jnp.abs(x)).reshape(-1)
+    err = np.abs(np.asarray(back - x))
+    assert err.max() <= np.abs(np.asarray(x)).max() / 127 + 1e-6
+
+
+def test_schedule_shape():
+    cfg = adamw.AdamWConfig(peak_lr=1.0, warmup_steps=100, total_steps=1000,
+                            min_lr_frac=0.1)
+    s = lambda t: float(adamw.schedule(cfg, jnp.asarray(t)))
+    assert s(0) == 0.0
+    assert abs(s(100) - 1.0) < 0.02
+    assert s(50) == pytest.approx(0.5, rel=0.05)
+    assert s(1000) == pytest.approx(0.1, rel=0.05)
+    assert s(550) < s(300)  # monotone decay after warmup
+
+
+def test_grad_clip_applied():
+    cfg = adamw.AdamWConfig(peak_lr=0.0, clip_norm=1.0)
+    params = {"w": jnp.zeros(10)}
+    state = adamw.init_state(params, cfg)
+    big = {"w": jnp.full(10, 1e6)}
+    _, _, metrics = adamw.update(params, big, state, cfg)
+    assert float(metrics["grad_norm"]) > 1e6  # reported pre-clip

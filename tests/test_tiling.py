@@ -1,0 +1,71 @@
+"""Paper claim (eq. 2): the closed-form tile minimizes communication volume.
+
+Property-tested against brute-force integer search over the constrained
+space, plus VMEM-budget invariants of the TPU-adapted solver.
+"""
+
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import tiling
+from repro.core.hardware import TPU_V5E
+
+
+@settings(max_examples=50, deadline=None)
+@given(L=st.integers(64, 65536), p=st.integers(1, 64))
+def test_eq2_matches_brute_force(L, p):
+    """Closed form vs exhaustive search: equal up to integer rounding (the
+    rounding gap grows as p*L approaches L^2, i.e. tiny tiles)."""
+    n = 4096
+    cf = tiling.solve_paper(L, p)
+    bf = tiling.brute_force_paper(L, p, n=n)
+    q_cf = tiling.comm_volume(n, cf, p)
+    q_bf = tiling.comm_volume(n, bf, p)
+    assert q_bf <= q_cf <= q_bf * 1.10, (cf, bf)
+
+
+@settings(max_examples=50, deadline=None)
+@given(L=st.integers(64, 65536), p=st.integers(1, 64))
+def test_eq2_tile_fits_local_memory(L, p):
+    t = tiling.solve_paper(L, p)
+    # paper constraint: double-buffered B (2*z*x) + C (x*y) within L
+    assert 2 * t.z * t.x + t.x * t.y <= L * 1.05  # int rounding slack
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    vmem=st.sampled_from([2**20, 16 * 2**20, 64 * 2**20, 96 * 2**20]),
+    dtype_bytes=st.sampled_from([2, 4]),
+)
+def test_tpu_tile_respects_vmem_and_alignment(vmem, dtype_bytes):
+    t = tiling.solve_tpu(vmem_bytes=vmem, dtype_bytes=dtype_bytes)
+    assert t.y % 128 == 0 and t.x % 128 == 0 and t.z % 128 == 0
+    used = (t.y * t.z + 2 * t.z * t.x) * dtype_bytes + t.y * t.x * 4
+    assert used <= vmem
+
+
+def test_comm_volume_z_independence():
+    """The paper's observation that Q does not depend on z."""
+    q1 = tiling.comm_volume(1024, tiling.Tile(32, 16, 1), p=4)
+    q2 = tiling.comm_volume(1024, tiling.Tile(32, 16, 64), p=4)
+    assert q1 == q2
+
+
+def test_rect_volume_reduces_to_square():
+    t = tiling.Tile(64, 32, 1)
+    sq = tiling.comm_volume(2048, t, p=2)
+    rect = tiling.comm_volume_rect(2048, 2048, 2048, t, p=2)
+    assert math.isclose(sq, rect, rel_tol=1e-12)
+
+
+def test_bigger_vmem_never_hurts_traffic():
+    m = n = k = 8192
+    prev = None
+    for vmem in (8 * 2**20, 32 * 2**20, TPU_V5E.usable_vmem()):
+        t = tiling.solve_tpu(vmem_bytes=vmem, m=m, n=n, k=k)
+        q = tiling.comm_volume_rect(m, n, k, t)
+        if prev is not None:
+            assert q <= prev * 1.01
+        prev = q
