@@ -5,17 +5,59 @@ Prints ``name,us_per_call,derived`` CSV lines:
   table2.*    — paper Table II analogue (SpMV on the four matrices)
   bandwidth.* — paper §V-B bandwidth-extrapolation figure
   roofline.*  — §Roofline rows from the dry-run artifacts (if present)
+
+and writes ``BENCH_kernels.json`` (``--out`` to relocate): the
+machine-readable kernel-perf record tracked across PRs — autotuned tile per
+Table-1 shape, model GFLOP/s, tuner-vs-fixed speedup, measured wall-clock
+where feasible, and the SpMV tuner plans with the balance metric.
 """
 
 from __future__ import annotations
 
+import argparse
+import json
+import os
+import platform
+import tempfile
 
-def main() -> None:
+
+def kernel_report(tuned_recs=None) -> dict:
+    import jax
+
+    from benchmarks import table1_matmul, table2_spmv
+
+    return {
+        "schema": 1,
+        "backend": jax.default_backend(),
+        "host": platform.machine(),
+        "matmul_tuned_vs_fixed": (tuned_recs if tuned_recs is not None
+                                  else table1_matmul.tuned_vs_fixed()),
+        "matmul_measured": table1_matmul.tuned_vs_fixed_measured(),
+        "spmv_tuned": table2_spmv.tuned_records(),
+    }
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="BENCH_kernels.json",
+                    help="path for the machine-readable kernel report")
+    ap.add_argument("--skip-json", action="store_true")
+    args = ap.parse_args(argv)
+
+    # The report must reflect the code under benchmark, not whatever an
+    # earlier run left in the user-global autotune cache — tune fresh in a
+    # throwaway cache unless the caller explicitly pinned one.
+    if "REPRO_AUTOTUNE_CACHE" not in os.environ:
+        os.environ["REPRO_AUTOTUNE_CACHE"] = os.path.join(
+            tempfile.mkdtemp(prefix="repro-bench-"), "autotune.json")
+
     from benchmarks import (bandwidth_extrapolation, roofline_report,
                             table1_matmul, table2_spmv)
 
+    # Tune once; the CSV pass and the JSON report share the records.
+    tuned_recs = table1_matmul.tuned_vs_fixed()
     lines: list[str] = []
-    lines += table1_matmul.main()
+    lines += table1_matmul.main(tuned_recs)
     lines += table2_spmv.main()
     lines += bandwidth_extrapolation.main()
     try:
@@ -25,6 +67,12 @@ def main() -> None:
     print("name,us_per_call,derived")
     for ln in lines:
         print(ln)
+
+    if not args.skip_json:
+        report = kernel_report(tuned_recs)
+        with open(args.out, "w") as f:
+            json.dump(report, f, indent=1, sort_keys=True)
+        print(f"# wrote {args.out}")
 
 
 if __name__ == "__main__":

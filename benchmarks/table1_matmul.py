@@ -18,8 +18,14 @@ import numpy as np
 
 from repro.core import cost_model, dse, tiling
 from repro.core.hardware import TPU_V5E
+from repro.kernels import autotune
 from repro.kernels.matmul import matmul
 from repro.kernels.matmul.ref import matmul_ref
+
+# The paper's Table-I problem sizes (scaled to the TPU regime): the shapes
+# the acceptance bar compares tuned-vs-fixed on.
+TABLE1_SHAPES = [(4096, 4096, 4096), (8192, 8192, 8192),
+                 (16384, 16384, 16384), (8192, 2048, 8192)]
 
 
 def rows():
@@ -53,6 +59,88 @@ def rows():
     return out
 
 
+def tuned_vs_fixed():
+    """Autotuner vs the fixed eq.2 tile on the Table-1 shapes.
+
+    'fixed' is what blocked_matmul callers used before the engine: the
+    closed-form eq.2/solve_tpu tile.  'tuned' goes through the full
+    DSE -> (measure) -> cache path.  Both are scored by the same machine
+    model.  When the plan was selected analytically the tuner's candidate
+    set contains the eq.2 seed, so speedup_model >= 1 by construction; a
+    wall-clock-selected plan (source='measured', possible on TPU where the
+    Table-1 shapes are measurable) may trade model time for real time —
+    then measured_us, not speedup_model, is the evidence.
+    """
+    recs = []
+    for m, n, k in TABLE1_SHAPES:
+        fixed = tiling.solve_tpu(m=m, n=n, k=k)
+        fixed_res = cost_model.matmul_time_model(m, n, k, fixed)
+        plan = autotune.tune_matmul(m, n, k, jnp.bfloat16)
+        tuned_res = cost_model.matmul_time_model(m, n, k, plan.tile)
+        recs.append({
+            "shape": [m, n, k],
+            "fixed_tile": [fixed.y, fixed.x, fixed.z],
+            "tuned_tile": [plan.tile.y, plan.tile.x, plan.tile.z],
+            "tuned_source": plan.source,
+            "tuned_measured_us": plan.measured_us,
+            "gflops_fixed_model": fixed_res["gflops"],
+            "gflops_tuned_model": tuned_res["gflops"],
+            "speedup_model": fixed_res["time_s"] / tuned_res["time_s"],
+        })
+    return recs
+
+
+def tuned_vs_fixed_measured(size: int = 256, reps: int = 6, trials: int = 3):
+    """Wall-clock comparison at a size where CPU interpret timing is
+    feasible; on TPU this measures the real kernels at the same size.
+
+    Two baselines, both real pre-engine callers: 'mxu' is the hardcoded
+    128^3 tile the tests/benchmarks executed, 'eq2' is what ``tile=None``
+    callers got from the closed-form law (clamped to the problem, so at
+    small sizes it may coincide with the tuned tile — then its speedup is
+    honestly ~1).  Interpret-mode timing is noisy, so take the best of
+    ``trials`` alternating measurements per config."""
+    m = n = k = size
+    key = jax.random.PRNGKey(0)
+    a = jax.random.normal(key, (m, k), jnp.float32)
+    b = jax.random.normal(jax.random.PRNGKey(1), (k, n), jnp.float32)
+    interpret = jax.default_backend() != "tpu"
+    plan = autotune.tune_matmul(m, n, k, jnp.float32)
+    from repro.kernels.matmul.ops import clamp_tile
+    baselines = {
+        "mxu": tiling.Tile(128, 128, 128),
+        "eq2": clamp_tile(tiling.solve_tpu(m=m, n=n, k=k,
+                                           dtype_bytes=4), m, n, k),
+    }
+
+    # One timing slot per distinct tile (a baseline identical to the tuned
+    # tile shares its number — two measurements of the same jitted call
+    # would otherwise report drift as speedup), measured interleaved so
+    # machine drift hits all configs alike.
+    slots = {plan.tile: float("inf")}
+    for t in baselines.values():
+        slots.setdefault(t, float("inf"))
+    for _ in range(trials):
+        for t in slots:
+            slots[t] = min(slots[t], autotune.measure(
+                lambda t=t: matmul(a, b, tile=t, interpret=interpret,
+                                   use_kernel=True), reps=reps))
+
+    tuned_us = slots[plan.tile]
+    out = {
+        "shape": [m, n, k],
+        "tuned_tile": [plan.tile.y, plan.tile.x, plan.tile.z],
+        "tuned_source": plan.source,
+        "tuned_us": tuned_us,
+        "interpret": interpret,
+    }
+    for name, t in baselines.items():
+        out[f"{name}_tile"] = [t.y, t.x, t.z]
+        out[f"{name}_us"] = slots[t]
+        out[f"speedup_vs_{name}"] = slots[t] / tuned_us
+    return out
+
+
 def kernel_check(reps: int = 3):
     """Execute the kernel (interpret) and the oracle; report us/call + error."""
     key = jax.random.PRNGKey(0)
@@ -71,13 +159,20 @@ def kernel_check(reps: int = 3):
             "max_err": err}
 
 
-def main():
+def main(tuned_recs=None):
     lines = []
     for r in rows():
         lines.append(
             f"table1.{r['name']},{r['time_model_s'] * 1e6:.1f},"
             f"eff={r['efficiency']:.3f};gflops={r['gflops_model']:.0f};"
             f"tile={r['tile']}")
+    for r in (tuned_recs if tuned_recs is not None else tuned_vs_fixed()):
+        m, n, k = r["shape"]
+        lines.append(
+            f"table1.tuned_m{m}n{n}k{k},0.0,"
+            f"speedup_model={r['speedup_model']:.3f};"
+            f"tile={'/'.join(map(str, r['tuned_tile']))};"
+            f"src={r['tuned_source']}")
     kc = kernel_check()
     lines.append(f"table1.{kc['name']},{kc['us_per_call']:.1f},"
                  f"max_err={kc['max_err']:.2e}")

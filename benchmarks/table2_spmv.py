@@ -17,6 +17,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import loadbalance
+from repro.kernels import autotune
 from repro.kernels.spmv import pack_csr, spmv
 
 # Published stats: name -> (NNZ, M(rows), nnz_per_col_range)
@@ -103,6 +104,41 @@ def bench_one(name: str, reps: int = 5):
         "sliced_sorted": sliced["sorted"],
         "err": err,
     }
+
+
+def tuned_records(check_blocked_on: str = "Maragal_2"):
+    """Autotuner plans for the Table-2 matrices (JSON rows for run.py).
+
+    The tuner ranks (block_rows, block_cols) with the bandwidth model fed
+    by the active/fetched balance metric; small matrices additionally get
+    measured (interpret on CPU).  For ``check_blocked_on`` the blocked-x
+    kernel is executed and compared against the ELL oracle — the
+    correctness half of the acceptance bar (the large-n half lives in
+    tests/test_autotune.py with a forced small VMEM budget).
+    """
+    recs = []
+    for name in MATRICES:
+        indptr, indices, data, shape = synthesize(name)
+        mat = pack_csr(indptr, indices, data, shape, scheme="sorted")
+        plan = autotune.tune_spmv(mat, max_measure_elems=1 << 18)
+        rec = {
+            "matrix": name, "shape": list(shape), "nnz": mat.nnz,
+            "block_rows": plan.block_rows, "block_cols": plan.block_cols,
+            "source": plan.source, "waste": plan.waste,
+            "model_time_us": plan.model_time_s * 1e6,
+            "measured_us": plan.measured_us,
+        }
+        if name == check_blocked_on:
+            n = shape[1]
+            x = jnp.asarray(
+                np.random.default_rng(2).standard_normal(n), jnp.float32)
+            y_blk = spmv(mat, x, block_rows=plan.block_rows,
+                         block_cols=max(128, (n // 2) // 128 * 128),
+                         interpret=True)
+            y_ref = spmv(mat, x, use_kernel=False)
+            rec["blocked_vs_ref_err"] = float(jnp.max(jnp.abs(y_blk - y_ref)))
+        recs.append(rec)
+    return recs
 
 
 def main():

@@ -9,6 +9,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import loadbalance
+from repro.kernels import autotune
 from repro.kernels.spmv import pack_csr, spmv
 
 
@@ -46,6 +47,21 @@ def main():
         err = float(jnp.max(jnp.abs(y - y_ref)))
         print(f"  {scheme:12s} sliced waste {mat.sliced_waste():.2f}x "
               f"(global {mat.padding_waste:.2f}x)  err vs first: {err:.1e}")
+
+    # Close the DSE loop: let the tuner pick the execution config for the
+    # sorted packing (the balance metric above is its ranking input), and
+    # demonstrate the blocked-x kernel that lifts the whole-vector VMEM cap.
+    mat = pack_csr(indptr, indices, data, shape, scheme="sorted")
+    plan = autotune.tune_spmv(mat)
+    print(f"\nautotuned execution config: block_rows={plan.block_rows}, "
+          f"block_cols={plan.block_cols} (None = whole-x resident), "
+          f"source={plan.source}")
+    y_blk = spmv(mat, jnp.asarray(x), block_rows=plan.block_rows,
+                 block_cols=256, interpret=True)
+    err = float(jnp.max(jnp.abs(y_blk - spmv(mat, jnp.asarray(x),
+                                             use_kernel=False))))
+    print(f"blocked-x kernel (256-col slabs) vs oracle: max err {err:.1e} "
+          f"— n no longer bounded by VMEM")
 
     print("\nresult: the paper's balancing law survives the port, but on a "
           "SIMD target the optimal permutation is SORTED (equal widths), "

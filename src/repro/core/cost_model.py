@@ -134,3 +134,51 @@ def matmul_time_model(
         "efficiency": compute_s / total_s,
         "gflops": flops / total_s / 1e9,
     }
+
+
+def spmv_time_model(
+    rows: int, width: int, n: int, nnz: int,
+    block_rows: int, block_cols: int | None = None,
+    waste: float | None = None,
+    chip: hardware.Chip = hardware.TPU_V5E,
+    val_bytes: int = 4, idx_bytes: int = 4,
+) -> dict:
+    """Bandwidth model of the ELL SpMV kernel for the tuner's candidate
+    ranking (the paper's Table-II evaluation, analytically).
+
+    ``waste`` is the active/fetched balance metric from `core.loadbalance` /
+    `EllMatrix.sliced_waste(block_rows)`: fetched nnz per active nnz under
+    the current packing law at this block size.  When given, the ELL traffic
+    is ``nnz * waste`` (the realizable sliced-ELL fetch volume); otherwise
+    the dense (rows * width) ELL footprint is charged.
+
+    ``block_cols=None`` models whole-x VMEM residency (x fetched once);
+    an integer models the blocked-x kernel, where every row-block re-streams
+    all ceil(n/block_cols) slabs of x.
+    """
+    fetched = nnz * waste if waste is not None else rows * width
+    ell_bytes = fetched * (val_bytes + idx_bytes)
+    row_blocks = max(1, -(-rows // block_rows))
+    if block_cols is None:
+        x_bytes = n * val_bytes                      # resident: fetched once
+        vmem_bytes = n * val_bytes
+    else:
+        slabs = max(1, -(-n // block_cols))
+        x_bytes = slabs * block_cols * val_bytes * row_blocks
+        vmem_bytes = block_cols * val_bytes
+    # Double-buffered cols+vals blocks alongside the x working set.
+    vmem_bytes += 2 * block_rows * width * (val_bytes + idx_bytes)
+    y_bytes = rows * val_bytes
+    memory_s = (ell_bytes + x_bytes + y_bytes) / chip.hbm_bw
+    flops = 2.0 * nnz
+    compute_s = flops / chip.peak_flops
+    total_s = max(compute_s, memory_s)
+    return {
+        "flops": flops,
+        "traffic_bytes": ell_bytes + x_bytes + y_bytes,
+        "vmem_bytes": vmem_bytes,
+        "compute_s": compute_s,
+        "memory_s": memory_s,
+        "time_s": total_s,
+        "gflops": flops / total_s / 1e9,
+    }

@@ -57,17 +57,23 @@ def explore(
 # Ready-made explorations
 # ---------------------------------------------------------------------------
 
-def autotune_matmul_tile(
+def rank_matmul_tiles(
     m: int, n: int, k: int,
     vmem_bytes: int | None = None,
     dtype_bytes: int = 2,
     align: int = hardware.MXU_DIM,
-) -> tiling.Tile:
+    top: int = 8,
+) -> list[Candidate]:
     """Sweep aligned (y, x) pairs; score with the analytical matmul model.
 
     This is the paper's Table-I exploration (vary cores/local-mem, simulate,
-    pick best) compressed to one call.  The eq.2 seed is always included, so
-    the result is never worse than the paper's closed form.
+    rank) compressed to one call.  The eq.2 seed is always included, so the
+    top candidate is never worse than the paper's closed form.  The ranking
+    is deterministic: candidates are scored by model time with (y, x, z) as
+    the tie-break, so equal-cost points always order the same way — this is
+    what makes the autotune cache reproducible.  Each returned
+    ``Candidate.detail`` carries the concrete ``tiling.Tile`` plus the model
+    row (`cost_model.matmul_time_model`).
     """
     chip = hardware.TPU_V5E
     budget = vmem_bytes if vmem_bytes is not None else chip.usable_vmem()
@@ -87,10 +93,30 @@ def autotune_matmul_tile(
     xs = sorted({align, 2 * align, 4 * align, 8 * align, seed.x})
     space = {"y": [v for v in ys if v <= max(m, align)],
              "x": [v for v in xs if v <= max(n, align)]}
-    best = explore(space, evaluate, top=1)
-    if best and best[0].detail and "tile" in best[0].detail:
-        return best[0].detail["tile"]
-    return seed
+    ranked = explore(space, evaluate, top=max(top, 1))
+    ranked = [c for c in ranked if c.detail and "tile" in c.detail]
+    ranked.sort(key=lambda c: (c.score, c.detail["tile"].y,
+                               c.detail["tile"].x, c.detail["tile"].z))
+    if not ranked:
+        res = cost_model.matmul_time_model(m, n, k, seed,
+                                           dtype_bytes=dtype_bytes)
+        ranked = [Candidate({"y": seed.y, "x": seed.x}, res["time_s"],
+                            {"tile": seed, **res})]
+    return ranked[:top]
+
+
+def autotune_matmul_tile(
+    m: int, n: int, k: int,
+    vmem_bytes: int | None = None,
+    dtype_bytes: int = 2,
+    align: int = hardware.MXU_DIM,
+) -> tiling.Tile:
+    """Best analytical tile — `rank_matmul_tiles` winner (paper flow, one
+    call).  Kept as the cheap non-measuring entry point; the measuring
+    engine lives in `repro.kernels.autotune`."""
+    ranked = rank_matmul_tiles(m, n, k, vmem_bytes=vmem_bytes,
+                               dtype_bytes=dtype_bytes, align=align, top=1)
+    return ranked[0].detail["tile"]
 
 
 def sharding_candidates(num_chips: int, min_model: int = 1) -> list[dict]:

@@ -1,10 +1,15 @@
 """Pallas TPU kernels for the perf-critical compute layers.
 
-- matmul/    — paper §V-A: eq.2-tiled blocked dense matmul
-- spmv/      — paper §V-B: nnz-balanced ELL sparse matvec
+- matmul/    — paper §V-A: eq.2-tiled blocked dense matmul (fused epilogue)
+- spmv/      — paper §V-B: nnz-balanced ELL sparse matvec (+ blocked-x)
 - attention/ — flash attention (prefill hot spot; beyond-paper)
+- autotune   — DSE -> measure -> cache engine; `tuned_matmul`/`tuned_spmv`
+               are the entry points production paths should call.
 
-Each has kernel.py (pl.pallas_call + BlockSpec), ops.py (jitted wrapper with
-backend dispatch), ref.py (pure-jnp oracle).  Tests sweep shapes/dtypes in
-interpret mode against the oracles.
+Each kernel dir has kernel.py (pl.pallas_call + BlockSpec), ops.py (jitted
+wrapper with backend dispatch), ref.py (pure-jnp oracle).  Tests sweep
+shapes/dtypes in interpret mode against the oracles.
 """
+
+from repro.kernels.autotune import (tuned_matmul, tuned_spmv, tune_matmul,
+                                    tune_spmv)  # noqa: F401

@@ -22,6 +22,12 @@ def pick_tile(m: int, n: int, k: int, dtype_bytes: int = 2,
     to the (padded) problem."""
     t = dse.autotune_matmul_tile(m, n, k, vmem_bytes=vmem_bytes,
                                  dtype_bytes=dtype_bytes, align=align)
+    return clamp_tile(t, m, n, k, align=align)
+
+
+def clamp_tile(t: tiling.Tile, m: int, n: int, k: int,
+               align: int = 128) -> tiling.Tile:
+    """Shrink a tile to the padded problem so tiny shapes don't over-pad."""
     return tiling.Tile(
         y=min(t.y, _pad_to(m, align)),
         x=min(t.x, _pad_to(n, align)),
@@ -29,19 +35,36 @@ def pick_tile(m: int, n: int, k: int, dtype_bytes: int = 2,
     )
 
 
-@functools.partial(jax.jit, static_argnames=("tile", "interpret", "use_kernel"))
+@functools.partial(jax.jit, static_argnames=(
+    "tile", "activation", "interpret", "use_kernel", "compute_dtype",
+    "out_dtype"))
 def matmul(a: jax.Array, b: jax.Array, tile: tiling.Tile | None = None,
-           interpret: bool = False, use_kernel: bool | None = None):
-    """C = A @ B with eq.2-tiled Pallas execution on TPU.
+           bias: jax.Array | None = None, activation: str | None = None,
+           interpret: bool = False, use_kernel: bool | None = None,
+           compute_dtype=None, out_dtype=None):
+    """C = act(A @ B + bias) with eq.2-tiled Pallas execution on TPU.
 
     ``use_kernel=None`` auto-selects: Pallas on TPU backend, oracle on CPU
     (the multi-pod dry-run lowers the oracle path; tests pass
     ``interpret=True`` to execute the kernel body on CPU).
+
+    ``compute_dtype`` (e.g. ``jnp.bfloat16``) down-casts the streamed A/B
+    operands before the kernel; accumulation stays f32 in VMEM scratch and
+    the result is produced in ``out_dtype`` (default: A's original dtype).
+    ``bias`` is a length-N vector fused into the kernel epilogue together
+    with ``activation`` (see ``kernel.ACTIVATIONS``).
     """
+    out_dtype = out_dtype or a.dtype
     if use_kernel is None:
         use_kernel = interpret or jax.default_backend() == "tpu"
+    if bias is not None and bias.ndim == 1:
+        bias = bias[None, :]
+    if compute_dtype is not None:
+        a = a.astype(compute_dtype)
+        b = b.astype(compute_dtype)
     if not use_kernel:
-        return ref.matmul_ref(a, b)
+        return ref.matmul_ref(a, b, bias=bias, activation=activation,
+                              out_dtype=out_dtype)
 
     m, k = a.shape
     _, n = b.shape
@@ -50,5 +73,9 @@ def matmul(a: jax.Array, b: jax.Array, tile: tiling.Tile | None = None,
     mp, np_, kp = _pad_to(m, tile.y), _pad_to(n, tile.x), _pad_to(k, tile.z)
     ap = jnp.pad(a, ((0, mp - m), (0, kp - k)))
     bp = jnp.pad(b, ((0, kp - k), (0, np_ - n)))
-    out = kernel.blocked_matmul(ap, bp, tile, interpret=interpret)
+    bias_p = (None if bias is None
+              else jnp.pad(bias, ((0, 0), (0, np_ - n))))
+    out = kernel.blocked_matmul(ap, bp, tile, bias=bias_p,
+                                activation=activation, out_dtype=out_dtype,
+                                interpret=interpret)
     return out[:m, :n]

@@ -1,9 +1,16 @@
-"""Pure-jnp oracle for the blocked matmul kernel."""
+"""Pure-jnp oracle for the blocked matmul kernel (+ fused epilogue)."""
 
 import jax
 import jax.numpy as jnp
 
 
-def matmul_ref(a: jax.Array, b: jax.Array, out_dtype=None) -> jax.Array:
+def matmul_ref(a: jax.Array, b: jax.Array, bias: jax.Array | None = None,
+               activation: str | None = None, out_dtype=None) -> jax.Array:
+    from repro.kernels.matmul.kernel import ACTIVATIONS
+
     out_dtype = out_dtype or a.dtype
-    return jnp.dot(a, b, preferred_element_type=jnp.float32).astype(out_dtype)
+    y = jnp.dot(a, b, preferred_element_type=jnp.float32)
+    if bias is not None:
+        y = y + bias.astype(jnp.float32)
+    y = ACTIVATIONS[activation](y)
+    return y.astype(out_dtype)

@@ -9,6 +9,19 @@ of shape (bm, W) with the x vector resident in VMEM (the paper's DMA
 cacheline buffer becomes the VMEM-resident gather source).  Balance quality
 shows up as the active/fetched ratio reported by the benchmark — the direct
 analogue of the paper's "~25% of nnz per core" measurement.
+
+Two variants:
+
+* ``ell_spmv``          — whole x vector resident in VMEM (fast, but caps n
+                          at the VMEM budget);
+* ``ell_spmv_blocked``  — x streamed in ``block_cols``-sized column slabs;
+                          each (row-block, slab) grid step gathers only the
+                          columns that fall inside the current slab and
+                          accumulates partial sums in an f32 scratch.  This
+                          unlocks n far beyond VMEM at the cost of one
+                          masked pass over the ELL block per slab, and is
+                          the knob the autotuner trades against the
+                          active/fetched balance metric.
 """
 
 from __future__ import annotations
@@ -18,6 +31,7 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 
 def _spmv_kernel(x_ref, cols_ref, vals_ref, y_ref):
@@ -44,5 +58,64 @@ def ell_spmv(x: jax.Array, ell_cols: jax.Array, ell_vals: jax.Array,
         ],
         out_specs=pl.BlockSpec((block_rows,), lambda i: (i,)),
         out_shape=jax.ShapeDtypeStruct((rows,), ell_vals.dtype),
+        compiler_params=pltpu.TPUCompilerParams(
+            dimension_semantics=("parallel",)),
+        interpret=interpret,
+    )(x, ell_cols, ell_vals)
+
+
+def _spmv_blocked_kernel(x_ref, cols_ref, vals_ref, y_ref, acc_ref, *,
+                         n_slabs: int, block_cols: int):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    start = j * block_cols
+    cols = cols_ref[...]                             # (bm, W) global indices
+    in_slab = (cols >= start) & (cols < start + block_cols)
+    local = jnp.where(in_slab, cols - start, 0)      # clamp out-of-slab to 0
+    gathered = jnp.take(x_ref[...], local, axis=0)   # (bm, W) from the slab
+    partial = jnp.where(in_slab, vals_ref[...] * gathered, 0.0)
+    acc_ref[...] += jnp.sum(partial.astype(jnp.float32), axis=1)
+
+    @pl.when(j == n_slabs - 1)
+    def _store():
+        y_ref[...] = acc_ref[...].astype(y_ref.dtype)
+
+
+def ell_spmv_blocked(x: jax.Array, ell_cols: jax.Array, ell_vals: jax.Array,
+                     block_rows: int = 8, block_cols: int = 512,
+                     interpret: bool = False) -> jax.Array:
+    """y = A @ x with x streamed slab-by-slab (n may exceed VMEM).
+
+    ``x`` must be padded to a multiple of ``block_cols`` (ops.py pads; the
+    pad region is never referenced because every column index is < n).
+    The ELL block index map is constant along the slab axis, so Pallas's
+    revisiting optimization fetches cols/vals once per row-block while x
+    slabs stream underneath.
+    """
+    rows, width = ell_cols.shape
+    (n_padded,) = x.shape
+    assert rows % block_rows == 0, (rows, block_rows)
+    assert n_padded % block_cols == 0, (n_padded, block_cols)
+    n_slabs = n_padded // block_cols
+    grid = (rows // block_rows, n_slabs)
+    return pl.pallas_call(
+        functools.partial(_spmv_blocked_kernel, n_slabs=n_slabs,
+                          block_cols=block_cols),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_cols,), lambda i, j: (j,)),
+            pl.BlockSpec((block_rows, width), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_rows, width), lambda i, j: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_rows,), lambda i, j: (i,)),
+        out_shape=jax.ShapeDtypeStruct((rows,), ell_vals.dtype),
+        scratch_shapes=[pltpu.VMEM((block_rows,), jnp.float32)],
+        # Row blocks are independent; the slab axis carries the accumulator.
+        compiler_params=pltpu.TPUCompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(x, ell_cols, ell_vals)

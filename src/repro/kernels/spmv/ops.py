@@ -22,6 +22,14 @@ class EllMatrix:
     perm: np.ndarray       # packed row r holds original row perm[r]
     shape: tuple           # original (M, N)
     nnz: int
+    row_lens: np.ndarray | None = None   # true packed-row lengths (CSR nnz)
+
+    def _lens(self) -> np.ndarray:
+        """Packed-row lengths; falls back to counting nonzero values for
+        matrices built before row_lens existed (misses explicit zeros)."""
+        if self.row_lens is not None:
+            return self.row_lens
+        return np.asarray((self.vals != 0).sum(axis=1))
 
     @property
     def padding_waste(self) -> float:
@@ -29,12 +37,20 @@ class EllMatrix:
         total = self.cols.shape[0] * self.cols.shape[1]
         return total / max(self.nnz, 1)
 
+    def layout_fingerprint(self) -> str:
+        """Digest of the packed row-length layout.  Two packings of the same
+        matrix (same nnz/shape, different permutation) fetch differently on
+        SIMD hardware, so tuning results must not be shared between them."""
+        import hashlib
+        lens = np.asarray(self._lens(), np.int64)
+        return hashlib.sha1(lens.tobytes()).hexdigest()[:12]
+
     def sliced_waste(self, block_rows: int = 8, align: int = 8) -> float:
         """fetched/active if each row BLOCK used its own width (sliced ELL,
         realizable with a per-block width array + masked k-chunks).  This is
         where the packing scheme matters on SIMD hardware: 'sorted' puts
         similar-length rows together and minimizes per-block max width."""
-        lens = np.asarray((self.vals != 0).sum(axis=1))
+        lens = self._lens()
         fetched = 0
         for s in range(0, len(lens), block_rows):
             w = int(lens[s:s + block_rows].max()) if s < len(lens) else 0
@@ -74,31 +90,46 @@ def pack_csr(indptr: np.ndarray, indices: np.ndarray, data: np.ndarray,
 
     cols = np.zeros((rows_padded, width), np.int32)
     vals = np.zeros((rows_padded, width), data.dtype)
+    row_lens = np.zeros(rows_padded, np.int64)
     for packed_r, orig_r in enumerate(perm):
         s, e = indptr[orig_r], indptr[orig_r + 1]
         cols[packed_r, : e - s] = indices[s:e]
         vals[packed_r, : e - s] = data[s:e]
+        row_lens[packed_r] = e - s
     return EllMatrix(jnp.asarray(cols), jnp.asarray(vals), perm, shape,
-                     int(nnz_per_row.sum()))
+                     int(nnz_per_row.sum()), row_lens)
 
 
-@functools.partial(jax.jit,
-                   static_argnames=("block_rows", "interpret", "use_kernel"))
-def _spmv_packed(cols, vals, x_padded, block_rows, interpret, use_kernel):
+@functools.partial(jax.jit, static_argnames=(
+    "block_rows", "block_cols", "interpret", "use_kernel"))
+def _spmv_packed(cols, vals, x_padded, block_rows, block_cols, interpret,
+                 use_kernel):
     if use_kernel:
+        if block_cols is not None:
+            pad = (-x_padded.shape[0]) % block_cols
+            return kernel.ell_spmv_blocked(
+                jnp.pad(x_padded, (0, pad)), cols, vals,
+                block_rows=block_rows, block_cols=block_cols,
+                interpret=interpret)
         return kernel.ell_spmv(x_padded, cols, vals, block_rows=block_rows,
                                interpret=interpret)
     return ref.spmv_ell_ref(cols, vals, x_padded)
 
 
 def spmv(mat: EllMatrix, x: jax.Array, block_rows: int = 8,
-         interpret: bool = False, use_kernel: bool | None = None) -> jax.Array:
-    """y = A @ x.  Result is in ORIGINAL row order."""
+         block_cols: int | None = None, interpret: bool = False,
+         use_kernel: bool | None = None) -> jax.Array:
+    """y = A @ x.  Result is in ORIGINAL row order.
+
+    ``block_cols=None`` keeps the whole x vector VMEM-resident (the original
+    kernel, n limited by VMEM); an integer streams x in slabs of that many
+    columns (``kernel.ell_spmv_blocked``), unlocking arbitrarily large n.
+    """
     if use_kernel is None:
         use_kernel = interpret or jax.default_backend() == "tpu"
     m, n = mat.shape
     x_padded = x  # cols only reference valid columns
     y_packed = _spmv_packed(mat.cols, mat.vals, x_padded, block_rows,
-                            interpret, use_kernel)
+                            block_cols, interpret, use_kernel)
     y = jnp.zeros((m,), y_packed.dtype)
     return y.at[jnp.asarray(mat.perm)].set(y_packed[: m])

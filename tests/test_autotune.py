@@ -1,0 +1,255 @@
+"""Autotuning kernel engine: cache behavior, deterministic ranking, and
+numerical equality of the tuned kernels against the pure-jnp oracles
+(interpret mode on CPU)."""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import dse, tiling
+from repro.kernels import autotune
+from repro.kernels.matmul.ref import matmul_ref
+from repro.kernels.spmv import pack_csr, spmv
+from repro.kernels.spmv.ref import spmv_ell_ref
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.fixture
+def cache(tmp_path, monkeypatch):
+    """Isolated on-disk cache; env override is what production uses too."""
+    path = tmp_path / "autotune.json"
+    monkeypatch.setenv(autotune.CACHE_ENV, str(path))
+    return autotune.TuneCache(path)
+
+
+def _random_csr(rng, m, n, density):
+    dense = (rng.random((m, n)) < density) * rng.standard_normal((m, n))
+    nnz_per_row = (dense != 0).sum(1)
+    indptr = np.concatenate([[0], np.cumsum(nnz_per_row)]).astype(np.int32)
+    cols = (np.concatenate([np.nonzero(r)[0] for r in dense]).astype(np.int32)
+            if nnz_per_row.sum() else np.zeros(0, np.int32))
+    vals = dense[dense != 0].astype(np.float32)
+    return dense, indptr, cols, vals
+
+
+# ---------------------------------------------------------------------------
+# candidate ranking
+# ---------------------------------------------------------------------------
+
+def test_matmul_ranking_is_deterministic():
+    r1 = dse.rank_matmul_tiles(1024, 1024, 1024, top=8)
+    r2 = dse.rank_matmul_tiles(1024, 1024, 1024, top=8)
+    assert [c.detail["tile"] for c in r1] == [c.detail["tile"] for c in r2]
+    scores = [c.score for c in r1]
+    assert scores == sorted(scores)
+    assert len(r1) >= 1
+
+
+def test_matmul_ranking_contains_eq2_seed_or_better():
+    """The top candidate is never worse than the closed-form eq.2 tile."""
+    from repro.core import cost_model
+    m = n = k = 8192
+    seed = tiling.solve_tpu(m=m, n=n, k=k)
+    seed_t = cost_model.matmul_time_model(m, n, k, seed)["time_s"]
+    best = dse.rank_matmul_tiles(m, n, k, top=1)[0]
+    assert best.score <= seed_t * (1 + 1e-12)
+
+
+def test_spmv_ranking_deterministic_and_feasible():
+    rng = np.random.default_rng(3)
+    dense, indptr, cols, vals = _random_csr(rng, 128, 400, 0.1)
+    mat = pack_csr(indptr, cols, vals, (128, 400), scheme="sorted")
+    r1 = autotune.rank_spmv_configs(mat)
+    r2 = autotune.rank_spmv_configs(mat)
+    assert r1 == r2 and len(r1) > 0
+    assert [r[0] for r in r1] == sorted(r[0] for r in r1)
+    # every candidate's block_rows divides the packed row count
+    rows = mat.cols.shape[0]
+    assert all(rows % br == 0 for _, br, _, _ in r1)
+
+
+def test_spmv_ranking_uses_balance_metric():
+    """The waste column is exactly the active/fetched metric at that block
+    size — the loadbalance input the tuner ranks with."""
+    rng = np.random.default_rng(4)
+    dense, indptr, cols, vals = _random_csr(rng, 64, 200, 0.2)
+    mat = pack_csr(indptr, cols, vals, (64, 200), scheme="sorted")
+    for _, br, _, waste in autotune.rank_spmv_configs(mat):
+        assert waste == pytest.approx(mat.sliced_waste(block_rows=br))
+
+
+# ---------------------------------------------------------------------------
+# cache hit/miss
+# ---------------------------------------------------------------------------
+
+def test_matmul_cache_miss_then_hit(cache):
+    p1 = autotune.tune_matmul(192, 128, 160, cache=cache, measure_k=0)
+    assert p1.source == "model"
+    assert cache.misses == 1 and cache.hits == 0
+    p2 = autotune.tune_matmul(192, 128, 160, cache=cache, measure_k=0)
+    assert p2.source == "cache"
+    assert p2.tile == p1.tile
+    assert cache.hits == 1
+    # a fresh cache object re-reads the same file (persistence)
+    p3 = autotune.tune_matmul(192, 128, 160, measure_k=0,
+                              cache=autotune.TuneCache(cache.path))
+    assert p3.source == "cache" and p3.tile == p1.tile
+
+
+def test_model_entry_upgraded_by_measuring_caller(cache):
+    """An analytic-only entry (e.g. serve startup, measure_k=0) must not
+    suppress measurement forever: a measuring caller re-tunes and the
+    measured result replaces the entry."""
+    p1 = autotune.tune_matmul(128, 128, 128, cache=cache, measure_k=0)
+    assert p1.source == "model" and p1.measured_us is None
+    p2 = autotune.tune_matmul(128, 128, 128, cache=cache, measure_k=2)
+    assert p2.source == "measured" and p2.measured_us is not None
+    p3 = autotune.tune_matmul(128, 128, 128, cache=cache, measure_k=2)
+    assert p3.source == "cache" and p3.measured_us is not None
+
+
+def test_cache_key_separates_shapes_and_dtypes(cache):
+    autotune.tune_matmul(128, 128, 128, jnp.float32, cache=cache,
+                         measure_k=0)
+    p = autotune.tune_matmul(128, 128, 128, jnp.bfloat16, cache=cache,
+                             measure_k=0)
+    assert p.source != "cache"      # different dtype, different key
+    p = autotune.tune_matmul(128, 128, 256, jnp.float32, cache=cache,
+                             measure_k=0)
+    assert p.source != "cache"      # different shape, different key
+
+
+def test_env_var_routes_default_cache(cache):
+    # get_cache() must honor the monkeypatched env var from the fixture
+    assert autotune.get_cache().path == cache.path
+
+
+def test_corrupt_cache_file_is_ignored(cache):
+    cache.path.write_text("{not json")
+    p = autotune.tune_matmul(128, 128, 128, cache=autotune.TuneCache(
+        cache.path), measure_k=0)
+    assert p.source == "model"
+
+
+def test_spmv_cache_miss_then_hit(cache):
+    rng = np.random.default_rng(5)
+    dense, indptr, cols, vals = _random_csr(rng, 64, 300, 0.1)
+    mat = pack_csr(indptr, cols, vals, (64, 300))
+    p1 = autotune.tune_spmv(mat, cache=cache, measure_k=0)
+    assert p1.source == "model"
+    p2 = autotune.tune_spmv(mat, cache=cache, measure_k=0)
+    assert p2.source == "cache"
+    assert (p2.block_rows, p2.block_cols) == (p1.block_rows, p1.block_cols)
+
+
+def test_spmv_key_distinguishes_packings(cache):
+    """Different packings of the SAME matrix have different fetch behavior
+    (the balance metric differs); they must not share a cache entry."""
+    rng = np.random.default_rng(9)
+    dense, indptr, cols, vals = _random_csr(rng, 200, 300, 0.1)
+    sorted_mat = pack_csr(indptr, cols, vals, (200, 300), scheme="sorted")
+    rr_mat = pack_csr(indptr, cols, vals, (200, 300), scheme="round_robin")
+    assert sorted_mat.layout_fingerprint() != rr_mat.layout_fingerprint()
+    p1 = autotune.tune_spmv(sorted_mat, cache=cache, measure_k=0)
+    p2 = autotune.tune_spmv(rr_mat, cache=cache, measure_k=0)
+    assert p2.source == "model"        # not a (wrong) cache hit
+    assert p2.waste != pytest.approx(p1.waste)
+
+
+def test_measurement_path_records_wall_time(cache):
+    p = autotune.tune_matmul(128, 128, 128, cache=cache, measure_k=2)
+    assert p.source == "measured"
+    assert p.measured_us is not None and p.measured_us > 0
+
+
+# ---------------------------------------------------------------------------
+# tuned kernels match the oracles (interpret mode)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("m,n,k", [(128, 128, 128), (130, 70, 50),
+                                   (256, 384, 512)])
+def test_tuned_matmul_matches_oracle(cache, m, n, k):
+    a = jax.random.normal(KEY, (m, k), jnp.float32)
+    b = jax.random.normal(jax.random.PRNGKey(1), (k, n), jnp.float32)
+    out = autotune.tuned_matmul(a, b, interpret=True, cache=cache)
+    np.testing.assert_allclose(np.asarray(out),
+                               np.asarray(matmul_ref(a, b)),
+                               rtol=5e-4, atol=5e-4)
+
+
+@pytest.mark.parametrize("activation", [None, "relu", "gelu", "silu"])
+def test_tuned_matmul_fused_epilogue(cache, activation):
+    a = jax.random.normal(KEY, (96, 64), jnp.float32)
+    b = jax.random.normal(jax.random.PRNGKey(1), (64, 80), jnp.float32)
+    bias = jax.random.normal(jax.random.PRNGKey(2), (80,), jnp.float32)
+    out = autotune.tuned_matmul(a, b, bias=bias, activation=activation,
+                                interpret=True, cache=cache)
+    ref = matmul_ref(a, b, bias=bias[None, :], activation=activation)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=5e-4, atol=5e-4)
+
+
+def test_tuned_matmul_bf16_inputs_f32_accum(cache):
+    a = jax.random.normal(KEY, (128, 256), jnp.float32)
+    b = jax.random.normal(jax.random.PRNGKey(1), (256, 128), jnp.float32)
+    out = autotune.tuned_matmul(a, b, compute_dtype=jnp.bfloat16,
+                                out_dtype=jnp.float32, interpret=True,
+                                cache=cache)
+    assert out.dtype == jnp.float32
+    ref = matmul_ref(a.astype(jnp.bfloat16), b.astype(jnp.bfloat16),
+                     out_dtype=jnp.float32)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_tuned_spmv_matches_dense(cache):
+    rng = np.random.default_rng(6)
+    dense, indptr, cols, vals = _random_csr(rng, 200, 333, 0.05)
+    mat = pack_csr(indptr, cols, vals, (200, 333), scheme="sorted")
+    x = rng.standard_normal(333).astype(np.float32)
+    y = autotune.tuned_spmv(mat, jnp.asarray(x), interpret=True, cache=cache)
+    np.testing.assert_allclose(np.asarray(y), dense @ x, rtol=1e-4,
+                               atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# blocked-x SpMV: n beyond the whole-vector VMEM limit
+# ---------------------------------------------------------------------------
+
+def test_blocked_x_spmv_matches_ref_beyond_vmem_limit(cache):
+    """With a forced tiny VMEM budget the whole-x kernel is infeasible
+    (n * 4B alone exceeds it); the tuner must pick a blocked-x config and
+    the result must equal the ELL oracle."""
+    rng = np.random.default_rng(7)
+    m, n = 64, 4096              # x alone: 16 KiB
+    budget = 24 * 1024           # fits ELL blocks + a slab, not all of x
+    dense, indptr, cols, vals = _random_csr(rng, m, n, 0.02)
+    mat = pack_csr(indptr, cols, vals, (m, n), scheme="sorted")
+    plan = autotune.tune_spmv(mat, vmem_bytes=budget, cache=cache,
+                              measure_k=0)
+    assert plan.block_cols is not None, \
+        "tuner kept whole-x residency despite the budget"
+    assert plan.block_cols * 4 <= budget
+    x = rng.standard_normal(n).astype(np.float32)
+    y = spmv(mat, jnp.asarray(x), block_rows=plan.block_rows,
+             block_cols=plan.block_cols, interpret=True)
+    y_ref = spmv(mat, jnp.asarray(x), use_kernel=False)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(y), dense @ x, rtol=1e-4,
+                               atol=1e-4)
+
+
+@pytest.mark.parametrize("block_cols", [128, 256, 1024])
+def test_blocked_x_slab_sweep(block_cols):
+    rng = np.random.default_rng(8)
+    m, n = 48, 1000
+    dense, indptr, cols, vals = _random_csr(rng, m, n, 0.05)
+    mat = pack_csr(indptr, cols, vals, (m, n))
+    x = rng.standard_normal(n).astype(np.float32)
+    y = spmv(mat, jnp.asarray(x), block_cols=block_cols, interpret=True)
+    np.testing.assert_allclose(np.asarray(y), dense @ x, rtol=1e-4,
+                               atol=1e-4)

@@ -2,7 +2,10 @@
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # minimal env: property tests skip, rest run
+    from _hypothesis_stub import given, settings, st
 
 from repro.data import (DataConfig, MemmapSource, Prefetcher,
                         SyntheticSource)

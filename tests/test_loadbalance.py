@@ -1,7 +1,10 @@
 """Paper claim (§V-B): round-robin row assignment balances nnz to ~1/p."""
 
 import numpy as np
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # minimal env: property tests skip, rest run
+    from _hypothesis_stub import given, settings, st
 
 from repro.core import loadbalance as lb
 
