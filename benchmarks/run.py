@@ -21,19 +21,25 @@ import platform
 import tempfile
 
 
-def kernel_report(tuned_recs=None) -> dict:
+def kernel_report(tuned_recs=None, attn_recs=None, attn_measured=None) -> dict:
     import jax
 
-    from benchmarks import table1_matmul, table2_spmv
+    from benchmarks import attention_prefill, table1_matmul, table2_spmv
 
     return {
-        "schema": 1,
+        "schema": 2,
         "backend": jax.default_backend(),
         "host": platform.machine(),
         "matmul_tuned_vs_fixed": (tuned_recs if tuned_recs is not None
                                   else table1_matmul.tuned_vs_fixed()),
         "matmul_measured": table1_matmul.tuned_vs_fixed_measured(),
         "spmv_tuned": table2_spmv.tuned_records(),
+        "attention_tuned_vs_fixed": (
+            attn_recs if attn_recs is not None
+            else attention_prefill.tuned_vs_fixed()),
+        "attention_measured": (
+            attn_measured if attn_measured is not None
+            else attention_prefill.tuned_vs_fixed_measured()),
     }
 
 
@@ -51,14 +57,17 @@ def main(argv=None) -> None:
         os.environ["REPRO_AUTOTUNE_CACHE"] = os.path.join(
             tempfile.mkdtemp(prefix="repro-bench-"), "autotune.json")
 
-    from benchmarks import (bandwidth_extrapolation, roofline_report,
-                            table1_matmul, table2_spmv)
+    from benchmarks import (attention_prefill, bandwidth_extrapolation,
+                            roofline_report, table1_matmul, table2_spmv)
 
-    # Tune once; the CSV pass and the JSON report share the records.
+    # Tune/measure once; the CSV pass and the JSON report share the records.
     tuned_recs = table1_matmul.tuned_vs_fixed()
+    attn_recs = attention_prefill.tuned_vs_fixed()
+    attn_measured = attention_prefill.tuned_vs_fixed_measured()
     lines: list[str] = []
     lines += table1_matmul.main(tuned_recs)
     lines += table2_spmv.main()
+    lines += attention_prefill.main(attn_recs, attn_measured)
     lines += bandwidth_extrapolation.main()
     try:
         lines += roofline_report.main()
@@ -69,7 +78,7 @@ def main(argv=None) -> None:
         print(ln)
 
     if not args.skip_json:
-        report = kernel_report(tuned_recs)
+        report = kernel_report(tuned_recs, attn_recs, attn_measured)
         with open(args.out, "w") as f:
             json.dump(report, f, indent=1, sort_keys=True)
         print(f"# wrote {args.out}")

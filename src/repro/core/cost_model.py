@@ -136,6 +136,61 @@ def matmul_time_model(
     }
 
 
+def attention_time_model(
+    bh: int, sq: int, sk: int, dh: int,
+    block_q: int, block_k: int,
+    causal: bool = True,
+    chip: hardware.Chip = hardware.TPU_V5E,
+    dtype_bytes: int = 2,
+) -> dict:
+    """Roofline model of the flash-attention forward kernel for the tuner's
+    candidate ranking — the communication-avoiding analysis of the
+    (block_q, block_k) tile space.
+
+    Kernel shape (kernels/attention/kernel.py): grid (bh, sq/bq, sk/bk),
+    Q/O blocks revisit across the k axis so Q is fetched and O written once,
+    while every q-row-block re-streams all of K and V:
+
+        traffic = 2*bh*sq*dh  +  2*bh*sk*dh * ceil(sq/block_q)
+
+    — the matmul eq.2 story again: K/V re-streaming falls as block_q grows,
+    so the tuner pushes block_q as deep as the VMEM budget allows.  block_k
+    does not change traffic (double-buffered streams hide its depth) but
+    bounds the (block_q, block_k) logits working set.
+
+    VMEM: double-buffered Q/K/V input blocks + the O block, the f32 online-
+    softmax scratch (m, l: block_q x 1; acc: block_q x dh), and the f32
+    logits/probs intermediates (block_q x block_k each).
+
+    ``causal`` does not reduce traffic or compute here — the kernel visits
+    every (i, j) block and masks — it is recorded so a future block-skipping
+    kernel can claim its ~2x without a cache-schema change.
+    """
+    q_blocks = max(1, -(-sq // block_q))
+    flops = 4.0 * bh * sq * sk * dh          # QK^T + PV, both 2*mnk
+    qo_bytes = 2.0 * bh * sq * dh * dtype_bytes
+    kv_bytes = 2.0 * bh * sk * dh * dtype_bytes * q_blocks
+    memory_s = (qo_bytes + kv_bytes) / chip.hbm_bw
+    compute_s = flops / chip.peak_flops
+    total_s = max(compute_s, memory_s)
+    vmem_bytes = (
+        2 * (block_q + 2 * block_k) * dh * dtype_bytes   # double-buffered in
+        + block_q * dh * dtype_bytes                     # O block
+        + (2 * block_q + block_q * dh) * 4               # m, l, acc scratch
+        + 2 * block_q * block_k * 4                      # s, p intermediates
+    )
+    return {
+        "flops": flops,
+        "traffic_bytes": qo_bytes + kv_bytes,
+        "vmem_bytes": vmem_bytes,
+        "compute_s": compute_s,
+        "memory_s": memory_s,
+        "time_s": total_s,
+        "gflops": flops / total_s / 1e9,
+        "causal": causal,
+    }
+
+
 def spmv_time_model(
     rows: int, width: int, n: int, nnz: int,
     block_rows: int, block_cols: int | None = None,

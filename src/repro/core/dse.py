@@ -119,6 +119,69 @@ def autotune_matmul_tile(
     return ranked[0].detail["tile"]
 
 
+def rank_attention_blocks(
+    bh: int, sq: int, sk: int, dh: int,
+    vmem_bytes: int | None = None,
+    dtype_bytes: int = 2,
+    causal: bool = True,
+    block_cands: Sequence[int] = (128, 256, 512, 1024),
+    top: int = 8,
+) -> list[Candidate]:
+    """Sweep (block_q, block_k) pairs for the flash-attention kernel; score
+    with `cost_model.attention_time_model` under the VMEM budget.
+
+    The kernel clamps blocks to the sequence (``min(block, s)``) and then
+    requires the clamped block to divide it, so candidates are enumerated in
+    *effective* block space and deduped — a 64-token prefill collapses every
+    block_q candidate onto 64.  Ranking is deterministic: model time with
+    (block_q, block_k) as the tie-break, descending block_q preferred on
+    ties (deeper q-blocks also help a future block-skipping causal kernel).
+    Each ``Candidate.detail`` carries the effective blocks plus the model
+    row.  Never returns empty: if the budget rejects everything, the
+    smallest legal pair is scored and returned anyway (the kernel itself is
+    the final arbiter on real VMEM).
+    """
+    chip = hardware.TPU_V5E
+    budget = vmem_bytes if vmem_bytes is not None else chip.usable_vmem()
+
+    pairs = []
+    seen = set()
+    for bq in block_cands:
+        for bk in block_cands:
+            ebq, ebk = min(bq, sq), min(bk, sk)
+            if sq % ebq or sk % ebk or (ebq, ebk) in seen:
+                continue
+            seen.add((ebq, ebk))
+            pairs.append({"block_q": ebq, "block_k": ebk})
+    if not pairs:
+        # No aligned candidate divides the (odd) sequence; the whole-sequence
+        # block is always legal for the kernel's divisibility assert.
+        pairs.append({"block_q": sq, "block_k": sk})
+
+    def evaluate(knobs: dict) -> tuple[float, dict]:
+        res = cost_model.attention_time_model(
+            bh, sq, sk, dh, knobs["block_q"], knobs["block_k"],
+            causal=causal, dtype_bytes=dtype_bytes)
+        if res["vmem_bytes"] > budget:
+            return float("inf"), {}
+        return res["time_s"], {**knobs, **res}
+
+    # Score ALL pairs before truncating: explore()'s internal top-cut is
+    # insertion-ordered on ties, which would drop the deeper-block_q
+    # candidates the tie-break below exists to prefer.
+    ranked = explore(pairs, evaluate, top=len(pairs))
+    ranked = [c for c in ranked if c.detail and "block_q" in c.detail]
+    ranked.sort(key=lambda c: (c.score, -c.detail["block_q"],
+                               c.detail["block_k"]))
+    if not ranked:
+        knobs = min(pairs, key=lambda p: (p["block_q"], p["block_k"]))
+        res = cost_model.attention_time_model(
+            bh, sq, sk, dh, knobs["block_q"], knobs["block_k"],
+            causal=causal, dtype_bytes=dtype_bytes)
+        ranked = [Candidate(knobs, res["time_s"], {**knobs, **res})]
+    return ranked[:top]
+
+
 def sharding_candidates(num_chips: int, min_model: int = 1) -> list[dict]:
     """Enumerate (data, model) factorizations — the interconnect DSE axis."""
     out = []

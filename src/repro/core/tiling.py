@@ -76,11 +76,18 @@ def comm_volume(n: int, tile: Tile, p: int = 1) -> float:
 
 
 def comm_volume_rect(m: int, n: int, k: int, tile: Tile, p: int = 1) -> float:
-    """Rectangular generalization of Q for an (m,k) @ (k,n) product."""
+    """Rectangular generalization of Q for an (m,k) @ (k,n) product.
+
+    Each operand is streamed at least once (the ``max(1, ...)`` floors):
+    below one tile per axis the fractional panel counts would otherwise
+    charge *less* than one full pass over B — exactly the decode regime
+    (m = batch << tile.y) where the weight stream is the traffic floor the
+    serving batch sweep trades against.
+    """
     if tile.x <= 0 or tile.y <= 0:
         return math.inf
-    a_traffic = (m * k) * (n / (p * tile.x))   # A loaded once per N-panel
-    b_traffic = (k * n) * (m / tile.y)         # B reloaded once per row-block
+    a_traffic = (m * k) * max(1.0, n / (p * tile.x))  # A loaded once per N-panel
+    b_traffic = (k * n) * max(1.0, m / tile.y)        # B reloaded per row-block
     c_traffic = m * n
     return a_traffic + b_traffic + c_traffic
 

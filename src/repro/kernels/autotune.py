@@ -34,6 +34,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import cost_model, dse, hardware, tiling
+from repro.kernels.attention import kernel as attn_kernel
+from repro.kernels.attention import ops as attn_ops
 from repro.kernels.matmul import ops as matmul_ops
 from repro.kernels.spmv import ops as spmv_ops
 
@@ -401,16 +403,145 @@ def tuned_spmv(mat: spmv_ops.EllMatrix, x: jax.Array,
 
 
 # ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class AttentionPlan:
+    block_q: int
+    block_k: int
+    source: str                  # "cache" | "measured" | "model"
+    model_time_s: float
+    measured_us: float | None
+    key: str
+
+
+def _attention_key(bh: int, sq: int, sk: int, dh: int, causal: bool,
+                   window: int | None, dtype: str, backend: str,
+                   vmem_bytes: int | None) -> str:
+    return (f"attention:{bh}x{sq}x{sk}x{dh}:c{int(causal)}"
+            f":w{'none' if window is None else window}:{dtype}:{backend}"
+            f":v{_budget_tag(vmem_bytes)}")
+
+
+def tune_attention(
+    bh: int, sq: int, sk: int, dh: int, dtype=jnp.float32, *,
+    causal: bool = True,
+    window: int | None = None,
+    measure_k: int = 3,
+    vmem_bytes: int | None = None,
+    max_measure_elems: int = MAX_MEASURE_ELEMS,
+    cache: TuneCache | None = None,
+    interpret: bool | None = None,
+) -> AttentionPlan:
+    """Pick (block_q, block_k) for the flash kernel: DSE -> measure -> cache.
+
+    ``bh`` is the folded batch*heads leading axis the kernel sees (GQA
+    callers fold before calling — see `attention.ops.mha_attention`).  The
+    window size enters the key but not the ranking: the kernel visits every
+    block either way, so the feasible set and traffic are window-independent
+    while measured winners may differ.
+    """
+    dtype = jnp.dtype(dtype)
+    backend = _backend()
+    cache = cache or get_cache()
+    key = _attention_key(bh, sq, sk, dh, causal, window, dtype.name, backend,
+                         vmem_bytes)
+    measurable = (measure_k > 0
+                  and (backend == "tpu"
+                       or bh * (sq + 2 * sk) * dh <= max_measure_elems))
+
+    hit = cache.get(key)
+    # Same upgrade rule as tune_matmul/tune_spmv: an analytic-only entry
+    # (e.g. written at serve startup with measure_k=0) never blocks a later
+    # measuring caller.
+    if hit is not None and not (measurable and hit.get("source") == "model"):
+        return AttentionPlan(hit["block_q"], hit["block_k"], "cache",
+                             hit["model_time_s"], hit.get("measured_us"), key)
+
+    ranked = dse.rank_attention_blocks(bh, sq, sk, dh,
+                                       vmem_bytes=vmem_bytes,
+                                       dtype_bytes=dtype.itemsize,
+                                       causal=causal,
+                                       top=max(measure_k, 1))
+    cands = [(c.score, c.detail["block_q"], c.detail["block_k"])
+             for c in ranked]
+
+    interpret = (backend != "tpu") if interpret is None else interpret
+    measured_us = None
+    if measurable:
+        scale = 1.0 / (dh ** 0.5)
+        q = jax.random.normal(jax.random.PRNGKey(0), (bh, sq, dh), dtype)
+        k = jax.random.normal(jax.random.PRNGKey(1), (bh, sk, dh), dtype)
+        v = jax.random.normal(jax.random.PRNGKey(2), (bh, sk, dh), dtype)
+        best, best_us = None, float("inf")
+        for score, bq, bk in cands[:measure_k]:
+            try:
+                us = measure(lambda bq=bq, bk=bk: attn_kernel.flash_attention(
+                    q, k, v, scale=scale, causal=causal, window=window,
+                    block_q=bq, block_k=bk, interpret=interpret))
+            except Exception:
+                continue  # e.g. real VMEM overflow the model missed
+            if us < best_us:
+                best, best_us = (score, bq, bk), us
+        measurable = best is not None
+    if measurable:
+        score, bq, bk = best
+        source, measured_us = "measured", best_us
+    else:
+        score, bq, bk = cands[0]
+        source = "model"
+        measured_us = None
+
+    cache.put(key, {"block_q": bq, "block_k": bk, "source": source,
+                    "model_time_s": score, "measured_us": measured_us})
+    return AttentionPlan(bq, bk, source, score, measured_us, key)
+
+
+def tuned_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: int | None = None,
+                    interpret: bool = False,
+                    use_kernel: bool | None = None,
+                    measure_k: int = 0,
+                    cache: TuneCache | None = None) -> jax.Array:
+    """Flash attention with autotuned (block_q, block_k) for q/k/v's shape.
+
+    Same signature/dispatch as `attention.ops.mha_attention` — q is
+    (B, Sq, Hq, dh), k/v are (B, Sk, Hkv, dh), GQA folding included.
+    ``measure_k`` defaults to 0 (analytic ranking only) because the serving
+    prefill path calls this *inside* a jit trace, where wall-clock
+    measurement is impossible; measured winners come from offline callers
+    (benchmarks) through the shared cache.
+    """
+    b, sq, hq, dh = q.shape
+    _, sk, _, _ = k.shape
+    if use_kernel is None:
+        use_kernel = interpret or _backend() == "tpu"
+    if not use_kernel:
+        return attn_ops.mha_attention(q, k, v, causal=causal, window=window,
+                                      use_kernel=False)
+    plan = tune_attention(b * hq, sq, sk, dh, q.dtype, causal=causal,
+                          window=window, measure_k=measure_k, cache=cache,
+                          interpret=interpret)
+    return attn_ops.mha_attention(q, k, v, causal=causal, window=window,
+                                  block_q=plan.block_q, block_k=plan.block_k,
+                                  interpret=interpret, use_kernel=True)
+
+
+# ---------------------------------------------------------------------------
 # Model-serving plans
 # ---------------------------------------------------------------------------
 
-def plan_for_model(cfg, batch: int, *, cache: TuneCache | None = None,
+def plan_for_model(cfg, batch: int, *, prefill_len: int = 0,
+                   cache: TuneCache | None = None,
                    measure_k: int = 0) -> list[dict]:
-    """Pre-tune the decode-path matmul shapes of a model config.
+    """Pre-tune the serving-path kernel shapes of a model config.
 
     Called by `launch.serve` at server startup so the first request never
     pays the search.  Measurement defaults off (analytic ranking only):
-    startup happens on the serving critical path.
+    startup happens on the serving critical path.  Covers the decode-path
+    matmuls and — when ``prefill_len`` is given — the prefill flash-attention
+    shape, so all three tuned kernel families share one warmup.
     """
     d, f, v = cfg.d_model, cfg.d_ff or cfg.d_model * 4, cfg.vocab_size
     qkv = max(cfg.num_heads * cfg.head_dim, d) or d
@@ -429,4 +560,86 @@ def plan_for_model(cfg, batch: int, *, cache: TuneCache | None = None,
                       "tile": [p.tile.y, p.tile.x, p.tile.z],
                       "source": p.source,
                       "model_time_us": p.model_time_s * 1e6})
+    if prefill_len > 0 and cfg.num_heads:
+        ap = tune_attention(batch * cfg.num_heads, prefill_len, prefill_len,
+                            cfg.head_dim, jnp.bfloat16, causal=cfg.causal,
+                            window=cfg.sliding_window, measure_k=measure_k,
+                            cache=cache)
+        plans.append({"op": "attn_prefill",
+                      "bh_sq_sk_dh": [batch * cfg.num_heads, prefill_len,
+                                      prefill_len, cfg.head_dim],
+                      "block": [ap.block_q, ap.block_k],
+                      "source": ap.source,
+                      "model_time_us": ap.model_time_s * 1e6})
     return plans
+
+
+def _attn_layer_count(cfg) -> int:
+    return sum(1 for l in range(cfg.num_layers) if cfg.is_attn_layer(l))
+
+
+def predict_decode_step_us(cfg, batch: int, *, cache_len: int,
+                           plans: list[dict] | None = None,
+                           cache: TuneCache | None = None) -> float:
+    """Predicted wall time of one decode step at this batch, from the tuned
+    plans' model times.
+
+    The qkv/out projections and the KV-stream term are charged per
+    *attention* layer (a hybrid's mamba layers have neither — their mixer
+    matmuls are an uncounted approximation), the FFN matmuls per layer, the
+    logits matmul once.  The KV stream (`2 * batch * cache_len * kv_dim`
+    bf16 bytes per attention layer at `hbm_bw`) is the decode hot loop's
+    memory floor.
+    """
+    plans = plans if plans is not None else plan_for_model(cfg, batch,
+                                                           cache=cache)
+    attn_ops_ = {"qkv_proj", "out_proj"}
+    ffn_ops = {"ffn_up", "ffn_down"}
+    n_attn = _attn_layer_count(cfg)
+    attn_us = sum(p["model_time_us"] for p in plans if p["op"] in attn_ops_)
+    ffn_us = sum(p["model_time_us"] for p in plans if p["op"] in ffn_ops)
+    logits_us = sum(p["model_time_us"] for p in plans if p["op"] == "logits")
+    kv_bytes = 2.0 * batch * cache_len * cfg.kv_dim * 2   # K+V, bf16
+    kv_us = n_attn * kv_bytes / hardware.TPU_V5E.hbm_bw * 1e6
+    return (n_attn * attn_us + cfg.num_layers * ffn_us + logits_us + kv_us)
+
+
+def select_serving_batch(
+    cfg, *, cache_len: int, prefill_len: int = 0,
+    candidates: Sequence[int] = (1, 2, 4, 8, 16, 32, 64),
+    latency_budget_ms: float | None = None,
+    cache: TuneCache | None = None,
+) -> dict:
+    """Sweep candidate batch sizes against the tuned plans' predicted step
+    time; pick the batch maximizing predicted decode throughput under the
+    latency budget.
+
+    This is the paper's DSE methodology lifted one level: the design knob is
+    no longer a kernel tile but the *serving batch*, and the simulator is
+    the same analytic machine model the kernel tuner ranks with — so the
+    continuous-batching loop's shape is a tuner output, not a hand-picked
+    default.  Deterministic: analytic model times only (measured cache
+    entries, when present, refine the underlying plans but the sweep itself
+    never wall-clocks).  Returns the decision record `launch.serve` logs at
+    startup: {"batch", "latency_budget_ms", "sweep": [...]}.
+    """
+    sweep = []
+    best = None
+    for b in candidates:
+        plans = plan_for_model(cfg, b, prefill_len=prefill_len, cache=cache)
+        step_us = predict_decode_step_us(cfg, b, cache_len=cache_len,
+                                         plans=plans)
+        tok_per_s = b / (step_us * 1e-6)
+        feasible = (latency_budget_ms is None
+                    or step_us <= latency_budget_ms * 1e3)
+        sweep.append({"batch": b, "step_us": step_us,
+                      "tok_per_s": tok_per_s, "feasible": feasible})
+        if feasible and (best is None or tok_per_s > best["tok_per_s"]):
+            best = sweep[-1]
+    if best is None:       # nothing met the budget: least-bad latency wins
+        best = min(sweep, key=lambda r: r["step_us"])
+    return {"batch": best["batch"],
+            "predicted_step_us": best["step_us"],
+            "predicted_tok_per_s": best["tok_per_s"],
+            "latency_budget_ms": latency_budget_ms,
+            "sweep": sweep}

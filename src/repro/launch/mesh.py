@@ -1,14 +1,45 @@
 """Production mesh construction.
 
 Defined as FUNCTIONS (not module constants) so importing this module never
-touches jax device state.
+touches jax device state.  The two jax API points that moved across the
+pinned-version boundary (``jax.sharding.AxisType``, ``jax.set_mesh``) are
+wrapped in compat helpers here so every caller imports cleanly on jax
+0.4.x and newer alike.
 """
 
 from __future__ import annotations
 
+import contextlib
 import math
 
 import jax
+
+
+def axis_types_kwargs(n_axes: int) -> dict:
+    """``{"axis_types": (Auto,) * n}`` where supported, ``{}`` otherwise.
+
+    ``jax.sharding.AxisType`` does not exist on older pinned jax versions
+    (e.g. 0.4.37), where every mesh axis is implicitly Auto — so omitting
+    the kwarg there is semantically identical, not a downgrade.
+    """
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return {}
+    return {"axis_types": (axis_type.Auto,) * n_axes}
+
+
+def set_mesh(mesh: jax.sharding.Mesh):
+    """Context manager installing ``mesh`` as the ambient mesh.
+
+    ``jax.set_mesh`` is the modern spelling; on jax versions predating it
+    the ``Mesh`` object itself is the context manager with the same scope
+    semantics.
+    """
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    if hasattr(jax.sharding, "use_mesh"):
+        return jax.sharding.use_mesh(mesh)
+    return contextlib.nullcontext(mesh) if mesh is None else mesh
 
 
 def _mesh(shape, axes) -> jax.sharding.Mesh:
@@ -18,9 +49,7 @@ def _mesh(shape, axes) -> jax.sharding.Mesh:
     devices = jax.devices()[:n]
     from jax.experimental import mesh_utils
     dmesh = mesh_utils.create_device_mesh(shape, devices=devices)
-    return jax.sharding.Mesh(
-        dmesh, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return jax.sharding.Mesh(dmesh, axes, **axis_types_kwargs(len(axes)))
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:

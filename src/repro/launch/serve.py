@@ -3,10 +3,15 @@
 Requests queue up; the server packs up to ``--batch`` sequences, prefills
 them (one forward), then decodes with the shared KV cache until each hits
 its stop length; finished slots are refilled from the queue (continuous
-batching).  Runs on CPU with smoke configs:
+batching).  ``--batch 0`` (the default) asks the autotuner for the batch:
+`autotune.select_serving_batch` sweeps candidate batch sizes against the
+cached kernel plans' predicted step time and picks the batch maximizing
+predicted decode throughput under ``--latency-budget-ms`` — the DSE loop
+driving a serving decision instead of a kernel tile.  Runs on CPU with
+smoke configs:
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3_14b --smoke \
-      --requests 6 --batch 2 --prompt-len 16 --gen 12
+      --requests 6 --prompt-len 16 --gen 12
 """
 
 from __future__ import annotations
@@ -22,7 +27,7 @@ import numpy as np
 import repro.configs as configs
 from repro.kernels import autotune
 from repro.launch import steps
-from repro.launch.mesh import make_host_mesh
+from repro.launch.mesh import make_host_mesh, set_mesh
 from repro.launch import specs
 from repro.models import transformer
 from repro.parallel import sharding as shd
@@ -30,14 +35,16 @@ from repro.parallel import sharding as shd
 
 class Server:
     def __init__(self, cfg, batch: int, max_len: int,
-                 autotune_kernels: bool = True):
+                 prefill_len: int = 0, autotune_kernels: bool = True):
         self.cfg = cfg
         self.batch = batch
         self.max_len = max_len
         # Close the DSE loop before taking traffic: pre-tune the decode-path
-        # matmul shapes so the kernel engine's cache is warm (analytic-only
-        # here — measurement happens offline / on first TPU run).
-        self.kernel_plan = (autotune.plan_for_model(cfg, batch)
+        # matmul shapes AND the prefill flash-attention shape so the kernel
+        # engine's cache is warm (analytic-only here — measurement happens
+        # offline / on first TPU run).
+        self.kernel_plan = (autotune.plan_for_model(cfg, batch,
+                                                    prefill_len=prefill_len)
                             if autotune_kernels else [])
         self.params = transformer.init(cfg, jax.random.PRNGKey(0),
                                        dtype=jnp.float32)
@@ -79,7 +86,14 @@ def main(argv=None):
                     choices=configs.list_archs())
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--requests", type=int, default=6)
-    ap.add_argument("--batch", type=int, default=2)
+    ap.add_argument("--batch", type=int, default=0,
+                    help="decode batch; 0 = let the autotuner pick "
+                         "(select_serving_batch sweep)")
+    ap.add_argument("--batch-candidates", type=int, nargs="+",
+                    default=[1, 2, 4, 8, 16, 32])
+    ap.add_argument("--latency-budget-ms", type=float, default=None,
+                    help="per-decode-step latency ceiling for the batch "
+                         "sweep (None = pure throughput)")
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--gen", type=int, default=12)
     args = ap.parse_args(argv)
@@ -90,18 +104,36 @@ def main(argv=None):
         return 0
     mesh = make_host_mesh(data=1, model=1)
     rules = specs.rules_for(mesh)
+    max_len = args.prompt_len + args.gen + 8
+
+    if args.batch > 0:
+        batch = args.batch
+        decision = {"batch": batch, "source": "flag"}
+    else:
+        # The tuner drives the batch: predicted-throughput argmax under the
+        # latency budget, from the same cached plans the kernels run with.
+        # Candidates beyond the queued workload are pointless (empty slots
+        # still pay the step), so cap the sweep at --requests.
+        cands = [c for c in args.batch_candidates if c <= args.requests]
+        cands = cands or [min(args.batch_candidates)]
+        decision = autotune.select_serving_batch(
+            cfg, cache_len=max_len, prefill_len=args.prompt_len,
+            candidates=tuple(cands),
+            latency_budget_ms=args.latency_budget_ms)
+        decision["source"] = "autotune"
+        batch = decision["batch"]
+    print(json.dumps({"serving_plan": decision}))
 
     rng = np.random.default_rng(0)
     queue = [(i, rng.integers(0, cfg.vocab_size, size=args.prompt_len),
               args.gen) for i in range(args.requests)]
-    max_len = args.prompt_len + args.gen + 8
 
-    with jax.set_mesh(mesh), shd.use_rules(rules):
-        server = Server(cfg, args.batch, max_len)
+    with set_mesh(mesh), shd.use_rules(rules):
+        server = Server(cfg, batch, max_len, prefill_len=args.prompt_len)
         t0 = time.time()
         completed, generated = 0, 0
         # initial fill
-        for slot in range(min(args.batch, len(queue))):
+        for slot in range(min(batch, len(queue))):
             rid, prompt, gen = queue.pop(0)
             server.prefill(slot, rid, prompt, gen)
         while completed < args.requests:
@@ -117,6 +149,7 @@ def main(argv=None):
 
     print(json.dumps({
         "arch": cfg.name, "requests": completed,
+        "batch": batch, "batch_source": decision["source"],
         "tokens_generated": generated,
         "wall_s": round(wall, 2),
         "tok_per_s": round(generated / wall, 1),

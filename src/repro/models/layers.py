@@ -168,6 +168,7 @@ def attention_apply(
     cache: Params | None = None,        # {"k","v": (B, S_cache, Hkv, dh)}
     index: jax.Array | None = None,     # decode write position (scalar)
     chunk_q: int | None = None,
+    prefill: bool = False,              # serving prefill (fwd-only, no grad)
 ) -> tuple[jax.Array, Params | None]:
     from repro.parallel.sharding import gather_weight
     b, s, _ = x.shape
@@ -199,10 +200,20 @@ def attention_apply(
     if cache is None:
         k = constrain(k, "batch", "seq", "kv_heads", None)
         v = constrain(v, "batch", "seq", "kv_heads", None)
-        out = attention_core(q, k, v, positions, positions, causal=cfg.causal,
-                             window=cfg.sliding_window, scale=scale,
-                             chunk_q=chunk_q, unroll=cfg.probe_unroll,
-                             remat_chunks=(cfg.remat == "full"))
+        if prefill and jax.default_backend() == "tpu":
+            # Serving prefill: the forward-only hot spot goes through the
+            # autotuned flash kernel (analytic plan at trace time — the
+            # cache was pre-warmed by `autotune.plan_for_model`).  Training
+            # keeps the differentiable jnp path below.
+            from repro.kernels.autotune import tuned_attention
+            out = tuned_attention(q, k, v, causal=cfg.causal,
+                                  window=cfg.sliding_window)
+        else:
+            out = attention_core(q, k, v, positions, positions,
+                                 causal=cfg.causal,
+                                 window=cfg.sliding_window, scale=scale,
+                                 chunk_q=chunk_q, unroll=cfg.probe_unroll,
+                                 remat_chunks=(cfg.remat == "full"))
         new_cache = None
     else:
         # Decode: write new K/V at `index` (ring buffer for SWA), attend over

@@ -14,6 +14,8 @@ Layer stacks always scan (compact HLO — a 94-layer model lowers to one loop).
 
 from __future__ import annotations
 
+import functools
+
 import jax
 import jax.numpy as jnp
 
@@ -50,7 +52,7 @@ def _layer_init(key, cfg: ModelConfig, l: int, dtype) -> Params:
 
 
 def _layer_apply(p: Params, x, cfg: ModelConfig, l: int, positions,
-                 cache: Params | None, index):
+                 cache: Params | None, index, prefill: bool = False):
     """Pre-norm block l.  Returns (x, new_cache, aux)."""
     aux = jnp.zeros((), jnp.float32)
     h = layers.rmsnorm(p["ln1"], x, cfg.norm_eps)
@@ -65,7 +67,8 @@ def _layer_apply(p: Params, x, cfg: ModelConfig, l: int, positions,
 
     if cfg.is_attn_layer(l):
         h, new_mix_cache = layers.attention_apply(
-            p["mixer"], h, cfg, positions, cache=cache, index=index)
+            p["mixer"], h, cfg, positions, cache=cache, index=index,
+            prefill=prefill)
     else:
         h, new_mix_cache = ssm.mamba_apply(p["mixer"], h, cfg, cache=cache)
     x = x + h
@@ -256,15 +259,20 @@ def forward(cfg: ModelConfig, params: Params, inputs: dict,
     blocks = params["blocks"]
     block_caches = cache["blocks"] if cache is not None else None
     decode = cache is not None
+    # Serving prefill (the `make_prefill_step` path: forward-only, no
+    # gradient) routes attention through the autotuned flash kernel; the
+    # flag stays a Python-level static so training keeps the jnp path.
+    prefill = last_only and cache is None
+    apply_fn = functools.partial(_layer_apply, prefill=prefill)
 
     if cfg.family == "hybrid":
         period = cfg.attn_period
         # Per-SUB-layer checkpointing: a period-8 Jamba group holds 7 mamba
         # layers whose scan inputs are large; rematting each sub-layer keeps
         # only one sub-layer's working set live during the group's backward.
-        lapply = (jax.checkpoint(_layer_apply, static_argnums=(2, 3),
+        lapply = (jax.checkpoint(apply_fn, static_argnums=(2, 3),
                                  prevent_cse=False)
-                  if cfg.remat == "full" and not decode else _layer_apply)
+                  if cfg.remat == "full" and not decode else apply_fn)
 
         def body(xx, gp, gc):
             new_gc = {}
@@ -280,7 +288,7 @@ def forward(cfg: ModelConfig, params: Params, inputs: dict,
     else:
 
         def body(xx, gp, gc):
-            xx, nc, aux = _layer_apply(gp, xx, cfg, 0, positions, gc, index)
+            xx, nc, aux = apply_fn(gp, xx, cfg, 0, positions, gc, index)
             return xx, (nc if decode else 0), aux
 
     if cfg.remat == "full":

@@ -243,6 +243,195 @@ def test_blocked_x_spmv_matches_ref_beyond_vmem_limit(cache):
                                atol=1e-4)
 
 
+# ---------------------------------------------------------------------------
+# attention tuning
+# ---------------------------------------------------------------------------
+
+def test_attention_ranking_deterministic_and_feasible():
+    r1 = dse.rank_attention_blocks(8, 1024, 1024, 128)
+    r2 = dse.rank_attention_blocks(8, 1024, 1024, 128)
+    assert [(c.detail["block_q"], c.detail["block_k"]) for c in r1] \
+        == [(c.detail["block_q"], c.detail["block_k"]) for c in r2]
+    scores = [c.score for c in r1]
+    assert scores == sorted(scores) and len(r1) >= 1
+    # every candidate's effective blocks divide the sequence
+    assert all(1024 % c.detail["block_q"] == 0
+               and 1024 % c.detail["block_k"] == 0 for c in r1)
+
+
+def test_attention_ranking_respects_vmem_budget():
+    """A budget that only fits the smallest blocks must exclude the rest,
+    and the kept candidates' modeled VMEM must fit."""
+    budget = 420 * 1024          # fits 128x128 f32 working set, not 512x512
+    ranked = dse.rank_attention_blocks(4, 1024, 1024, 64,
+                                       vmem_bytes=budget, dtype_bytes=4)
+    assert all(c.detail["vmem_bytes"] <= budget for c in ranked)
+    big = dse.rank_attention_blocks(4, 1024, 1024, 64, dtype_bytes=4)
+    assert max(c.detail["block_q"] for c in big) \
+        > max(c.detail["block_q"] for c in ranked)
+
+
+def test_attention_deeper_q_blocks_cut_kv_traffic():
+    """The communication-avoiding story: K/V re-streaming falls as block_q
+    grows, so the model must strictly prefer deeper q-blocks when VMEM
+    allows (same reason eq.2 pushes y up in the matmul)."""
+    from repro.core import cost_model
+    shallow = cost_model.attention_time_model(8, 4096, 4096, 128, 128, 512)
+    deep = cost_model.attention_time_model(8, 4096, 4096, 128, 1024, 512)
+    assert deep["traffic_bytes"] < shallow["traffic_bytes"]
+    assert deep["time_s"] <= shallow["time_s"]
+
+
+def test_attention_tie_break_survives_truncation():
+    """Compute-bound shapes tie many configs on model time; the deeper-
+    block_q preference must hold even at top=1 (the serving measure_k=0
+    path) — i.e. the tie-break runs before the top-cut, not after."""
+    top1 = dse.rank_attention_blocks(320, 2048, 2048, 128, top=1)[0]
+    full = dse.rank_attention_blocks(320, 2048, 2048, 128, top=32)
+    tied = [c for c in full if c.score == top1.score]
+    assert top1.detail["block_q"] == max(c.detail["block_q"] for c in tied)
+
+
+def test_attention_cache_miss_then_hit(cache):
+    p1 = autotune.tune_attention(8, 256, 256, 64, cache=cache, measure_k=0)
+    assert p1.source == "model"
+    p2 = autotune.tune_attention(8, 256, 256, 64, cache=cache, measure_k=0)
+    assert p2.source == "cache"
+    assert (p2.block_q, p2.block_k) == (p1.block_q, p1.block_k)
+    # persistence: a fresh cache object re-reads the same file
+    p3 = autotune.tune_attention(8, 256, 256, 64, measure_k=0,
+                                 cache=autotune.TuneCache(cache.path))
+    assert p3.source == "cache"
+
+
+def test_attention_model_entry_upgraded_by_measuring_caller(cache):
+    """Analytic-only plans written at serve startup must not suppress
+    measurement forever — same upgrade rule as matmul/SpMV."""
+    p1 = autotune.tune_attention(2, 128, 128, 32, cache=cache, measure_k=0)
+    assert p1.source == "model" and p1.measured_us is None
+    p2 = autotune.tune_attention(2, 128, 128, 32, cache=cache, measure_k=2)
+    assert p2.source == "measured" and p2.measured_us is not None
+    p3 = autotune.tune_attention(2, 128, 128, 32, cache=cache, measure_k=2)
+    assert p3.source == "cache" and p3.measured_us is not None
+
+
+def test_attention_key_separates_masking_and_shape(cache):
+    autotune.tune_attention(4, 256, 256, 64, cache=cache, measure_k=0)
+    p = autotune.tune_attention(4, 256, 256, 64, causal=False, cache=cache,
+                                measure_k=0)
+    assert p.source != "cache"       # causal flag is part of the key
+    p = autotune.tune_attention(4, 256, 256, 64, window=128, cache=cache,
+                                measure_k=0)
+    assert p.source != "cache"       # window is part of the key
+    p = autotune.tune_attention(4, 256, 512, 64, cache=cache, measure_k=0)
+    assert p.source != "cache"       # kv length is part of the key
+
+
+@pytest.mark.parametrize("causal,window,hq,hkv", [
+    (True, None, 4, 4),              # causal MHA
+    (True, 64, 4, 4),                # sliding window
+    (True, None, 4, 2),              # GQA
+    (False, None, 2, 2),             # bidirectional (encoder prefill)
+])
+def test_tuned_attention_matches_reference(cache, causal, window, hq, hkv):
+    from repro.kernels.attention import mha_attention
+    q = jax.random.normal(KEY, (2, 128, hq, 32), jnp.float32)
+    k = jax.random.normal(jax.random.PRNGKey(1), (2, 128, hkv, 32),
+                          jnp.float32)
+    v = jax.random.normal(jax.random.PRNGKey(2), (2, 128, hkv, 32),
+                          jnp.float32)
+    out = autotune.tuned_attention(q, k, v, causal=causal, window=window,
+                                   interpret=True, cache=cache)
+    ref = mha_attention(q, k, v, causal=causal, window=window,
+                        use_kernel=False)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_tuned_attention_oracle_path_skips_tuning(cache):
+    """CPU callers that never reach the kernel path must not pay (or write)
+    any tuning state — same contract as tuned_matmul/tuned_spmv."""
+    q = jax.random.normal(KEY, (1, 64, 2, 16), jnp.float32)
+    k = jax.random.normal(jax.random.PRNGKey(1), (1, 64, 2, 16), jnp.float32)
+    v = jax.random.normal(jax.random.PRNGKey(2), (1, 64, 2, 16), jnp.float32)
+    autotune.tuned_attention(q, k, v, use_kernel=False, cache=cache)
+    assert cache.hits == 0 and cache.misses == 0
+
+
+# ---------------------------------------------------------------------------
+# serving plans: all three kernel families + the batch sweep
+# ---------------------------------------------------------------------------
+
+def _serve_cfg():
+    from repro.models.config import ModelConfig
+    return ModelConfig(name="t", family="dense", num_layers=2, d_model=64,
+                       d_ff=128, vocab_size=256, num_heads=4, num_kv_heads=2)
+
+
+def test_plan_for_model_covers_attention(cache):
+    cfg = _serve_cfg()
+    plans = autotune.plan_for_model(cfg, 2, prefill_len=64, cache=cache)
+    ops = {p["op"] for p in plans}
+    assert {"qkv_proj", "out_proj", "ffn_up", "ffn_down", "logits",
+            "attn_prefill"} <= ops
+    attn = next(p for p in plans if p["op"] == "attn_prefill")
+    assert attn["bh_sq_sk_dh"] == [2 * cfg.num_heads, 64, 64, cfg.head_dim]
+    assert attn["block"][0] >= 1 and attn["model_time_us"] > 0
+    # attention plans ride the same cache pipeline: second call hits
+    plans2 = autotune.plan_for_model(cfg, 2, prefill_len=64, cache=cache)
+    attn2 = next(p for p in plans2 if p["op"] == "attn_prefill")
+    assert attn2["source"] == "cache" and attn2["block"] == attn["block"]
+
+
+def test_select_serving_batch_deterministic(cache):
+    cfg = _serve_cfg()
+    kw = dict(cache_len=128, prefill_len=64, candidates=(1, 2, 4, 8),
+              cache=cache)
+    d1 = autotune.select_serving_batch(cfg, **kw)
+    d2 = autotune.select_serving_batch(cfg, **kw)
+    assert d1 == d2                          # cache hits change nothing
+    assert [r["batch"] for r in d1["sweep"]] == [1, 2, 4, 8]
+    assert all(r["step_us"] > 0 for r in d1["sweep"])
+    # predicted step time is monotone in batch (more work per step)
+    steps = [r["step_us"] for r in d1["sweep"]]
+    assert steps == sorted(steps)
+
+
+def test_select_serving_batch_maximizes_predicted_throughput(cache):
+    cfg = _serve_cfg()
+    d = autotune.select_serving_batch(cfg, cache_len=128, prefill_len=64,
+                                      candidates=(1, 2, 4, 8), cache=cache)
+    best = max(d["sweep"], key=lambda r: r["tok_per_s"])
+    assert d["batch"] == best["batch"]
+    assert d["predicted_tok_per_s"] == best["tok_per_s"]
+
+
+def test_select_serving_batch_respects_latency_budget(cache):
+    cfg = _serve_cfg()
+    free = autotune.select_serving_batch(cfg, cache_len=128, prefill_len=64,
+                                         candidates=(1, 2, 4, 8), cache=cache)
+    # budget set just under the unconstrained winner's step time forces a
+    # smaller batch
+    budget_ms = free["predicted_step_us"] * 0.99 / 1e3
+    capped = autotune.select_serving_batch(
+        cfg, cache_len=128, prefill_len=64, candidates=(1, 2, 4, 8),
+        latency_budget_ms=budget_ms, cache=cache)
+    assert capped["batch"] < free["batch"]
+    assert capped["predicted_step_us"] <= budget_ms * 1e3
+    # impossible budget: least-bad latency fallback, not a crash
+    floor = autotune.select_serving_batch(
+        cfg, cache_len=128, prefill_len=64, candidates=(1, 2, 4, 8),
+        latency_budget_ms=1e-9, cache=cache)
+    assert floor["batch"] == 1
+
+
+def test_decode_matmul_traffic_has_weight_floor():
+    """comm_volume_rect must charge at least one full pass over B even when
+    m << tile.y — the weight-bound decode regime the batch sweep ranks."""
+    t = tiling.Tile(128, 128, 128)
+    assert tiling.comm_volume_rect(4, 512, 512, t) >= 512 * 512
+
+
 @pytest.mark.parametrize("block_cols", [128, 256, 1024])
 def test_blocked_x_slab_sweep(block_cols):
     rng = np.random.default_rng(8)

@@ -1,0 +1,19 @@
+"""Docs hygiene (same invariants the CI docs job enforces via
+tools/check_docs.py): no broken relative links, and the ARCHITECTURE.md
+module map covers every src/repro module."""
+
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent
+                       / "tools"))
+
+import check_docs  # noqa: E402
+
+
+def test_no_broken_relative_links():
+    assert check_docs.check_links() == []
+
+
+def test_architecture_map_covers_every_module():
+    assert check_docs.check_architecture_coverage() == []

@@ -1,0 +1,85 @@
+#!/usr/bin/env python
+"""Docs hygiene checker, run by the CI docs job (and tests/test_docs.py).
+
+Two invariants:
+
+1. **No broken relative links.**  Every markdown link/image target in
+   `docs/*.md` and the repo-root markdown files that points at a local path
+   must resolve (anchors and external URLs are skipped).
+2. **The architecture map is complete.**  Every module under `src/repro/**`
+   (every ``.py`` except ``__init__.py``) must be mentioned by its
+   package-relative path (e.g. ``core/dse.py``) in
+   ``docs/ARCHITECTURE.md`` — so the map cannot silently rot as the tree
+   grows.
+
+Exit code 0 = clean; 1 = problems (listed one per line).
+"""
+
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+
+# [text](target) and ![alt](target); target up to the first closing paren
+# (markdown titles like `(path "title")` are split off below).
+_LINK_RE = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+_EXTERNAL = ("http://", "https://", "mailto:", "ftp://")
+
+
+def doc_files() -> list[pathlib.Path]:
+    return sorted(REPO.glob("*.md")) + sorted((REPO / "docs").glob("*.md"))
+
+
+def check_links() -> list[str]:
+    problems = []
+    for md in doc_files():
+        text = md.read_text()
+        # Fenced code blocks hold example syntax, not navigable links.
+        text = re.sub(r"```.*?```", "", text, flags=re.S)
+        for target in _LINK_RE.findall(text):
+            if target.startswith(_EXTERNAL) or target.startswith("#"):
+                continue
+            path = target.split("#", 1)[0]
+            if not path:
+                continue
+            resolved = (md.parent / path).resolve()
+            if not resolved.exists():
+                problems.append(
+                    f"{md.relative_to(REPO)}: broken relative link "
+                    f"-> {target}")
+    return problems
+
+
+def check_architecture_coverage() -> list[str]:
+    arch = REPO / "docs" / "ARCHITECTURE.md"
+    if not arch.exists():
+        return ["docs/ARCHITECTURE.md is missing"]
+    text = arch.read_text()
+    problems = []
+    for py in sorted((REPO / "src" / "repro").rglob("*.py")):
+        if py.name == "__init__.py":
+            continue
+        rel = py.relative_to(REPO / "src" / "repro").as_posix()
+        if rel not in text:
+            problems.append(
+                f"docs/ARCHITECTURE.md: module not in the map -> {rel}")
+    return problems
+
+
+def main() -> int:
+    problems = check_links() + check_architecture_coverage()
+    for p in problems:
+        print(p)
+    if problems:
+        print(f"{len(problems)} docs problem(s)", file=sys.stderr)
+        return 1
+    print(f"docs OK: {len(doc_files())} files linked, architecture map "
+          f"covers src/repro")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
