@@ -31,6 +31,17 @@ PREFILL_POINTS = [
 FIXED_BLOCK = 512           # mha_attention's pre-engine default
 
 
+def _interleaved_best_us(thunks: dict, reps: int, trials: int) -> dict:
+    """Best-of-``trials`` wall time per config, measured interleaved so
+    machine drift hits all configs alike (the table1 timing discipline).
+    ``thunks``: {key: zero-arg callable returning a jax array}."""
+    slots = {key: float("inf") for key in thunks}
+    for _ in range(trials):
+        for key, fn in thunks.items():
+            slots[key] = min(slots[key], autotune.measure(fn, reps=reps))
+    return slots
+
+
 def prefill_shapes():
     out = []
     for arch, batch, prompt in PREFILL_POINTS:
@@ -58,13 +69,14 @@ def tuned_vs_fixed():
         fq = min(FIXED_BLOCK, s["sq"])
         fk = min(FIXED_BLOCK, s["sk"])
         fixed = cost_model.attention_time_model(
-            s["bh"], s["sq"], s["sk"], s["dh"], fq, fk, causal=s["causal"])
+            s["bh"], s["sq"], s["sk"], s["dh"], fq, fk, causal=s["causal"],
+            window=s["window"])
         plan = autotune.tune_attention(
             s["bh"], s["sq"], s["sk"], s["dh"], jnp.bfloat16,
             causal=s["causal"], window=s["window"])
         tuned = cost_model.attention_time_model(
             s["bh"], s["sq"], s["sk"], s["dh"], plan.block_q, plan.block_k,
-            causal=s["causal"])
+            causal=s["causal"], window=s["window"])
         recs.append({
             "arch": s["arch"], "batch": s["batch"], "prompt": s["prompt"],
             "shape": [s["bh"], s["sq"], s["sk"], s["dh"]],
@@ -77,6 +89,93 @@ def tuned_vs_fixed():
             "speedup_model": fixed["time_s"] / tuned["time_s"],
         })
     return recs
+
+
+def causal_skip_measured(bh: int = 2, seq: int = 1024, dh: int = 32,
+                         block_q: int = 128, block_k: int = 128,
+                         reps: int = 3, trials: int = 3):
+    """Block-skipping vs dense execution of the causal kernel at the SAME
+    (block_q, block_k) — the tentpole's perf claim, recorded two ways:
+
+    * ``kstep_speedup``: dense grid block pairs / active block pairs
+      (`cost_model.attention_active_block_pairs`) — the exact count of
+      K-steps the kernel streams and multiplies, deterministic on any
+      backend (>= 1.5x for >= 3 q-blocks, ~2x asymptotically at sq=sk);
+    * ``wall_speedup``: interleaved best-of-``trials`` wall-clock of the
+      two kernels (interpret mode off-TPU, so grid overhead dilutes it —
+      the K-step count is the load-bearing number there).
+    """
+    interpret = jax.default_backend() != "tpu"
+    scale = 1.0 / (dh ** 0.5)
+    q = jax.random.normal(jax.random.PRNGKey(0), (bh, seq, dh), jnp.float32)
+    k = jax.random.normal(jax.random.PRNGKey(1), (bh, seq, dh), jnp.float32)
+    v = jax.random.normal(jax.random.PRNGKey(2), (bh, seq, dh), jnp.float32)
+
+    slots = _interleaved_best_us({
+        skip: (lambda skip=skip: attn_kernel.flash_attention(
+            q, k, v, scale=scale, causal=True, block_q=block_q,
+            block_k=block_k, interpret=interpret, block_skipping=skip))
+        for skip in (True, False)}, reps, trials)
+
+    active, total = cost_model.attention_active_block_pairs(
+        seq, seq, block_q, block_k, causal=True)
+    return {
+        "shape": [bh, seq, seq, dh],
+        "block": [block_q, block_k],
+        "k_steps_dense": total,
+        "k_steps_skip": active,
+        "kstep_speedup": total / active,
+        "skip_us": slots[True],
+        "dense_us": slots[False],
+        "wall_speedup": slots[False] / slots[True],
+        "interpret": interpret,
+    }
+
+
+def decode_step_measured(b: int = 2, hq: int = 8, hkv: int = 2,
+                         dh: int = 64, cache_len: int = 1024,
+                         length: int | None = None,
+                         reps: int = 3, trials: int = 3):
+    """One fused decode-attention step: tuned block_k vs the fixed (512)
+    default, wall-clocked where feasible — the decode analogue of the
+    tuned-vs-fixed prefill rows.  ``length`` defaults to a ragged 3/4 of
+    the cache so the tail over-fetch the tuner prices actually occurs."""
+    from repro.kernels.attention import decode as attn_decode
+
+    interpret = jax.default_backend() != "tpu"
+    if length is None:
+        length = cache_len * 3 // 4 + 1          # ragged on purpose
+    g = hq // hkv
+    plan = autotune.tune_decode(b * hkv, g, cache_len, dh, jnp.float32)
+    fixed_bk = min(FIXED_BLOCK, cache_len)
+    scale = 1.0 / (dh ** 0.5)
+    q = jax.random.normal(jax.random.PRNGKey(0), (b * hkv, g, dh),
+                          jnp.float32)
+    k = jax.random.normal(jax.random.PRNGKey(1), (b * hkv, cache_len, dh),
+                          jnp.float32)
+    v = jax.random.normal(jax.random.PRNGKey(2), (b * hkv, cache_len, dh),
+                          jnp.float32)
+
+    slots = _interleaved_best_us({
+        bk: (lambda bk=bk: attn_decode.decode_attention(
+            q, k, v, scale=scale, length=length, block_k=bk,
+            interpret=interpret))
+        for bk in {plan.block_k, fixed_bk}}, reps, trials)
+
+    model = cost_model.decode_time_model(b * hkv, g, cache_len, dh,
+                                         plan.block_k)
+    return {
+        "shape": [b * hkv, g, cache_len, dh],
+        "length": length,
+        "tuned_block_k": plan.block_k,
+        "tuned_source": plan.source,
+        "tuned_us": slots[plan.block_k],
+        "fixed_block_k": fixed_bk,
+        "fixed_us": slots[fixed_bk],
+        "speedup_vs_fixed": slots[fixed_bk] / slots[plan.block_k],
+        "model_time_us": model["time_s"] * 1e6,
+        "interpret": interpret,
+    }
 
 
 def tuned_vs_fixed_measured(bh: int = 4, seq: int = 256, dh: int = 32,
@@ -93,15 +192,11 @@ def tuned_vs_fixed_measured(bh: int = 4, seq: int = 256, dh: int = 32,
     k = jax.random.normal(jax.random.PRNGKey(1), (bh, seq, dh), jnp.float32)
     v = jax.random.normal(jax.random.PRNGKey(2), (bh, seq, dh), jnp.float32)
 
-    slots = {(plan.block_q, plan.block_k): float("inf"),
-             fixed: float("inf")}
-    for _ in range(trials):
-        for (bq, bk) in slots:
-            slots[(bq, bk)] = min(slots[(bq, bk)], autotune.measure(
-                lambda bq=bq, bk=bk: attn_kernel.flash_attention(
-                    q, k, v, scale=scale, causal=True,
-                    block_q=bq, block_k=bk, interpret=interpret),
-                reps=reps))
+    slots = _interleaved_best_us({
+        (bq, bk): (lambda bq=bq, bk=bk: attn_kernel.flash_attention(
+            q, k, v, scale=scale, causal=True, block_q=bq, block_k=bk,
+            interpret=interpret))
+        for (bq, bk) in {(plan.block_q, plan.block_k), fixed}}, reps, trials)
 
     tuned_us = slots[(plan.block_q, plan.block_k)]
     return {
@@ -116,7 +211,7 @@ def tuned_vs_fixed_measured(bh: int = 4, seq: int = 256, dh: int = 32,
     }
 
 
-def main(tuned_recs=None, measured_rec=None):
+def main(tuned_recs=None, measured_rec=None, skip_rec=None, decode_rec=None):
     lines = []
     for r in (tuned_recs if tuned_recs is not None else tuned_vs_fixed()):
         bh, sq, sk, dh = r["shape"]
@@ -131,6 +226,18 @@ def main(tuned_recs=None, measured_rec=None):
         f"{m['tuned_us']:.1f},"
         f"speedup_vs_fixed={m['speedup_vs_fixed']:.3f};"
         f"block={m['tuned_block'][0]}/{m['tuned_block'][1]}")
+    s = skip_rec if skip_rec is not None else causal_skip_measured()
+    lines.append(
+        f"attn.causal_skip_s{s['shape'][1]},{s['skip_us']:.1f},"
+        f"kstep_speedup={s['kstep_speedup']:.3f};"
+        f"wall_speedup={s['wall_speedup']:.3f};"
+        f"block={s['block'][0]}/{s['block'][1]}")
+    d = decode_rec if decode_rec is not None else decode_step_measured()
+    lines.append(
+        f"attn.decode_bkv{d['shape'][0]}_l{d['shape'][2]},"
+        f"{d['tuned_us']:.1f},"
+        f"speedup_vs_fixed={d['speedup_vs_fixed']:.3f};"
+        f"block_k={d['tuned_block_k']};src={d['tuned_source']}")
     return lines
 
 

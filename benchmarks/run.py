@@ -21,13 +21,25 @@ import platform
 import tempfile
 
 
-def kernel_report(tuned_recs=None, attn_recs=None, attn_measured=None) -> dict:
+BENCH_SCHEMA = 3
+
+# --smoke shrinks the wall-clocked shapes so the whole run (plus the
+# schema check in tools/check_bench.py) fits a CI smoke job; every report
+# key and derived row is still produced.
+SMOKE_ATTN_MEASURED = dict(bh=2, seq=128, dh=32, reps=2, trials=2)
+SMOKE_CAUSAL_SKIP = dict(bh=1, seq=256, dh=32, block_q=64, block_k=64,
+                         reps=2, trials=2)
+SMOKE_DECODE = dict(b=1, hq=4, hkv=2, dh=32, cache_len=256, reps=2, trials=2)
+
+
+def kernel_report(tuned_recs=None, attn_recs=None, attn_measured=None,
+                  attn_skip=None, attn_decode=None) -> dict:
     import jax
 
     from benchmarks import attention_prefill, table1_matmul, table2_spmv
 
     return {
-        "schema": 2,
+        "schema": BENCH_SCHEMA,
         "backend": jax.default_backend(),
         "host": platform.machine(),
         "matmul_tuned_vs_fixed": (tuned_recs if tuned_recs is not None
@@ -40,6 +52,12 @@ def kernel_report(tuned_recs=None, attn_recs=None, attn_measured=None) -> dict:
         "attention_measured": (
             attn_measured if attn_measured is not None
             else attention_prefill.tuned_vs_fixed_measured()),
+        "attention_causal_skip": (
+            attn_skip if attn_skip is not None
+            else attention_prefill.causal_skip_measured()),
+        "attention_decode": (
+            attn_decode if attn_decode is not None
+            else attention_prefill.decode_step_measured()),
     }
 
 
@@ -48,6 +66,9 @@ def main(argv=None) -> None:
     ap.add_argument("--out", default="BENCH_kernels.json",
                     help="path for the machine-readable kernel report")
     ap.add_argument("--skip-json", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="small wall-clocked shapes for the CI smoke job "
+                         "(full schema, reduced measurement cost)")
     args = ap.parse_args(argv)
 
     # The report must reflect the code under benchmark, not whatever an
@@ -63,11 +84,17 @@ def main(argv=None) -> None:
     # Tune/measure once; the CSV pass and the JSON report share the records.
     tuned_recs = table1_matmul.tuned_vs_fixed()
     attn_recs = attention_prefill.tuned_vs_fixed()
-    attn_measured = attention_prefill.tuned_vs_fixed_measured()
+    attn_measured = attention_prefill.tuned_vs_fixed_measured(
+        **(SMOKE_ATTN_MEASURED if args.smoke else {}))
+    attn_skip = attention_prefill.causal_skip_measured(
+        **(SMOKE_CAUSAL_SKIP if args.smoke else {}))
+    attn_decode = attention_prefill.decode_step_measured(
+        **(SMOKE_DECODE if args.smoke else {}))
     lines: list[str] = []
     lines += table1_matmul.main(tuned_recs)
     lines += table2_spmv.main()
-    lines += attention_prefill.main(attn_recs, attn_measured)
+    lines += attention_prefill.main(attn_recs, attn_measured, attn_skip,
+                                    attn_decode)
     lines += bandwidth_extrapolation.main()
     try:
         lines += roofline_report.main()
@@ -78,7 +105,8 @@ def main(argv=None) -> None:
         print(ln)
 
     if not args.skip_json:
-        report = kernel_report(tuned_recs, attn_recs, attn_measured)
+        report = kernel_report(tuned_recs, attn_recs, attn_measured,
+                               attn_skip, attn_decode)
         with open(args.out, "w") as f:
             json.dump(report, f, indent=1, sort_keys=True)
         print(f"# wrote {args.out}")

@@ -136,40 +136,109 @@ def matmul_time_model(
     }
 
 
+def attention_step_bounds(
+    i: int, block_q: int, block_k: int, k_steps: int,
+    causal: bool = True, window: int | None = None,
+) -> tuple[int, int]:
+    """[first, last] K-step bounds for q-block ``i`` under the causal /
+    sliding-window mask — the block-level skip law shared by the kernel
+    (grid sizing + in-kernel guards) and the cost model (skip credit).
+
+    A K-block j is *active* iff some (q, k) pair inside the
+    (block_q, block_k) tile survives the mask: causal caps ``last`` at the
+    block holding the deepest row's diagonal, the window floors ``first``
+    at the block still inside the band of the shallowest row.
+    """
+    q_lo, q_hi = i * block_q, (i + 1) * block_q - 1
+    last = k_steps - 1
+    if causal:
+        last = min(last, q_hi // block_k)
+    first = 0
+    if window is not None:
+        # active iff the block's deepest k reaches past q_lo - window
+        first = max(0, (q_lo - window + 1) // block_k)
+    return min(first, last), last
+
+
+def attention_active_block_pairs(
+    sq: int, sk: int, block_q: int, block_k: int,
+    causal: bool = True, window: int | None = None,
+) -> tuple[int, int]:
+    """(active, total) (q_block, k_block) pair counts for the mask — the
+    fetched-vs-active accounting of the block-skipping flash kernel.
+    ``total`` is the dense grid the non-skipping kernel executes; the
+    skipping kernel streams and multiplies only ``active`` pairs
+    (causal ≈ triangle, window ≈ band)."""
+    q_blocks = max(1, -(-sq // block_q))
+    k_steps = max(1, -(-sk // block_k))
+    active = 0
+    for i in range(q_blocks):
+        first, last = attention_step_bounds(i, block_q, block_k, k_steps,
+                                            causal=causal, window=window)
+        active += last - first + 1
+    return active, q_blocks * k_steps
+
+
+def attention_max_k_steps(
+    sq: int, sk: int, block_q: int, block_k: int,
+    causal: bool = True, window: int | None = None,
+) -> int:
+    """Tightest static grid depth over the K axis: the widest per-q-block
+    active range.  Causal prefill at sq=sk keeps the full depth (the last
+    row needs every block); a sliding window shrinks it to ~window/block_k."""
+    q_blocks = max(1, -(-sq // block_q))
+    k_steps = max(1, -(-sk // block_k))
+    widest = 1
+    for i in range(q_blocks):
+        first, last = attention_step_bounds(i, block_q, block_k, k_steps,
+                                            causal=causal, window=window)
+        widest = max(widest, last - first + 1)
+    return widest
+
+
 def attention_time_model(
     bh: int, sq: int, sk: int, dh: int,
     block_q: int, block_k: int,
     causal: bool = True,
+    window: int | None = None,
     chip: hardware.Chip = hardware.TPU_V5E,
     dtype_bytes: int = 2,
+    block_skipping: bool = True,
 ) -> dict:
     """Roofline model of the flash-attention forward kernel for the tuner's
     candidate ranking — the communication-avoiding analysis of the
     (block_q, block_k) tile space.
 
-    Kernel shape (kernels/attention/kernel.py): grid (bh, sq/bq, sk/bk),
+    Kernel shape (kernels/attention/kernel.py): grid (bh, sq/bq, K-depth),
     Q/O blocks revisit across the k axis so Q is fetched and O written once,
-    while every q-row-block re-streams all of K and V:
+    while each q-row-block streams its *active* K/V blocks
+    (`attention_active_block_pairs`):
 
-        traffic = 2*bh*sq*dh  +  2*bh*sk*dh * ceil(sq/block_q)
+        traffic = 2*bh*sq*dh  +  2*bh*active*block_k*dh
+        flops   = 4*bh*active*block_q*block_k*dh
 
-    — the matmul eq.2 story again: K/V re-streaming falls as block_q grows,
-    so the tuner pushes block_q as deep as the VMEM budget allows.  block_k
-    does not change traffic (double-buffered streams hide its depth) but
-    bounds the (block_q, block_k) logits working set.
+    Dense (no mask, or ``block_skipping=False``) this reduces to the old
+    every-block accounting: active = ceil(sq/bq) * ceil(sk/bk).  With the
+    causal mask the active set is the block triangle (~half the traffic and
+    FLOPs at sq=sk); a sliding window keeps only the block band.  K/V
+    re-streaming still falls as block_q grows (the matmul eq.2 story), but
+    coarser q-blocks also cover more masked area — the model now prices
+    that tension instead of ignoring the mask.
 
     VMEM: double-buffered Q/K/V input blocks + the O block, the f32 online-
     softmax scratch (m, l: block_q x 1; acc: block_q x dh), and the f32
     logits/probs intermediates (block_q x block_k each).
-
-    ``causal`` does not reduce traffic or compute here — the kernel visits
-    every (i, j) block and masks — it is recorded so a future block-skipping
-    kernel can claim its ~2x without a cache-schema change.
     """
-    q_blocks = max(1, -(-sq // block_q))
-    flops = 4.0 * bh * sq * sk * dh          # QK^T + PV, both 2*mnk
+    if block_skipping:
+        active, total = attention_active_block_pairs(
+            sq, sk, block_q, block_k, causal=causal, window=window)
+    else:
+        q_blocks = max(1, -(-sq // block_q))
+        k_steps = max(1, -(-sk // block_k))
+        active = total = q_blocks * k_steps
+    flops = 4.0 * bh * active * block_q * block_k * dh   # QK^T + PV
     qo_bytes = 2.0 * bh * sq * dh * dtype_bytes
-    kv_bytes = 2.0 * bh * sk * dh * dtype_bytes * q_blocks
+    kv_bytes = 2.0 * bh * active * block_k * dh * dtype_bytes
     memory_s = (qo_bytes + kv_bytes) / chip.hbm_bw
     compute_s = flops / chip.peak_flops
     total_s = max(compute_s, memory_s)
@@ -188,6 +257,55 @@ def attention_time_model(
         "time_s": total_s,
         "gflops": flops / total_s / 1e9,
         "causal": causal,
+        "window": window,
+        "active_block_pairs": active,
+        "total_block_pairs": total,
+        "skip_fraction": 1.0 - active / total if total else 0.0,
+    }
+
+
+def decode_time_model(
+    bkv: int, g: int, kv_len: int, dh: int,
+    block_k: int,
+    chip: hardware.Chip = hardware.TPU_V5E,
+    dtype_bytes: int = 2,
+) -> dict:
+    """Bandwidth model of the fused decode-attention kernel
+    (kernels/attention/decode.py) for the tuner's candidate ranking.
+
+    One generated token attends over the KV cache: ``bkv = batch*kv_heads``
+    folded rows, each carrying its ``g = heads/kv_heads`` GQA query group
+    as the q-row axis.  The kernel streams ceil(kv_len/block_k) K/V blocks
+    per row — the decode hot loop's memory floor — so the fetched volume is
+    the block-rounded cache, and ``waste`` is the same fetched-vs-active
+    metric the SpMV load-balance model charges: a coarse block_k over-
+    fetches the ragged tail, a fine one adds grid steps for free traffic.
+    """
+    k_steps = max(1, -(-max(kv_len, 1) // block_k))
+    fetched = k_steps * block_k              # block-rounded cache stream
+    kv_bytes = 2.0 * bkv * fetched * dh * dtype_bytes
+    qo_bytes = 2.0 * bkv * g * dh * dtype_bytes
+    flops = 4.0 * bkv * g * fetched * dh     # qK^T + pV over fetched blocks
+    memory_s = (kv_bytes + qo_bytes) / chip.hbm_bw
+    compute_s = flops / chip.peak_flops
+    total_s = max(compute_s, memory_s)
+    vmem_bytes = (
+        2 * 2 * block_k * dh * dtype_bytes   # double-buffered K/V blocks
+        + 2 * g * dh * dtype_bytes           # q + o rows
+        + (2 * g + g * dh) * 4               # m, l, acc scratch
+        + 2 * g * block_k * 4                # s, p intermediates
+    )
+    return {
+        "flops": flops,
+        "traffic_bytes": kv_bytes + qo_bytes,
+        "vmem_bytes": vmem_bytes,
+        "compute_s": compute_s,
+        "memory_s": memory_s,
+        "time_s": total_s,
+        "gflops": flops / total_s / 1e9,
+        "fetched_k": fetched,
+        "active_k": min(kv_len, fetched),
+        "waste": fetched / max(kv_len, 1),
     }
 
 

@@ -124,44 +124,46 @@ def rank_attention_blocks(
     vmem_bytes: int | None = None,
     dtype_bytes: int = 2,
     causal: bool = True,
+    window: int | None = None,
     block_cands: Sequence[int] = (128, 256, 512, 1024),
     top: int = 8,
 ) -> list[Candidate]:
     """Sweep (block_q, block_k) pairs for the flash-attention kernel; score
     with `cost_model.attention_time_model` under the VMEM budget.
 
-    The kernel clamps blocks to the sequence (``min(block, s)``) and then
-    requires the clamped block to divide it, so candidates are enumerated in
-    *effective* block space and deduped — a 64-token prefill collapses every
-    block_q candidate onto 64.  Ranking is deterministic: model time with
-    (block_q, block_k) as the tie-break, descending block_q preferred on
-    ties (deeper q-blocks also help a future block-skipping causal kernel).
-    Each ``Candidate.detail`` carries the effective blocks plus the model
-    row.  Never returns empty: if the budget rejects everything, the
-    smallest legal pair is scored and returned anyway (the kernel itself is
-    the final arbiter on real VMEM).
+    The kernel clamps blocks to the sequence (``min(block, s)``) and pads
+    ragged remainders, so candidates are enumerated in *effective* block
+    space and deduped — a 64-token prefill collapses every block_q
+    candidate onto 64.  The mask enters the score: with block skipping the
+    model credits the causal triangle / window band, so the ranking trades
+    deeper q-blocks (less K/V re-streaming) against coarser masked-area
+    coverage instead of assuming every block runs.  Ranking is
+    deterministic: model time with (block_q, block_k) as the tie-break,
+    descending block_q preferred on ties.  Each ``Candidate.detail``
+    carries the effective blocks plus the model row.  Never returns empty:
+    if the budget rejects everything, the smallest legal pair is scored and
+    returned anyway (the kernel itself is the final arbiter on real VMEM).
     """
     chip = hardware.TPU_V5E
     budget = vmem_bytes if vmem_bytes is not None else chip.usable_vmem()
 
+    # The kernel pads ragged remainders (and masks the tail), so candidates
+    # need not divide the sequence — enumerate effective (clamped) blocks
+    # and dedupe; a 64-token prefill still collapses onto a single pair.
     pairs = []
     seen = set()
     for bq in block_cands:
         for bk in block_cands:
             ebq, ebk = min(bq, sq), min(bk, sk)
-            if sq % ebq or sk % ebk or (ebq, ebk) in seen:
+            if (ebq, ebk) in seen:
                 continue
             seen.add((ebq, ebk))
             pairs.append({"block_q": ebq, "block_k": ebk})
-    if not pairs:
-        # No aligned candidate divides the (odd) sequence; the whole-sequence
-        # block is always legal for the kernel's divisibility assert.
-        pairs.append({"block_q": sq, "block_k": sk})
 
     def evaluate(knobs: dict) -> tuple[float, dict]:
         res = cost_model.attention_time_model(
             bh, sq, sk, dh, knobs["block_q"], knobs["block_k"],
-            causal=causal, dtype_bytes=dtype_bytes)
+            causal=causal, window=window, dtype_bytes=dtype_bytes)
         if res["vmem_bytes"] > budget:
             return float("inf"), {}
         return res["time_s"], {**knobs, **res}
@@ -177,8 +179,53 @@ def rank_attention_blocks(
         knobs = min(pairs, key=lambda p: (p["block_q"], p["block_k"]))
         res = cost_model.attention_time_model(
             bh, sq, sk, dh, knobs["block_q"], knobs["block_k"],
-            causal=causal, dtype_bytes=dtype_bytes)
+            causal=causal, window=window, dtype_bytes=dtype_bytes)
         ranked = [Candidate(knobs, res["time_s"], {**knobs, **res})]
+    return ranked[:top]
+
+
+def rank_decode_blocks(
+    bkv: int, g: int, kv_len: int, dh: int,
+    vmem_bytes: int | None = None,
+    dtype_bytes: int = 2,
+    block_cands: Sequence[int] = (128, 256, 512, 1024, 2048),
+    top: int = 8,
+) -> list[Candidate]:
+    """Sweep block_k for the fused decode-attention kernel
+    (kernels/attention/decode.py); score with
+    `cost_model.decode_time_model` under the VMEM budget.
+
+    ``bkv = batch*kv_heads`` folded rows, ``g`` the GQA query group riding
+    each row, ``kv_len`` the KV-cache depth the server allocated.  The knob
+    trades tail over-fetch (coarse block_k rounds the cache up) against
+    grid-step count; ranking is deterministic — model time, then *larger*
+    block_k on ties (fewer grid steps for the same traffic).  Never empty:
+    the smallest candidate is scored unconditionally if the budget rejects
+    everything (the kernel is the final arbiter on real VMEM).
+    """
+    chip = hardware.TPU_V5E
+    budget = vmem_bytes if vmem_bytes is not None else chip.usable_vmem()
+
+    cands = sorted({min(bk, max(kv_len, 1)) for bk in block_cands})
+
+    def evaluate(knobs: dict) -> tuple[float, dict]:
+        res = cost_model.decode_time_model(bkv, g, kv_len, dh,
+                                           knobs["block_k"],
+                                           dtype_bytes=dtype_bytes)
+        if res["vmem_bytes"] > budget:
+            return float("inf"), {}
+        return res["time_s"], {**knobs, **res}
+
+    ranked = explore([{"block_k": bk} for bk in cands], evaluate,
+                     top=len(cands))
+    ranked = [c for c in ranked if c.detail and "block_k" in c.detail]
+    ranked.sort(key=lambda c: (c.score, -c.detail["block_k"]))
+    if not ranked:
+        bk = cands[0]
+        res = cost_model.decode_time_model(bkv, g, kv_len, dh, bk,
+                                           dtype_bytes=dtype_bytes)
+        ranked = [Candidate({"block_k": bk}, res["time_s"],
+                            {"block_k": bk, **res})]
     return ranked[:top]
 
 

@@ -4,9 +4,9 @@
 - spmv/      — paper §V-B: nnz-balanced ELL sparse matvec (+ blocked-x)
 - attention/ — flash attention (prefill hot spot; beyond-paper)
 - autotune   — DSE -> measure -> cache engine; `tuned_matmul`/`tuned_spmv`/
-               `tuned_attention` are the entry points production paths
-               should call.  `select_serving_batch` lifts the same loop to
-               the serving-batch knob.
+               `tuned_attention`/`tuned_decode` are the entry points
+               production paths should call.  `select_serving_batch` lifts
+               the same loop to the serving-batch knob.
 
 Each kernel dir has kernel.py (pl.pallas_call + BlockSpec), ops.py (jitted
 wrapper with backend dispatch), ref.py (pure-jnp oracle).  Tests sweep
@@ -14,5 +14,6 @@ shapes/dtypes in interpret mode against the oracles.
 """
 
 from repro.kernels.autotune import (select_serving_batch, tune_attention,
-                                    tune_matmul, tune_spmv, tuned_attention,
+                                    tune_decode, tune_matmul, tune_spmv,
+                                    tuned_attention, tuned_decode,
                                     tuned_matmul, tuned_spmv)  # noqa: F401

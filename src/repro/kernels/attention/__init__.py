@@ -1,1 +1,3 @@
 from repro.kernels.attention.ops import mha_attention  # noqa: F401
+from repro.kernels.attention.decode import (decode_ref,
+                                            gqa_decode_attention)  # noqa: F401

@@ -1,0 +1,171 @@
+"""Fused single-query decode-attention Pallas kernel (KV-cache resident).
+
+One generated token per sequence attends over the whole KV cache — the
+serving decode hot loop.  The jnp path materializes (B, H, 1, L) logits and
+re-reads the cache per head group; this kernel fuses qK^T -> online softmax
+-> pV into one pass that streams each K/V block exactly once.
+
+GQA head folding: the ``g = Hq/Hkv`` query heads sharing a KV head become
+the q-*row* axis of a (g, dh) block, so the MXU contraction amortizes the
+K/V stream across the whole group (the same fold the prefill kernel gets
+from `ops.mha_attention`, but per KV head instead of per q head — decode
+must not `jnp.repeat` the cache).
+
+Cache-length skipping: the valid prefix length (``index + 1``) is a traced
+scalar at serving time, so it rides a scalar-prefetch argument: the K/V
+index maps clamp every grid step past the last valid block onto it (Pallas
+elides the repeated DMA) and a `@pl.when` guard skips the FLOPs — blocks
+past the write index are neither streamed nor multiplied, the decode
+analogue of the prefill kernel's causal block triangle.  Cache lengths not
+divisible by block_k are padded once at the call site and masked via the
+same length scalar.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref,
+                   m_ref, l_ref, acc_ref, *,
+                   scale: float, block_k: int, k_steps: int):
+    jj = pl.program_id(1)
+    length = len_ref[0]
+    last = jnp.maximum(0, (length - 1) // block_k)
+
+    @pl.when(jj == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when(jj <= last)
+    def _compute():
+        q = q_ref[0]                                     # (g, dh)
+        k = k_ref[0]                                     # (block_k, dh)
+        v = v_ref[0]                                     # (block_k, dh)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale  # (g, block_k)
+        k_pos = jj * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(k_pos < length, s, NEG_INF)
+
+        m_prev = m_ref[...]                              # (g, 1)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        p = jnp.where(m_new <= NEG_INF, 0.0, p)          # fully-masked block
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=1, keepdims=True)
+        m_ref[...] = m_new
+        acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+    @pl.when(jj == k_steps - 1)
+    def _store():
+        o_ref[0] = (acc_ref[...] /
+                    jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                     scale: float, length, block_k: int = 512,
+                     interpret: bool = False) -> jax.Array:
+    """q: (BKV, g, dh); k, v: (BKV, L, dh); length: valid cache prefix.
+
+    ``length`` may be a python int or a traced int32 scalar (the serving
+    cache index + 1); keys at positions >= length are masked and their
+    blocks skipped.  The KV-head fold (BKV = B * Hkv) is the caller's job —
+    see `gqa_decode_attention`.
+    """
+    out_dtype = q.dtype
+    if q.dtype != k.dtype:
+        # The q rows are tiny; upcasting them to the cache dtype is free
+        # (serving keeps an f32/bf16 cache while activations may differ).
+        # The output is cast back so the kernel and oracle paths agree.
+        q = q.astype(k.dtype)
+    bkv, g, dh = q.shape
+    _, kl, _ = k.shape
+    block_k = min(block_k, kl)
+    k_pad = -kl % block_k
+    if k_pad:
+        k = jnp.pad(k, ((0, 0), (0, k_pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, k_pad), (0, 0)))
+    k_steps = (kl + k_pad) // block_k
+    length = jnp.minimum(jnp.asarray(length, jnp.int32), kl).reshape(1)
+
+    def kv_index(b, j, len_ref):
+        last = jnp.maximum(0, (len_ref[0] - 1) // block_k)
+        return (b, jnp.minimum(j, last), 0)
+
+    fn = functools.partial(_decode_kernel, scale=scale, block_k=block_k,
+                           k_steps=k_steps)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(bkv, k_steps),
+        in_specs=[
+            pl.BlockSpec((1, g, dh), lambda b, j, len_ref: (b, 0, 0)),
+            pl.BlockSpec((1, block_k, dh), kv_index),
+            pl.BlockSpec((1, block_k, dh), kv_index),
+        ],
+        out_specs=pl.BlockSpec((1, g, dh), lambda b, j, len_ref: (b, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, dh), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        fn,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((bkv, g, dh), q.dtype),
+        interpret=interpret,
+    )(length, q, k, v)
+    return out.astype(out_dtype)
+
+
+def gqa_decode_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                         length, scale: float | None = None,
+                         block_k: int = 512,
+                         interpret: bool = False) -> jax.Array:
+    """q: (B, Hq, dh); k, v: (B, L, Hkv, dh) -> (B, Hq, dh).
+
+    Folds the GQA group into the q-row axis per KV head (no cache repeat)
+    and dispatches to the fused kernel.
+    """
+    b, hq, dh = q.shape
+    _, kl, hkv, _ = k.shape
+    g = hq // hkv
+    if scale is None:
+        scale = 1.0 / (dh ** 0.5)
+    qf = q.reshape(b, hkv, g, dh).reshape(b * hkv, g, dh)
+    kf = k.transpose(0, 2, 1, 3).reshape(b * hkv, kl, dh)
+    vf = v.transpose(0, 2, 1, 3).reshape(b * hkv, kl, dh)
+    out = decode_attention(qf, kf, vf, scale=scale, length=length,
+                           block_k=block_k, interpret=interpret)
+    return out.reshape(b, hkv, g, dh).reshape(b, hq, dh)
+
+
+def decode_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+               length, scale: float | None = None) -> jax.Array:
+    """Pure-jnp oracle for `gqa_decode_attention` (materialized logits)."""
+    b, hq, dh = q.shape
+    _, kl, hkv, _ = k.shape
+    g = hq // hkv
+    if scale is None:
+        scale = 1.0 / (dh ** 0.5)
+    qr = q.reshape(b, hkv, g, dh).astype(jnp.float32)
+    kr = k.transpose(0, 2, 1, 3).astype(jnp.float32)    # (b, hkv, kl, dh)
+    vr = v.transpose(0, 2, 1, 3).astype(jnp.float32)
+    s = jnp.einsum("bhgd,bhkd->bhgk", qr, kr) * scale
+    valid = jnp.arange(kl) < jnp.asarray(length, jnp.int32)
+    s = jnp.where(valid[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgk,bhkd->bhgd", p, vr)
+    return out.reshape(b, hq, dh).astype(q.dtype)

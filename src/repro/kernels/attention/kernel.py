@@ -1,10 +1,25 @@
-"""Flash attention (forward) Pallas kernel.
+"""Flash attention (forward) Pallas kernel, with mask-driven block skipping.
 
 The prefill hot spot: (Sq, Sk) logits never leave VMEM.  Online-softmax
 carries (m, l, acc) in VMEM scratch across the K-block grid axis; Q/K/V
 blocks stream with Pallas double-buffering (eq.2's doubled B buffer again —
 traffic is independent of the K-block depth, so the block sizes come from the
 same VMEM-constrained solver family as the matmul kernel).
+
+Masked work is free: each q-block's active K-step range
+[`first`, `last`] is derived from the causal/sliding-window mask
+(`core.cost_model.attention_step_bounds` is the shared block-level law).
+The grid's K axis is sized to the *widest* active range
+(`attention_max_k_steps` — a window shrinks it outright), the K/V index
+maps clamp into the active range so skipped blocks are never streamed into
+VMEM (Pallas elides the DMA when consecutive grid steps map to the same
+block), and a `@pl.when` guard skips their FLOPs.  Causal prefill at sq=sk
+runs the block triangle — ~2x fewer K-steps than the dense grid.
+
+Ragged shapes are padded: q rows up to a block_q multiple (tail rows are
+sliced off the output), K/V up to a block_k multiple (tail keys masked via
+the true kv length), so tuned (block_q, block_k) plans apply to any prefill
+length instead of tripping a divisibility assert.
 
 Supports causal masking, sliding windows, and GQA (grouped q heads fold into
 the q-block row axis).
@@ -19,48 +34,88 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core.cost_model import attention_max_k_steps
+
 NEG_INF = -1e30
+
+
+def _first_step(qi, *, block_q: int, block_k: int, k_steps: int,
+                window: int | None):
+    """First active K-step for q-block ``qi`` (traced mirror of
+    `cost_model.attention_step_bounds`)."""
+    if window is None:
+        return qi * 0
+    return jnp.clip((qi * block_q - window + 1) // block_k, 0, k_steps - 1)
+
+
+def _last_step(qi, *, block_q: int, block_k: int, k_steps: int, causal: bool):
+    """Last active K-step for q-block ``qi``."""
+    if not causal:
+        return qi * 0 + (k_steps - 1)
+    return jnp.minimum(k_steps - 1, ((qi + 1) * block_q - 1) // block_k)
 
 
 def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
                   scale: float, causal: bool, window: int | None,
-                  block_q: int, block_k: int, k_steps: int):
+                  block_q: int, block_k: int, k_steps: int, grid_k: int,
+                  kv_len: int, skip: bool):
     qi = pl.program_id(1)
-    kj = pl.program_id(2)
+    jj = pl.program_id(2)
 
-    @pl.when(kj == 0)
+    @pl.when(jj == 0)
     def _init():
         m_ref[...] = jnp.full_like(m_ref, NEG_INF)
         l_ref[...] = jnp.zeros_like(l_ref)
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    q = q_ref[0]                                     # (block_q, dh)
-    k = k_ref[0]                                     # (block_k, dh)
-    v = v_ref[0]                                     # (block_k, dh)
-    s = jax.lax.dot_general(
-        q, k, (((1,), (1,)), ((), ())),
-        preferred_element_type=jnp.float32) * scale  # (block_q, block_k)
+    if skip:
+        first = _first_step(qi, block_q=block_q, block_k=block_k,
+                            k_steps=k_steps, window=window)
+        last = _last_step(qi, block_q=block_q, block_k=block_k,
+                          k_steps=k_steps, causal=causal)
+        kj = first + jj
+        active = kj <= last
+    else:
+        kj = jj
+        active = jj >= 0          # trivially true, keeps one code path
 
-    q_pos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
-    k_pos = kj * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
-    ok = jnp.ones(s.shape, jnp.bool_)
-    if causal:
-        ok &= q_pos >= k_pos
-    if window is not None:
-        ok &= (q_pos - k_pos) < window
-    s = jnp.where(ok, s, NEG_INF)
+    @pl.when(active)
+    def _compute():
+        q = q_ref[0]                                     # (block_q, dh)
+        k = k_ref[0]                                     # (block_k, dh)
+        v = v_ref[0]                                     # (block_k, dh)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale  # (block_q, block_k)
 
-    m_prev = m_ref[...]                              # (block_q, 1)
-    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
-    p = jnp.exp(s - m_new)
-    corr = jnp.exp(m_prev - m_new)
-    l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=1, keepdims=True)
-    m_ref[...] = m_new
-    acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
-        p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
-        preferred_element_type=jnp.float32)
+        q_pos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        k_pos = kj * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        ok = jnp.ones(s.shape, jnp.bool_)
+        if causal:
+            ok &= q_pos >= k_pos
+        if window is not None:
+            ok &= (q_pos - k_pos) < window
+        if kv_len < k_steps * block_k:   # padded K/V tail
+            ok &= k_pos < kv_len
+        s = jnp.where(ok, s, NEG_INF)
 
-    @pl.when(kj == k_steps - 1)
+        m_prev = m_ref[...]                              # (block_q, 1)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        # Rows with no surviving key yet sit at m == NEG_INF; exp(s - m)
+        # would turn fully-masked logits into 1s.  Zero them so l stays 0
+        # and the store's l-floor makes such rows output 0 — the pinned
+        # convention for degenerate rows (padded q/K tails, and window
+        # rows beyond the cache at sq > sk), shared with `ref.attention_ref`.
+        p = jnp.where(m_new <= NEG_INF, 0.0, p)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=1, keepdims=True)
+        m_ref[...] = m_new
+        acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+    @pl.when(jj == grid_k - 1)
     def _store():
         o_ref[0] = (acc_ref[...] /
                     jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
@@ -70,32 +125,65 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
                     scale: float, causal: bool = True,
                     window: int | None = None,
                     block_q: int = 512, block_k: int = 512,
-                    interpret: bool = False) -> jax.Array:
+                    interpret: bool = False,
+                    block_skipping: bool = True) -> jax.Array:
     """q: (BH, Sq, dh); k, v: (BH, Sk, dh) — heads pre-folded into batch.
 
     GQA callers tile/fold so q and kv agree on the BH axis (see ops.py).
+    ``block_skipping=False`` forces the dense every-block grid (the
+    pre-skipping kernel) — kept for A/B benchmarking of the skip credit.
     """
     bh, sq, dh = q.shape
     _, sk, _ = k.shape
     block_q = min(block_q, sq)
     block_k = min(block_k, sk)
-    assert sq % block_q == 0 and sk % block_k == 0, (sq, sk, block_q, block_k)
-    k_steps = sk // block_k
-    grid = (bh, sq // block_q, k_steps)
+    q_pad = -sq % block_q
+    k_pad = -sk % block_k
+    if q_pad:
+        q = jnp.pad(q, ((0, 0), (0, q_pad), (0, 0)))
+    if k_pad:
+        k = jnp.pad(k, ((0, 0), (0, k_pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, k_pad), (0, 0)))
+    sq_p, sk_p = sq + q_pad, sk + k_pad
+    k_steps = sk_p // block_k
+    q_blocks = sq_p // block_q
+
+    skip = block_skipping and (causal or window is not None)
+    # The grid's K axis covers only the widest active range; per-q-block
+    # offsets and @pl.when guards do the rest.  Bounds use the padded q
+    # range so tail (sliced-off) rows stay inside the grid.
+    grid_k = (attention_max_k_steps(sq_p, sk_p, block_q, block_k,
+                                    causal=causal, window=window)
+              if skip else k_steps)
+    grid = (bh, q_blocks, grid_k)
+
+    if skip:
+        def kv_index(b, i, j):
+            first = _first_step(i, block_q=block_q, block_k=block_k,
+                                k_steps=k_steps, window=window)
+            last = _last_step(i, block_q=block_q, block_k=block_k,
+                              k_steps=k_steps, causal=causal)
+            # Clamp into the active range: out-of-range grid steps revisit
+            # the last active block, so Pallas never streams it again.
+            return (b, jnp.minimum(first + j, last), 0)
+    else:
+        def kv_index(b, i, j):
+            return (b, j, 0)
 
     fn = functools.partial(
         _flash_kernel, scale=scale, causal=causal, window=window,
-        block_q=block_q, block_k=block_k, k_steps=k_steps)
-    return pl.pallas_call(
+        block_q=block_q, block_k=block_k, k_steps=k_steps, grid_k=grid_k,
+        kv_len=sk, skip=skip)
+    out = pl.pallas_call(
         fn,
         grid=grid,
         in_specs=[
             pl.BlockSpec((1, block_q, dh), lambda b, i, j: (b, i, 0)),
-            pl.BlockSpec((1, block_k, dh), lambda b, i, j: (b, j, 0)),
-            pl.BlockSpec((1, block_k, dh), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, block_k, dh), kv_index),
+            pl.BlockSpec((1, block_k, dh), kv_index),
         ],
         out_specs=pl.BlockSpec((1, block_q, dh), lambda b, i, j: (b, i, 0)),
-        out_shape=jax.ShapeDtypeStruct((bh, sq, dh), q.dtype),
+        out_shape=jax.ShapeDtypeStruct((bh, sq_p, dh), q.dtype),
         scratch_shapes=[
             pltpu.VMEM((block_q, 1), jnp.float32),
             pltpu.VMEM((block_q, 1), jnp.float32),
@@ -103,3 +191,4 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
         ],
         interpret=interpret,
     )(q, k, v)
+    return out[:, :sq] if q_pad else out

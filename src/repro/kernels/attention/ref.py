@@ -18,5 +18,9 @@ def attention_ref(q, k, v, *, scale, causal=True, window=None):
         ok &= (q_pos - k_pos) < window
     s = jnp.where(ok[None], s, -1e30)
     p = jax.nn.softmax(s, axis=-1)
+    # A q row with zero surviving keys (reachable only at sq > sk with a
+    # window) outputs 0, matching the kernel's l-floor convention — not
+    # the uniform-softmax mean a raw softmax over -1e30 logits yields.
+    p = p * ok.any(axis=-1, keepdims=True)[None]
     return jnp.einsum("bqk,bkd->bqd", p,
                       v.astype(jnp.float32)).astype(q.dtype)

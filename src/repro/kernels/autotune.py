@@ -34,12 +34,18 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import cost_model, dse, hardware, tiling
+from repro.kernels.attention import decode as attn_decode
 from repro.kernels.attention import kernel as attn_kernel
 from repro.kernels.attention import ops as attn_ops
 from repro.kernels.matmul import ops as matmul_ops
 from repro.kernels.spmv import ops as spmv_ops
 
-ENGINE_VERSION = 1
+# v2: block-skipping flash kernel — a cached (block_q, block_k) for
+# causal=True now means triangular traffic/FLOPs, so v1 winners (ranked
+# under every-block accounting) are stale and must be re-tuned, and the
+# decode kernel family joins the cache.  Entries from any other version
+# are ignored wholesale (see TuneCache._load), never mis-applied.
+ENGINE_VERSION = 2
 CACHE_ENV = "REPRO_AUTOTUNE_CACHE"
 
 # Above this many total operand elements, CPU interpret-mode timing is both
@@ -438,9 +444,9 @@ def tune_attention(
 
     ``bh`` is the folded batch*heads leading axis the kernel sees (GQA
     callers fold before calling — see `attention.ops.mha_attention`).  The
-    window size enters the key but not the ranking: the kernel visits every
-    block either way, so the feasible set and traffic are window-independent
-    while measured winners may differ.
+    window size enters both the key and the ranking: the block-skipping
+    kernel streams only the active block band, so the scored traffic and
+    FLOPs depend on it.
     """
     dtype = jnp.dtype(dtype)
     backend = _backend()
@@ -462,7 +468,7 @@ def tune_attention(
     ranked = dse.rank_attention_blocks(bh, sq, sk, dh,
                                        vmem_bytes=vmem_bytes,
                                        dtype_bytes=dtype.itemsize,
-                                       causal=causal,
+                                       causal=causal, window=window,
                                        top=max(measure_k, 1))
     cands = [(c.score, c.detail["block_q"], c.detail["block_k"])
              for c in ranked]
@@ -529,10 +535,131 @@ def tuned_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
 
 
 # ---------------------------------------------------------------------------
+# Decode attention
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class DecodePlan:
+    block_k: int
+    source: str                  # "cache" | "measured" | "model"
+    model_time_s: float
+    measured_us: float | None
+    key: str
+
+
+def _decode_key(bkv: int, g: int, cache_len: int, dh: int, dtype: str,
+                backend: str, vmem_bytes: int | None) -> str:
+    return (f"decode:{bkv}x{g}x{cache_len}x{dh}:{dtype}:{backend}"
+            f":v{_budget_tag(vmem_bytes)}")
+
+
+def tune_decode(
+    bkv: int, g: int, cache_len: int, dh: int, dtype=jnp.float32, *,
+    measure_k: int = 3,
+    vmem_bytes: int | None = None,
+    max_measure_elems: int = MAX_MEASURE_ELEMS,
+    cache: TuneCache | None = None,
+    interpret: bool | None = None,
+) -> DecodePlan:
+    """Pick block_k for the fused decode kernel: DSE -> measure -> cache.
+
+    ``bkv = batch * kv_heads`` folded rows, ``g = heads / kv_heads`` the GQA
+    group per row, ``cache_len`` the allocated KV-cache depth.  The valid
+    prefix length is a runtime scalar the kernel skips on, so it is not in
+    the key — the plan is ranked and measured at the full cache depth (the
+    worst case the server allocated for).
+    """
+    dtype = jnp.dtype(dtype)
+    backend = _backend()
+    cache = cache or get_cache()
+    key = _decode_key(bkv, g, cache_len, dh, dtype.name, backend, vmem_bytes)
+    measurable = (measure_k > 0
+                  and (backend == "tpu"
+                       or bkv * (g + 2 * cache_len) * dh
+                       <= max_measure_elems))
+
+    hit = cache.get(key)
+    # Same upgrade rule as the other families: analytic-only entries never
+    # block a later measuring caller.
+    if hit is not None and not (measurable and hit.get("source") == "model"):
+        return DecodePlan(hit["block_k"], "cache", hit["model_time_s"],
+                          hit.get("measured_us"), key)
+
+    ranked = dse.rank_decode_blocks(bkv, g, cache_len, dh,
+                                    vmem_bytes=vmem_bytes,
+                                    dtype_bytes=dtype.itemsize,
+                                    top=max(measure_k, 1))
+    cands = [(c.score, c.detail["block_k"]) for c in ranked]
+
+    interpret = (backend != "tpu") if interpret is None else interpret
+    measured_us = None
+    if measurable:
+        scale = 1.0 / (dh ** 0.5)
+        q = jax.random.normal(jax.random.PRNGKey(0), (bkv, g, dh), dtype)
+        k = jax.random.normal(jax.random.PRNGKey(1), (bkv, cache_len, dh),
+                              dtype)
+        v = jax.random.normal(jax.random.PRNGKey(2), (bkv, cache_len, dh),
+                              dtype)
+        best, best_us = None, float("inf")
+        for score, bk in cands[:measure_k]:
+            try:
+                us = measure(lambda bk=bk: attn_decode.decode_attention(
+                    q, k, v, scale=scale, length=cache_len, block_k=bk,
+                    interpret=interpret))
+            except Exception:
+                continue  # e.g. real VMEM overflow the model missed
+            if us < best_us:
+                best, best_us = (score, bk), us
+        measurable = best is not None
+    if measurable:
+        score, bk = best
+        source, measured_us = "measured", best_us
+    else:
+        score, bk = cands[0]
+        source = "model"
+        measured_us = None
+
+    cache.put(key, {"block_k": bk, "source": source, "model_time_s": score,
+                    "measured_us": measured_us})
+    return DecodePlan(bk, source, score, measured_us, key)
+
+
+def tuned_decode(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                 length, interpret: bool = False,
+                 use_kernel: bool | None = None,
+                 measure_k: int = 0,
+                 cache: TuneCache | None = None) -> jax.Array:
+    """Fused decode attention with autotuned block_k for the cache shape.
+
+    q: (B, Hq, dh); k, v: (B, L, Hkv, dh); ``length`` the valid cache
+    prefix (python int or traced scalar — the serving index + 1).
+    ``measure_k`` defaults to 0 because the serving decode step calls this
+    inside a jit trace (same contract as `tuned_attention`); measured
+    winners come from offline callers through the shared cache.
+    """
+    b, hq, dh = q.shape
+    _, kl, hkv, _ = k.shape
+    if use_kernel is None:
+        use_kernel = interpret or _backend() == "tpu"
+    if not use_kernel:
+        return attn_decode.decode_ref(q, k, v, length=length)
+    # The kernel streams the cache (and upcasts q to it), so the plan is
+    # keyed and priced on the *cache* dtype — an f32 cache costs twice the
+    # KV traffic of a bf16 one regardless of the activation dtype.
+    plan = tune_decode(b * hkv, hq // hkv, kl, dh, k.dtype,
+                       measure_k=measure_k, cache=cache, interpret=interpret)
+    return attn_decode.gqa_decode_attention(q, k, v, length=length,
+                                            block_k=plan.block_k,
+                                            interpret=interpret)
+
+
+# ---------------------------------------------------------------------------
 # Model-serving plans
 # ---------------------------------------------------------------------------
 
 def plan_for_model(cfg, batch: int, *, prefill_len: int = 0,
+                   cache_len: int = 0,
+                   kv_dtype=jnp.bfloat16,
                    cache: TuneCache | None = None,
                    measure_k: int = 0) -> list[dict]:
     """Pre-tune the serving-path kernel shapes of a model config.
@@ -540,8 +667,9 @@ def plan_for_model(cfg, batch: int, *, prefill_len: int = 0,
     Called by `launch.serve` at server startup so the first request never
     pays the search.  Measurement defaults off (analytic ranking only):
     startup happens on the serving critical path.  Covers the decode-path
-    matmuls and — when ``prefill_len`` is given — the prefill flash-attention
-    shape, so all three tuned kernel families share one warmup.
+    matmuls, — when ``prefill_len`` is given — the prefill flash-attention
+    shape, and — when ``cache_len`` is given — the fused decode-attention
+    fold, so all four tuned kernel families share one warmup.
     """
     d, f, v = cfg.d_model, cfg.d_ff or cfg.d_model * 4, cfg.vocab_size
     qkv = max(cfg.num_heads * cfg.head_dim, d) or d
@@ -571,6 +699,20 @@ def plan_for_model(cfg, batch: int, *, prefill_len: int = 0,
                       "block": [ap.block_q, ap.block_k],
                       "source": ap.source,
                       "model_time_us": ap.model_time_s * 1e6})
+    if cache_len > 0 and cfg.num_heads and cfg.num_kv_heads:
+        # Keyed on the KV-cache dtype the server allocates (`kv_dtype`) —
+        # the decode kernel streams the cache, not the activations.
+        dp = tune_decode(batch * cfg.num_kv_heads,
+                         cfg.num_heads // cfg.num_kv_heads, cache_len,
+                         cfg.head_dim, kv_dtype, measure_k=measure_k,
+                         cache=cache)
+        plans.append({"op": "attn_decode",
+                      "bkv_g_len_dh": [batch * cfg.num_kv_heads,
+                                       cfg.num_heads // cfg.num_kv_heads,
+                                       cache_len, cfg.head_dim],
+                      "block_k": dp.block_k,
+                      "source": dp.source,
+                      "model_time_us": dp.model_time_s * 1e6})
     return plans
 
 
@@ -579,6 +721,7 @@ def _attn_layer_count(cfg) -> int:
 
 
 def predict_decode_step_us(cfg, batch: int, *, cache_len: int,
+                           kv_dtype=jnp.bfloat16,
                            plans: list[dict] | None = None,
                            cache: TuneCache | None = None) -> float:
     """Predicted wall time of one decode step at this batch, from the tuned
@@ -591,21 +734,30 @@ def predict_decode_step_us(cfg, batch: int, *, cache_len: int,
     bf16 bytes per attention layer at `hbm_bw`) is the decode hot loop's
     memory floor.
     """
-    plans = plans if plans is not None else plan_for_model(cfg, batch,
-                                                           cache=cache)
+    plans = plans if plans is not None else plan_for_model(
+        cfg, batch, cache_len=cache_len, kv_dtype=kv_dtype, cache=cache)
     attn_ops_ = {"qkv_proj", "out_proj"}
     ffn_ops = {"ffn_up", "ffn_down"}
     n_attn = _attn_layer_count(cfg)
     attn_us = sum(p["model_time_us"] for p in plans if p["op"] in attn_ops_)
     ffn_us = sum(p["model_time_us"] for p in plans if p["op"] in ffn_ops)
     logits_us = sum(p["model_time_us"] for p in plans if p["op"] == "logits")
-    kv_bytes = 2.0 * batch * cache_len * cfg.kv_dim * 2   # K+V, bf16
-    kv_us = n_attn * kv_bytes / hardware.TPU_V5E.hbm_bw * 1e6
+    decode_plan = next((p for p in plans if p["op"] == "attn_decode"), None)
+    if decode_plan is not None:
+        # The tuned decode-attention plan prices the KV stream *and* the
+        # attention FLOPs at the chosen block_k (including ragged-tail
+        # over-fetch) — strictly more faithful than the raw byte floor.
+        kv_us = n_attn * decode_plan["model_time_us"]
+    else:
+        kv_bytes = (2.0 * batch * cache_len * cfg.kv_dim
+                    * jnp.dtype(kv_dtype).itemsize)            # K+V stream
+        kv_us = n_attn * kv_bytes / hardware.TPU_V5E.hbm_bw * 1e6
     return (n_attn * attn_us + cfg.num_layers * ffn_us + logits_us + kv_us)
 
 
 def select_serving_batch(
     cfg, *, cache_len: int, prefill_len: int = 0,
+    kv_dtype=jnp.bfloat16,
     candidates: Sequence[int] = (1, 2, 4, 8, 16, 32, 64),
     latency_budget_ms: float | None = None,
     cache: TuneCache | None = None,
@@ -625,10 +777,20 @@ def select_serving_batch(
     """
     sweep = []
     best = None
+    decode_plans = {}
     for b in candidates:
-        plans = plan_for_model(cfg, b, prefill_len=prefill_len, cache=cache)
+        plans = plan_for_model(cfg, b, prefill_len=prefill_len,
+                               cache_len=cache_len, kv_dtype=kv_dtype,
+                               cache=cache)
+        dp = next((p for p in plans if p["op"] == "attn_decode"), None)
+        # Provenance ("model" cold vs "cache" warm) is volatile across
+        # runs; the decision record must stay deterministic.  Full
+        # provenance lives in the Server's kernel_plan log.
+        decode_plans[b] = (
+            {k: v for k, v in dp.items() if k != "source"}
+            if dp is not None else None)
         step_us = predict_decode_step_us(cfg, b, cache_len=cache_len,
-                                         plans=plans)
+                                         kv_dtype=kv_dtype, plans=plans)
         tok_per_s = b / (step_us * 1e-6)
         feasible = (latency_budget_ms is None
                     or step_us <= latency_budget_ms * 1e3)
@@ -642,4 +804,5 @@ def select_serving_batch(
             "predicted_step_us": best["step_us"],
             "predicted_tok_per_s": best["tok_per_s"],
             "latency_budget_ms": latency_budget_ms,
+            "decode_plan": decode_plans[best["batch"]],
             "sweep": sweep}

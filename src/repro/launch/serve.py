@@ -40,11 +40,16 @@ class Server:
         self.batch = batch
         self.max_len = max_len
         # Close the DSE loop before taking traffic: pre-tune the decode-path
-        # matmul shapes AND the prefill flash-attention shape so the kernel
-        # engine's cache is warm (analytic-only here — measurement happens
-        # offline / on first TPU run).
+        # matmul shapes, the prefill flash-attention shape AND the fused
+        # decode-attention fold so the kernel engine's cache is warm
+        # (analytic-only here — measurement happens offline / on first TPU
+        # run).
+        # kv_dtype matches the cache_init dtype below — the decode plan is
+        # keyed on the dtype the kernel actually streams.
         self.kernel_plan = (autotune.plan_for_model(cfg, batch,
-                                                    prefill_len=prefill_len)
+                                                    prefill_len=prefill_len,
+                                                    cache_len=max_len,
+                                                    kv_dtype=jnp.float32)
                             if autotune_kernels else [])
         self.params = transformer.init(cfg, jax.random.PRNGKey(0),
                                        dtype=jnp.float32)
@@ -118,6 +123,7 @@ def main(argv=None):
         cands = cands or [min(args.batch_candidates)]
         decision = autotune.select_serving_batch(
             cfg, cache_len=max_len, prefill_len=args.prompt_len,
+            kv_dtype=jnp.float32,          # the Server's cache dtype
             candidates=tuple(cands),
             latency_budget_ms=args.latency_budget_ms)
         decision["source"] = "autotune"

@@ -9,6 +9,7 @@ Sharding is expressed through logical-axis constraints (`parallel.sharding`).
 from __future__ import annotations
 
 import math
+import os
 from typing import Any
 
 import jax
@@ -231,10 +232,29 @@ def attention_apply(
             k_pos = index - ((write - k_slots) % cache_len)
         else:
             k_pos = k_slots
-        k_valid = (k_pos <= index) & (k_pos >= 0)
-        out = attention_core(q, ck, cv, positions, k_pos, causal=cfg.causal,
-                             window=cfg.sliding_window, scale=scale,
-                             k_valid=k_valid)
+        mode = os.environ.get("REPRO_DECODE_KERNEL", "auto")
+        if (s == 1 and cfg.causal and not cfg.sliding_window
+                and mode != "off"
+                and (mode == "interpret"
+                     or jax.default_backend() == "tpu")):
+            # Serving decode: the single-token hot loop goes through the
+            # fused autotuned decode kernel (plan resolved at trace time
+            # against the cache `plan_for_model` pre-warmed; the valid
+            # prefix `index + 1` rides a runtime scalar the kernel skips
+            # on).  The ring-buffer SWA layout and training stay on the
+            # jnp path below.  $REPRO_DECODE_KERNEL: "auto" (TPU only),
+            # "interpret" (force interpret mode — CPU tests/demos), "off";
+            # resolved at trace time, so changing it after the serve step
+            # is jitted requires a retrace (new process / cache clear).
+            from repro.kernels.autotune import tuned_decode
+            out = tuned_decode(q[:, 0], ck, cv, length=index + 1,
+                               interpret=(mode == "interpret"))[:, None]
+        else:
+            k_valid = (k_pos <= index) & (k_pos >= 0)
+            out = attention_core(q, ck, cv, positions, k_pos,
+                                 causal=cfg.causal,
+                                 window=cfg.sliding_window, scale=scale,
+                                 k_valid=k_valid)
         new_cache = {"k": ck, "v": cv}
 
     out = out.reshape(b, s, cfg.q_dim).astype(x.dtype)

@@ -134,6 +134,31 @@ def test_corrupt_cache_file_is_ignored(cache):
     assert p.source == "model"
 
 
+def test_stale_version_entries_ignored_not_misapplied(cache):
+    """Block skipping changed what a cached (block_q, block_k) means for
+    causal=True, so the schema version was bumped: entries written under
+    any other ENGINE_VERSION must be dropped wholesale (re-tuned), never
+    returned as hits."""
+    import json
+    # A v1-era file whose entry sits under the *current* key with an
+    # absurd winner — if version checking ever regresses, the poisoned
+    # block pair would surface as a cache hit.
+    key = autotune._attention_key(8, 256, 256, 64, True, None, "float32",
+                                  autotune._backend(), None)
+    cache.path.write_text(json.dumps({
+        "version": autotune.ENGINE_VERSION - 1,
+        "entries": {key: {"block_q": 7, "block_k": 13, "source": "measured",
+                          "model_time_s": 1e-9, "measured_us": 0.1}},
+    }))
+    p = autotune.tune_attention(8, 256, 256, 64, measure_k=0,
+                                cache=autotune.TuneCache(cache.path))
+    assert p.source == "model"          # stale entry re-tuned, not served
+    assert (p.block_q, p.block_k) != (7, 13)
+    # and the rewritten file carries the current version
+    data = json.loads(cache.path.read_text())
+    assert data["version"] == autotune.ENGINE_VERSION
+
+
 def test_spmv_cache_miss_then_hit(cache):
     rng = np.random.default_rng(5)
     dense, indptr, cols, vals = _random_csr(rng, 64, 300, 0.1)
@@ -348,6 +373,60 @@ def test_tuned_attention_matches_reference(cache, causal, window, hq, hkv):
                                rtol=2e-3, atol=2e-3)
 
 
+def test_attention_model_credits_causal_skip():
+    """attention_time_model(causal=True) must price the block triangle:
+    at sq=sk its traffic/FLOPs are the active/total fraction of the dense
+    accounting, and the predicted speedup tracks the counted K-steps."""
+    from repro.core import cost_model
+    kw = dict(bh=8, sq=4096, sk=4096, dh=128, block_q=512, block_k=512)
+    dense = cost_model.attention_time_model(**kw, causal=True,
+                                            block_skipping=False)
+    skip = cost_model.attention_time_model(**kw, causal=True)
+    active, total = cost_model.attention_active_block_pairs(
+        4096, 4096, 512, 512, causal=True)
+    assert skip["active_block_pairs"] == active < total
+    assert skip["flops"] == pytest.approx(dense["flops"] * active / total)
+    assert skip["time_s"] < dense["time_s"]
+    # the model's predicted ranking matches the counted-K-step ordering
+    assert total / active >= 1.5
+
+
+def test_attention_model_credits_window_band():
+    """A sliding window keeps only the block band, which must beat the
+    full causal triangle in the model."""
+    from repro.core import cost_model
+    kw = dict(bh=8, sq=4096, sk=4096, dh=128, block_q=256, block_k=256)
+    tri = cost_model.attention_time_model(**kw, causal=True)
+    band = cost_model.attention_time_model(**kw, causal=True, window=512)
+    assert band["active_block_pairs"] < tri["active_block_pairs"]
+    assert band["time_s"] < tri["time_s"]
+
+
+def test_attention_window_enters_ranking(cache):
+    """The window now changes the scored traffic, not just the cache key:
+    ranking the same shape with/without a window must produce different
+    model times for at least the dense winner."""
+    full = dse.rank_attention_blocks(8, 2048, 2048, 64, causal=True)
+    win = dse.rank_attention_blocks(8, 2048, 2048, 64, causal=True,
+                                    window=256)
+    assert win[0].score < full[0].score
+
+
+def test_tuned_attention_ragged_prefill(cache):
+    """Ragged prefill lengths must tune and run (the old kernel asserted
+    on divisibility; the tuner's candidates no longer require it)."""
+    from repro.kernels.attention import mha_attention
+    q = jax.random.normal(KEY, (1, 300, 4, 32), jnp.float32)
+    k = jax.random.normal(jax.random.PRNGKey(1), (1, 300, 2, 32),
+                          jnp.float32)
+    v = jax.random.normal(jax.random.PRNGKey(2), (1, 300, 2, 32),
+                          jnp.float32)
+    out = autotune.tuned_attention(q, k, v, interpret=True, cache=cache)
+    ref = mha_attention(q, k, v, use_kernel=False)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-3, atol=2e-3)
+
+
 def test_tuned_attention_oracle_path_skips_tuning(cache):
     """CPU callers that never reach the kernel path must not pay (or write)
     any tuning state — same contract as tuned_matmul/tuned_spmv."""
@@ -359,7 +438,84 @@ def test_tuned_attention_oracle_path_skips_tuning(cache):
 
 
 # ---------------------------------------------------------------------------
-# serving plans: all three kernel families + the batch sweep
+# decode tuning
+# ---------------------------------------------------------------------------
+
+def test_rank_decode_blocks_deterministic_and_feasible():
+    r1 = dse.rank_decode_blocks(16, 4, 1024, 64)
+    r2 = dse.rank_decode_blocks(16, 4, 1024, 64)
+    assert [c.detail["block_k"] for c in r1] \
+        == [c.detail["block_k"] for c in r2]
+    scores = [c.score for c in r1]
+    assert scores == sorted(scores) and len(r1) >= 1
+    budget = min(c.detail["vmem_bytes"] for c in r1)
+    capped = dse.rank_decode_blocks(16, 4, 1024, 64, vmem_bytes=budget)
+    assert all(c.detail["vmem_bytes"] <= budget for c in capped)
+
+
+def test_decode_model_charges_ragged_tail_overfetch():
+    """The fetched-vs-active accounting: a block_k that rounds a ragged
+    cache far up must be charged for the over-fetch."""
+    from repro.core import cost_model
+    fine = cost_model.decode_time_model(16, 4, 1000, 64, 128)
+    coarse = cost_model.decode_time_model(16, 4, 1000, 64, 1024)
+    assert fine["fetched_k"] == 1024 and coarse["fetched_k"] == 1024
+    tight = cost_model.decode_time_model(16, 4, 1000, 64, 1000)
+    assert tight["fetched_k"] == 1000
+    assert tight["waste"] == pytest.approx(1.0)
+    assert coarse["waste"] > 1.0
+
+
+def test_decode_cache_miss_then_hit_and_upgrade(cache):
+    p1 = autotune.tune_decode(4, 2, 256, 32, cache=cache, measure_k=0)
+    assert p1.source == "model" and p1.measured_us is None
+    p2 = autotune.tune_decode(4, 2, 256, 32, cache=cache, measure_k=0)
+    assert p2.source == "cache" and p2.block_k == p1.block_k
+    # analytic-only entries are upgraded by the first measuring caller
+    p3 = autotune.tune_decode(4, 2, 256, 32, cache=cache, measure_k=2)
+    assert p3.source == "measured" and p3.measured_us is not None
+    p4 = autotune.tune_decode(4, 2, 256, 32, cache=cache, measure_k=2)
+    assert p4.source == "cache" and p4.measured_us is not None
+
+
+def test_decode_key_separates_shapes(cache):
+    autotune.tune_decode(4, 2, 256, 32, cache=cache, measure_k=0)
+    p = autotune.tune_decode(4, 2, 512, 32, cache=cache, measure_k=0)
+    assert p.source != "cache"       # cache depth is part of the key
+    p = autotune.tune_decode(8, 2, 256, 32, cache=cache, measure_k=0)
+    assert p.source != "cache"       # folded rows are part of the key
+
+
+@pytest.mark.parametrize("hq,hkv,length", [
+    (4, 2, 256),       # GQA, full cache
+    (4, 2, 100),       # partial prefix
+    (2, 2, 77),        # MHA, ragged vs any block_k
+])
+def test_tuned_decode_matches_reference(cache, hq, hkv, length):
+    from repro.kernels.attention import decode_ref
+    b, dh, cache_len = 2, 32, 256
+    q = jax.random.normal(KEY, (b, hq, dh), jnp.float32)
+    k = jax.random.normal(jax.random.PRNGKey(1), (b, cache_len, hkv, dh),
+                          jnp.float32)
+    v = jax.random.normal(jax.random.PRNGKey(2), (b, cache_len, hkv, dh),
+                          jnp.float32)
+    out = autotune.tuned_decode(q, k, v, length=length, interpret=True,
+                                cache=cache)
+    ref = decode_ref(q, k, v, length=length)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_tuned_decode_oracle_path_skips_tuning(cache):
+    q = jax.random.normal(KEY, (1, 2, 16), jnp.float32)
+    k = jax.random.normal(jax.random.PRNGKey(1), (1, 64, 2, 16), jnp.float32)
+    v = jax.random.normal(jax.random.PRNGKey(2), (1, 64, 2, 16), jnp.float32)
+    autotune.tuned_decode(q, k, v, length=64, use_kernel=False, cache=cache)
+    assert cache.hits == 0 and cache.misses == 0
+
+
+# ---------------------------------------------------------------------------
+# serving plans: all four kernel families + the batch sweep
 # ---------------------------------------------------------------------------
 
 def _serve_cfg():
@@ -381,6 +537,31 @@ def test_plan_for_model_covers_attention(cache):
     plans2 = autotune.plan_for_model(cfg, 2, prefill_len=64, cache=cache)
     attn2 = next(p for p in plans2 if p["op"] == "attn_prefill")
     assert attn2["source"] == "cache" and attn2["block"] == attn["block"]
+
+
+def test_plan_for_model_covers_decode(cache):
+    cfg = _serve_cfg()
+    plans = autotune.plan_for_model(cfg, 2, prefill_len=64, cache_len=128,
+                                    cache=cache)
+    dec = next(p for p in plans if p["op"] == "attn_decode")
+    assert dec["bkv_g_len_dh"] == [2 * cfg.num_kv_heads,
+                                   cfg.num_heads // cfg.num_kv_heads,
+                                   128, cfg.head_dim]
+    assert dec["block_k"] >= 1 and dec["model_time_us"] > 0
+    plans2 = autotune.plan_for_model(cfg, 2, prefill_len=64, cache_len=128,
+                                     cache=cache)
+    dec2 = next(p for p in plans2 if p["op"] == "attn_decode")
+    assert dec2["source"] == "cache" and dec2["block_k"] == dec["block_k"]
+
+
+def test_select_serving_batch_logs_decode_plan(cache):
+    cfg = _serve_cfg()
+    d = autotune.select_serving_batch(cfg, cache_len=128, prefill_len=64,
+                                      candidates=(1, 2, 4), cache=cache)
+    assert d["decode_plan"] is not None
+    assert d["decode_plan"]["op"] == "attn_decode"
+    assert d["decode_plan"]["bkv_g_len_dh"][0] \
+        == d["batch"] * cfg.num_kv_heads
 
 
 def test_select_serving_batch_deterministic(cache):

@@ -54,6 +54,33 @@ def test_decode_matches_teacher_forcing(name):
                                rtol=2e-3, atol=2e-3)
 
 
+@pytest.mark.parametrize("name", ["dense", "dense_bias"])
+def test_decode_through_fused_kernel_matches_teacher_forcing(
+        name, monkeypatch, tmp_path):
+    """The serving decode hot loop routed through the fused autotuned
+    decode-attention kernel (REPRO_DECODE_KERNEL=interpret forces the TPU
+    path in interpret mode) must still reproduce teacher-forced logits."""
+    monkeypatch.setenv("REPRO_DECODE_KERNEL", "interpret")
+    monkeypatch.setenv("REPRO_AUTOTUNE_CACHE",
+                       str(tmp_path / "autotune.json"))
+    cfg = CASES[name]
+    b, s = 2, 8
+    params = transformer.init(cfg, KEY)
+    toks = jax.random.randint(KEY, (b, s), 0, cfg.vocab_size)
+    full, _, _ = transformer.forward(cfg, params, {"tokens": toks},
+                                     compute_dtype=jnp.float32)
+    cache = transformer.cache_init(cfg, b, s, dtype=jnp.float32)
+    outs = []
+    for t in range(s):
+        lg, cache, _ = transformer.forward(
+            cfg, params, {"tokens": toks[:, t:t + 1]}, cache=cache,
+            compute_dtype=jnp.float32)
+        outs.append(lg[:, 0])
+    dec = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(dec), np.asarray(full),
+                               rtol=2e-3, atol=2e-3)
+
+
 def test_swa_ring_buffer_bounded_cache():
     cfg = CASES["swa_ring"]
     cache = transformer.cache_init(cfg, 1, 1000, dtype=jnp.float32)

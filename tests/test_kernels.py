@@ -10,8 +10,12 @@ try:
 except ImportError:  # minimal env: property tests skip, rest run
     from _hypothesis_stub import given, settings, st
 
+from repro.core import cost_model
 from repro.core.tiling import Tile
-from repro.kernels.attention import mha_attention
+from repro.kernels.attention import decode_ref, gqa_decode_attention, \
+    mha_attention
+from repro.kernels.attention import kernel as attn_kernel
+from repro.kernels.attention.ref import attention_ref
 from repro.kernels.matmul import matmul
 from repro.kernels.matmul.ref import matmul_ref
 from repro.kernels.spmv import pack_csr, spmv
@@ -128,3 +132,183 @@ def test_flash_attention_bf16(dtype):
                         v.astype(jnp.float32), use_kernel=False)
     np.testing.assert_allclose(np.asarray(out, np.float32), np.asarray(ref),
                                rtol=3e-2, atol=3e-2)
+
+
+# ---------------------------------------------------------------------------
+# block-skipping flash attention
+# ---------------------------------------------------------------------------
+
+def _flash_vs_ref(bh, sq, sk, dh, causal, window, bq, bk, skip=True,
+                  tol=2e-3):
+    q = jax.random.normal(KEY, (bh, sq, dh), jnp.float32)
+    k = jax.random.normal(jax.random.PRNGKey(1), (bh, sk, dh), jnp.float32)
+    v = jax.random.normal(jax.random.PRNGKey(2), (bh, sk, dh), jnp.float32)
+    scale = 1.0 / (dh ** 0.5)
+    out = attn_kernel.flash_attention(q, k, v, scale=scale, causal=causal,
+                                      window=window, block_q=bq, block_k=bk,
+                                      interpret=True, block_skipping=skip)
+    ref = attention_ref(q, k, v, scale=scale, causal=causal, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("causal,window", [
+    (True, None), (True, 96), (False, None), (False, 96),
+])
+@pytest.mark.parametrize("bq,bk", [(128, 128), (128, 64), (64, 128)])
+def test_block_skip_matches_dense_reference(causal, window, bq, bk):
+    """The skipping kernel must be bit-for-purpose identical to the dense
+    oracle across the mask grid — skipped blocks are exactly the fully
+    masked ones."""
+    _flash_vs_ref(2, 256, 256, 32, causal, window, bq, bk, skip=True)
+
+
+@pytest.mark.parametrize("sq,sk", [
+    (300, 300),      # ragged both, sq == sk (ragged prefill)
+    (769, 769),      # the old divisibility-assert crash case
+    (200, 456),      # sq != sk, both ragged
+    (64, 320),       # aligned q, ragged-k tail masked
+])
+def test_flash_attention_ragged_lengths(sq, sk):
+    """Tuned plans must apply to ragged prefill lengths: the q range is
+    padded (tail rows sliced off) and the K/V tail masked, instead of the
+    old hard `sq % block_q == 0` assert."""
+    _flash_vs_ref(1, sq, sk, 32, True, None, 128, 128)
+    _flash_vs_ref(1, sq, sk, 32, True, 96, 128, 128)
+
+
+def test_flash_attention_ragged_gqa_through_wrapper():
+    """GQA fold + ragged sq through the public mha_attention wrapper."""
+    q = jax.random.normal(KEY, (2, 300, 4, 32), jnp.float32)
+    k = jax.random.normal(jax.random.PRNGKey(1), (2, 300, 2, 32), jnp.float32)
+    v = jax.random.normal(jax.random.PRNGKey(2), (2, 300, 2, 32), jnp.float32)
+    out = mha_attention(q, k, v, block_q=128, block_k=128, interpret=True)
+    ref = mha_attention(q, k, v, use_kernel=False)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_fully_masked_rows_output_zero():
+    """Pinned degenerate-row convention: a q row with zero surviving keys
+    (reachable at sq > sk with a window) outputs 0 in both the kernel
+    (skip and dense paths) and the oracle — not the uniform-softmax mean
+    a raw softmax over -1e30 logits would yield."""
+    bh, sq, sk, dh = 1, 456, 200, 32
+    q = jax.random.normal(KEY, (bh, sq, dh), jnp.float32)
+    k = jax.random.normal(jax.random.PRNGKey(1), (bh, sk, dh), jnp.float32)
+    v = jax.random.normal(jax.random.PRNGKey(2), (bh, sk, dh), jnp.float32)
+    kw = dict(scale=0.2, causal=True, window=64, block_q=128, block_k=128,
+              interpret=True)
+    ref = attention_ref(q, k, v, scale=0.2, causal=True, window=64)
+    # rows >= sk + window - 1 see no key at all
+    assert np.abs(np.asarray(ref[:, sk + 63:])).max() == 0.0
+    for skip in (True, False):
+        out = attn_kernel.flash_attention(q, k, v, block_skipping=skip, **kw)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=2e-3, atol=2e-3)
+
+
+def test_skip_and_dense_paths_agree():
+    """block_skipping only removes fully-masked work: both paths must
+    produce the same numbers, not just the same oracle distance."""
+    q = jax.random.normal(KEY, (1, 256, 32), jnp.float32)
+    k = jax.random.normal(jax.random.PRNGKey(1), (1, 256, 32), jnp.float32)
+    v = jax.random.normal(jax.random.PRNGKey(2), (1, 256, 32), jnp.float32)
+    kw = dict(scale=0.17, causal=True, block_q=64, block_k=64,
+              interpret=True)
+    a = attn_kernel.flash_attention(q, k, v, block_skipping=True, **kw)
+    b = attn_kernel.flash_attention(q, k, v, block_skipping=False, **kw)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_active_block_pairs_match_mask():
+    """The block-level skip law must agree with a brute-force scan of the
+    element mask: a block pair is active iff any element survives."""
+    for causal, window in [(True, None), (True, 50), (False, 70)]:
+        sq = sk = 256
+        bq, bk = 64, 32
+        q_pos = np.arange(sq)[:, None]
+        k_pos = np.arange(sk)[None, :]
+        ok = np.ones((sq, sk), bool)
+        if causal:
+            ok &= q_pos >= k_pos
+        if window is not None:
+            ok &= (q_pos - k_pos) < window
+        brute = 0
+        for i in range(sq // bq):
+            for j in range(sk // bk):
+                brute += ok[i * bq:(i + 1) * bq, j * bk:(j + 1) * bk].any()
+        active, total = cost_model.attention_active_block_pairs(
+            sq, sk, bq, bk, causal=causal, window=window)
+        assert total == (sq // bq) * (sk // bk)
+        assert active == brute
+
+
+def test_causal_skip_halves_counted_k_steps():
+    """The measurable tentpole claim, in counted K-steps: causal prefill at
+    sq=sk runs the block triangle — >= 1.5x fewer (q, k) block pairs than
+    the dense grid for >= 3 q-blocks, ~2x asymptotically."""
+    active, total = cost_model.attention_active_block_pairs(
+        4096, 4096, 512, 512, causal=True)
+    n = 4096 // 512
+    assert active == n * (n + 1) // 2
+    assert total / active >= 1.5
+
+
+# ---------------------------------------------------------------------------
+# fused decode attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("b,hq,hkv,dh,cache_len,length,block_k", [
+    (2, 4, 2, 64, 256, 256, 128),    # full cache, GQA
+    (2, 4, 2, 64, 256, 100, 128),    # partial prefix
+    (1, 8, 1, 32, 300, 123, 128),    # cache_len % block_k != 0
+    (1, 8, 8, 32, 200, 77, 512),     # block_k > cache_len, MHA
+    (1, 2, 2, 32, 96, 1, 64),        # single valid slot
+])
+def test_decode_kernel_matches_reference(b, hq, hkv, dh, cache_len, length,
+                                         block_k):
+    q = jax.random.normal(KEY, (b, hq, dh), jnp.float32)
+    k = jax.random.normal(jax.random.PRNGKey(1), (b, cache_len, hkv, dh),
+                          jnp.float32)
+    v = jax.random.normal(jax.random.PRNGKey(2), (b, cache_len, hkv, dh),
+                          jnp.float32)
+    out = gqa_decode_attention(q, k, v, length=length, block_k=block_k,
+                               interpret=True)
+    ref = decode_ref(q, k, v, length=length)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_decode_kernel_traced_length_under_jit():
+    """The serving path passes `index + 1` as a traced scalar; the kernel's
+    scalar-prefetch skip must work inside jit with a runtime length."""
+    b, hq, hkv, dh, cache_len = 2, 4, 2, 32, 256
+    q = jax.random.normal(KEY, (b, hq, dh), jnp.float32)
+    k = jax.random.normal(jax.random.PRNGKey(1), (b, cache_len, hkv, dh),
+                          jnp.float32)
+    v = jax.random.normal(jax.random.PRNGKey(2), (b, cache_len, hkv, dh),
+                          jnp.float32)
+    f = jax.jit(lambda n: gqa_decode_attention(q, k, v, length=n,
+                                               block_k=128, interpret=True))
+    for n in (1, 100, 256):
+        np.testing.assert_allclose(
+            np.asarray(f(jnp.int32(n))),
+            np.asarray(decode_ref(q, k, v, length=n)),
+            rtol=2e-3, atol=2e-3)
+
+
+def test_decode_kernel_mixed_cache_dtype():
+    """bf16 activations against an f32 KV cache (the serve default)."""
+    b, hq, hkv, dh, cache_len = 1, 4, 2, 32, 128
+    q = jax.random.normal(KEY, (b, hq, dh), jnp.bfloat16)
+    k = jax.random.normal(jax.random.PRNGKey(1), (b, cache_len, hkv, dh),
+                          jnp.float32)
+    v = jax.random.normal(jax.random.PRNGKey(2), (b, cache_len, hkv, dh),
+                          jnp.float32)
+    out = gqa_decode_attention(q, k, v, length=90, block_k=64,
+                               interpret=True)
+    ref = decode_ref(q.astype(jnp.float32), k, v, length=90)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref), rtol=3e-2, atol=3e-2)

@@ -1,0 +1,97 @@
+#!/usr/bin/env python
+"""Benchmark-report schema checker, run by the CI bench-smoke job.
+
+Validates a BENCH_kernels.json produced by `benchmarks/run.py` (typically
+`--smoke`):
+
+1. **Schema version** matches what the current harness writes — a row shape
+   regression (renamed/dropped key) fails loudly instead of silently
+   truncating the perf trajectory.
+2. **Every kernel family is present and non-empty**, with the fields the
+   trajectory diffs rely on.
+3. **The causal-skip row exists and holds the tentpole claim**: counted
+   K-steps of the block-skipping kernel at sq=sk must be >= 1.5x fewer
+   than the dense grid (the deterministic form of the ~2x causal-prefill
+   speedup; wall-clock is recorded alongside but interpret-mode grid
+   overhead makes it advisory off-TPU).
+
+Usage: python tools/check_bench.py [BENCH_kernels.json]
+Exit code 0 = clean; 1 = problems (listed one per line).
+"""
+
+from __future__ import annotations
+
+import json
+import pathlib
+import sys
+
+SCHEMA = 3
+
+REQUIRED_LIST_KEYS = {
+    "matmul_tuned_vs_fixed": ("shape", "tuned_tile", "speedup_model"),
+    "spmv_tuned": ("matrix", "block_rows", "waste"),
+    "attention_tuned_vs_fixed": ("shape", "tuned_block", "speedup_model"),
+}
+REQUIRED_DICT_KEYS = {
+    "matmul_measured": ("tuned_us", "mxu_us", "speedup_vs_mxu"),
+    "attention_measured": ("tuned_us", "fixed_us", "speedup_vs_fixed"),
+    "attention_causal_skip": ("k_steps_dense", "k_steps_skip",
+                              "kstep_speedup", "wall_speedup", "block"),
+    "attention_decode": ("tuned_block_k", "tuned_us", "fixed_us",
+                         "speedup_vs_fixed", "model_time_us"),
+}
+MIN_CAUSAL_KSTEP_SPEEDUP = 1.5
+
+
+def check(path: pathlib.Path) -> list[str]:
+    problems: list[str] = []
+    try:
+        report = json.loads(path.read_text())
+    except (OSError, ValueError) as e:
+        return [f"{path}: unreadable report ({e!r})"]
+
+    if report.get("schema") != SCHEMA:
+        problems.append(f"schema regressed: {report.get('schema')!r} "
+                        f"!= {SCHEMA}")
+
+    for key, fields in REQUIRED_LIST_KEYS.items():
+        rows = report.get(key)
+        if not isinstance(rows, list) or not rows:
+            problems.append(f"{key}: missing or empty")
+            continue
+        for f in fields:
+            if any(f not in r for r in rows):
+                problems.append(f"{key}: rows missing field {f!r}")
+
+    for key, fields in REQUIRED_DICT_KEYS.items():
+        row = report.get(key)
+        if not isinstance(row, dict):
+            problems.append(f"{key}: missing row")
+            continue
+        for f in fields:
+            if f not in row:
+                problems.append(f"{key}: missing field {f!r}")
+
+    skip = report.get("attention_causal_skip")
+    if isinstance(skip, dict) and "kstep_speedup" in skip:
+        if skip["kstep_speedup"] < MIN_CAUSAL_KSTEP_SPEEDUP:
+            problems.append(
+                f"attention_causal_skip: kstep_speedup "
+                f"{skip['kstep_speedup']:.3f} < {MIN_CAUSAL_KSTEP_SPEEDUP} "
+                f"— block skipping regressed")
+    return problems
+
+
+def main(argv: list[str]) -> int:
+    path = pathlib.Path(argv[1] if len(argv) > 1 else "BENCH_kernels.json")
+    problems = check(path)
+    for p in problems:
+        print(p)
+    if not problems:
+        print(f"ok: {path} (schema {SCHEMA}, causal kstep_speedup "
+              f">= {MIN_CAUSAL_KSTEP_SPEEDUP})")
+    return 1 if problems else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv))
