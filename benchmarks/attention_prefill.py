@@ -4,7 +4,7 @@ The third kernel family through the tuner-vs-fixed lens (matmul:
 table1_matmul, SpMV: table2_spmv).  'fixed' is what `mha_attention` callers
 ran before the engine: the hand-picked (512, 512) default block pair.
 'tuned' goes through the full DSE -> (measure) -> cache path
-(`autotune.tune_attention`).  Shapes are the serving prefill shapes — the
+(`autotune.tune("attention", ...)`).  Shapes are the serving prefill shapes — the
 (batch*heads, prompt, prompt, head_dim) folds `launch.serve` pre-tunes at
 startup — derived from real arch configs so the benchmark tracks what the
 server actually runs.
@@ -17,7 +17,7 @@ import jax.numpy as jnp
 
 import repro.configs as configs
 from repro.core import cost_model
-from repro.kernels import autotune
+from repro.kernels import autotune, registry
 from repro.kernels.attention import kernel as attn_kernel
 
 # (arch, serving batch, prompt length) -> the prefill fold the server tunes.
@@ -68,20 +68,20 @@ def tuned_vs_fixed():
     for s in prefill_shapes():
         fq = min(FIXED_BLOCK, s["sq"])
         fk = min(FIXED_BLOCK, s["sk"])
+        problem = {"bh": s["bh"], "sq": s["sq"], "sk": s["sk"],
+                   "dh": s["dh"], "causal": s["causal"],
+                   "window": s["window"]}
+        spec = registry.get("attention")
         fixed = cost_model.attention_time_model(
             s["bh"], s["sq"], s["sk"], s["dh"], fq, fk, causal=s["causal"],
             window=s["window"])
-        plan = autotune.tune_attention(
-            s["bh"], s["sq"], s["sk"], s["dh"], jnp.bfloat16,
-            causal=s["causal"], window=s["window"])
-        tuned = cost_model.attention_time_model(
-            s["bh"], s["sq"], s["sk"], s["dh"], plan.block_q, plan.block_k,
-            causal=s["causal"], window=s["window"])
+        plan = autotune.tune("attention", problem, jnp.bfloat16)
+        tuned = spec.cost_fn(problem, plan.knobs)
         recs.append({
             "arch": s["arch"], "batch": s["batch"], "prompt": s["prompt"],
             "shape": [s["bh"], s["sq"], s["sk"], s["dh"]],
             "fixed_block": [fq, fk],
-            "tuned_block": [plan.block_q, plan.block_k],
+            "tuned_block": [plan.knobs["block_q"], plan.knobs["block_k"]],
             "tuned_source": plan.source,
             "tuned_measured_us": plan.measured_us,
             "gflops_fixed_model": fixed["gflops"],
@@ -146,7 +146,9 @@ def decode_step_measured(b: int = 2, hq: int = 8, hkv: int = 2,
     if length is None:
         length = cache_len * 3 // 4 + 1          # ragged on purpose
     g = hq // hkv
-    plan = autotune.tune_decode(b * hkv, g, cache_len, dh, jnp.float32)
+    problem = {"bkv": b * hkv, "g": g, "cache_len": cache_len, "dh": dh}
+    plan = autotune.tune("decode", problem, jnp.float32)
+    tuned_bk = plan.knobs["block_k"]
     fixed_bk = min(FIXED_BLOCK, cache_len)
     scale = 1.0 / (dh ** 0.5)
     q = jax.random.normal(jax.random.PRNGKey(0), (b * hkv, g, dh),
@@ -160,19 +162,18 @@ def decode_step_measured(b: int = 2, hq: int = 8, hkv: int = 2,
         bk: (lambda bk=bk: attn_decode.decode_attention(
             q, k, v, scale=scale, length=length, block_k=bk,
             interpret=interpret))
-        for bk in {plan.block_k, fixed_bk}}, reps, trials)
+        for bk in {tuned_bk, fixed_bk}}, reps, trials)
 
-    model = cost_model.decode_time_model(b * hkv, g, cache_len, dh,
-                                         plan.block_k)
+    model = registry.get("decode").cost_fn(problem, plan.knobs)
     return {
         "shape": [b * hkv, g, cache_len, dh],
         "length": length,
-        "tuned_block_k": plan.block_k,
+        "tuned_block_k": tuned_bk,
         "tuned_source": plan.source,
-        "tuned_us": slots[plan.block_k],
+        "tuned_us": slots[tuned_bk],
         "fixed_block_k": fixed_bk,
         "fixed_us": slots[fixed_bk],
-        "speedup_vs_fixed": slots[fixed_bk] / slots[plan.block_k],
+        "speedup_vs_fixed": slots[fixed_bk] / slots[tuned_bk],
         "model_time_us": model["time_s"] * 1e6,
         "interpret": interpret,
     }
@@ -185,7 +186,10 @@ def tuned_vs_fixed_measured(bh: int = 4, seq: int = 256, dh: int = 32,
     Interleaved best-of-``trials`` timing, one slot per distinct block pair
     (same discipline as table1_matmul.tuned_vs_fixed_measured)."""
     interpret = jax.default_backend() != "tpu"
-    plan = autotune.tune_attention(bh, seq, seq, dh, jnp.float32)
+    plan = autotune.tune("attention", {"bh": bh, "sq": seq, "sk": seq,
+                                       "dh": dh, "causal": True,
+                                       "window": None}, jnp.float32)
+    tuned = (plan.knobs["block_q"], plan.knobs["block_k"])
     fixed = (min(FIXED_BLOCK, seq), min(FIXED_BLOCK, seq))
     scale = 1.0 / (dh ** 0.5)
     q = jax.random.normal(jax.random.PRNGKey(0), (bh, seq, dh), jnp.float32)
@@ -196,12 +200,12 @@ def tuned_vs_fixed_measured(bh: int = 4, seq: int = 256, dh: int = 32,
         (bq, bk): (lambda bq=bq, bk=bk: attn_kernel.flash_attention(
             q, k, v, scale=scale, causal=True, block_q=bq, block_k=bk,
             interpret=interpret))
-        for (bq, bk) in {(plan.block_q, plan.block_k), fixed}}, reps, trials)
+        for (bq, bk) in {tuned, fixed}}, reps, trials)
 
-    tuned_us = slots[(plan.block_q, plan.block_k)]
+    tuned_us = slots[tuned]
     return {
         "shape": [bh, seq, seq, dh],
-        "tuned_block": [plan.block_q, plan.block_k],
+        "tuned_block": list(tuned),
         "tuned_source": plan.source,
         "tuned_us": tuned_us,
         "fixed_block": list(fixed),

@@ -18,7 +18,7 @@ import numpy as np
 
 from repro.core import cost_model, dse, tiling
 from repro.core.hardware import TPU_V5E
-from repro.kernels import autotune
+from repro.kernels import autotune, registry
 from repro.kernels.matmul import matmul
 from repro.kernels.matmul.ref import matmul_ref
 
@@ -75,12 +75,13 @@ def tuned_vs_fixed():
     for m, n, k in TABLE1_SHAPES:
         fixed = tiling.solve_tpu(m=m, n=n, k=k)
         fixed_res = cost_model.matmul_time_model(m, n, k, fixed)
-        plan = autotune.tune_matmul(m, n, k, jnp.bfloat16)
-        tuned_res = cost_model.matmul_time_model(m, n, k, plan.tile)
+        problem = {"m": m, "n": n, "k": k}
+        plan = autotune.tune("matmul", problem, jnp.bfloat16)
+        tuned_res = registry.get("matmul").cost_fn(problem, plan.knobs)
         recs.append({
             "shape": [m, n, k],
             "fixed_tile": [fixed.y, fixed.x, fixed.z],
-            "tuned_tile": [plan.tile.y, plan.tile.x, plan.tile.z],
+            "tuned_tile": list(plan.knobs["tile"]),
             "tuned_source": plan.source,
             "tuned_measured_us": plan.measured_us,
             "gflops_fixed_model": fixed_res["gflops"],
@@ -105,7 +106,8 @@ def tuned_vs_fixed_measured(size: int = 256, reps: int = 6, trials: int = 3):
     a = jax.random.normal(key, (m, k), jnp.float32)
     b = jax.random.normal(jax.random.PRNGKey(1), (k, n), jnp.float32)
     interpret = jax.default_backend() != "tpu"
-    plan = autotune.tune_matmul(m, n, k, jnp.float32)
+    plan = autotune.tune("matmul", {"m": m, "n": n, "k": k}, jnp.float32)
+    tuned_tile = tiling.Tile(*plan.knobs["tile"])
     from repro.kernels.matmul.ops import clamp_tile
     baselines = {
         "mxu": tiling.Tile(128, 128, 128),
@@ -117,7 +119,7 @@ def tuned_vs_fixed_measured(size: int = 256, reps: int = 6, trials: int = 3):
     # tile shares its number — two measurements of the same jitted call
     # would otherwise report drift as speedup), measured interleaved so
     # machine drift hits all configs alike.
-    slots = {plan.tile: float("inf")}
+    slots = {tuned_tile: float("inf")}
     for t in baselines.values():
         slots.setdefault(t, float("inf"))
     for _ in range(trials):
@@ -126,10 +128,10 @@ def tuned_vs_fixed_measured(size: int = 256, reps: int = 6, trials: int = 3):
                 lambda t=t: matmul(a, b, tile=t, interpret=interpret,
                                    use_kernel=True), reps=reps))
 
-    tuned_us = slots[plan.tile]
+    tuned_us = slots[tuned_tile]
     out = {
         "shape": [m, n, k],
-        "tuned_tile": [plan.tile.y, plan.tile.x, plan.tile.z],
+        "tuned_tile": [tuned_tile.y, tuned_tile.x, tuned_tile.z],
         "tuned_source": plan.source,
         "tuned_us": tuned_us,
         "interpret": interpret,

@@ -120,19 +120,21 @@ def tuned_records(check_blocked_on: str = "Maragal_2"):
     for name in MATRICES:
         indptr, indices, data, shape = synthesize(name)
         mat = pack_csr(indptr, indices, data, shape, scheme="sorted")
-        plan = autotune.tune_spmv(mat, max_measure_elems=1 << 18)
+        plan = autotune.tune("spmv", {"mat": mat},
+                             max_measure_elems=1 << 18)
         rec = {
             "matrix": name, "shape": list(shape), "nnz": mat.nnz,
-            "block_rows": plan.block_rows, "block_cols": plan.block_cols,
-            "source": plan.source, "waste": plan.waste,
-            "model_time_us": plan.model_time_s * 1e6,
+            "block_rows": plan.knobs["block_rows"],
+            "block_cols": plan.knobs["block_cols"],
+            "source": plan.source, "waste": plan.detail.get("waste"),
+            "model_time_us": plan.model_time_us,
             "measured_us": plan.measured_us,
         }
         if name == check_blocked_on:
             n = shape[1]
             x = jnp.asarray(
                 np.random.default_rng(2).standard_normal(n), jnp.float32)
-            y_blk = spmv(mat, x, block_rows=plan.block_rows,
+            y_blk = spmv(mat, x, block_rows=plan.knobs["block_rows"],
                          block_cols=max(128, (n // 2) // 128 * 128),
                          interpret=True)
             y_ref = spmv(mat, x, use_kernel=False)

@@ -17,7 +17,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import cost_model, dse, manycore
-from repro.kernels import autotune, tuned_matmul, tuned_spmv
+from repro.kernels import autotune
 from repro.kernels.matmul.ref import matmul_ref
 from repro.kernels.spmv import pack_csr
 
@@ -40,17 +40,19 @@ def main():
           f"({res['gflops']:.0f} GFLOP/s model)")
 
     # 4a. run the autotuned matmul kernel (small instance, interpret mode).
-    # tuned_matmul closes the loop: rank tiles with the model, time the
+    # dispatch("matmul", ...) closes the loop through the KernelSpec
+    # registry: rank tiles with the family's declared cost model, time the
     # top-K on the backend, memoize the winner on disk.
     key = jax.random.PRNGKey(0)
     a = jax.random.normal(key, (256, 192), jnp.float32)
     b = jax.random.normal(key, (192, 128), jnp.float32)
-    out = tuned_matmul(a, b, interpret=True)
+    out = autotune.dispatch("matmul", a, b, interpret=True)
     (am, ak), bn = a.shape, b.shape[1]
-    plan = autotune.tune_matmul(am, bn, ak)  # cache hit from the line above
+    # cache hit from the dispatch above
+    plan = autotune.tune("matmul", {"m": am, "n": bn, "k": ak})
     err = float(jnp.max(jnp.abs(out - matmul_ref(a, b))))
     print(f"\ntuned matmul vs oracle: max err {err:.2e} "
-          f"(tile {plan.tile}, source={plan.source})")
+          f"(tile {plan.knobs['tile']}, source={plan.source})")
 
     # 4b. run the balanced SpMV (paper §V-B)
     rng = np.random.default_rng(0)
@@ -61,12 +63,13 @@ def main():
     vals = dense[dense != 0].astype(np.float32)
     mat = pack_csr(indptr, cols, vals, dense.shape, scheme="sorted")
     x = rng.standard_normal(300).astype(np.float32)
-    y = tuned_spmv(mat, jnp.asarray(x), interpret=True)
-    splan = autotune.tune_spmv(mat)
+    y = autotune.dispatch("spmv", mat, jnp.asarray(x), interpret=True)
+    splan = autotune.tune("spmv", {"mat": mat})
     err = float(np.max(np.abs(np.asarray(y) - dense @ x)))
     print(f"tuned spmv vs dense: max err {err:.2e}  "
-          f"(block_rows={splan.block_rows}, block_cols={splan.block_cols}, "
-          f"active/fetched waste {splan.waste:.2f}x)")
+          f"(block_rows={splan.knobs['block_rows']}, "
+          f"block_cols={splan.knobs['block_cols']}, "
+          f"active/fetched waste {splan.detail['waste']:.2f}x)")
 
     # 5. the deployable plan
     print("\n=== deploy plan ===")

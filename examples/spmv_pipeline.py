@@ -52,11 +52,12 @@ def main():
     # sorted packing (the balance metric above is its ranking input), and
     # demonstrate the blocked-x kernel that lifts the whole-vector VMEM cap.
     mat = pack_csr(indptr, indices, data, shape, scheme="sorted")
-    plan = autotune.tune_spmv(mat)
-    print(f"\nautotuned execution config: block_rows={plan.block_rows}, "
-          f"block_cols={plan.block_cols} (None = whole-x resident), "
+    plan = autotune.tune("spmv", {"mat": mat})
+    print(f"\nautotuned execution config: "
+          f"block_rows={plan.knobs['block_rows']}, "
+          f"block_cols={plan.knobs['block_cols']} (None = whole-x resident), "
           f"source={plan.source}")
-    y_blk = spmv(mat, jnp.asarray(x), block_rows=plan.block_rows,
+    y_blk = spmv(mat, jnp.asarray(x), block_rows=plan.knobs['block_rows'],
                  block_cols=256, interpret=True)
     err = float(jnp.max(jnp.abs(y_blk - spmv(mat, jnp.asarray(x),
                                              use_kernel=False))))

@@ -7,6 +7,14 @@ analytical machine model (`core.cost_model`) or by an actual dry-run
 lower+compile (`score=\"compiled\"`), which is the exact analogue of "simulate
 the generated model".  Going from manual to automated DSE is a deliberate
 beyond-paper improvement (recorded in DESIGN.md).
+
+This module now holds only the *generic* DSE machinery (`Candidate`,
+`grid`, `explore`) plus the sharding axis.  The per-kernel-family candidate
+enumerations that used to live here moved next to their kernels as
+declarative `KernelSpec` registrations (`kernels/<family>/spec.py`); the
+`rank_*` functions below are kept as thin delegating shims for older call
+sites (they import the spec modules lazily, so the core layer stays
+import-clean of kernels).
 """
 
 from __future__ import annotations
@@ -15,7 +23,7 @@ import dataclasses
 import itertools
 from typing import Any, Callable, Iterable, Sequence
 
-from repro.core import cost_model, hardware, tiling
+from repro.core import hardware
 
 
 @dataclasses.dataclass
@@ -54,7 +62,7 @@ def explore(
 
 
 # ---------------------------------------------------------------------------
-# Ready-made explorations
+# Kernel-family rankings — moved to kernels/<family>/spec.py
 # ---------------------------------------------------------------------------
 
 def rank_matmul_tiles(
@@ -64,45 +72,12 @@ def rank_matmul_tiles(
     align: int = hardware.MXU_DIM,
     top: int = 8,
 ) -> list[Candidate]:
-    """Sweep aligned (y, x) pairs; score with the analytical matmul model.
-
-    This is the paper's Table-I exploration (vary cores/local-mem, simulate,
-    rank) compressed to one call.  The eq.2 seed is always included, so the
-    top candidate is never worse than the paper's closed form.  The ranking
-    is deterministic: candidates are scored by model time with (y, x, z) as
-    the tie-break, so equal-cost points always order the same way — this is
-    what makes the autotune cache reproducible.  Each returned
-    ``Candidate.detail`` carries the concrete ``tiling.Tile`` plus the model
-    row (`cost_model.matmul_time_model`).
-    """
-    chip = hardware.TPU_V5E
-    budget = vmem_bytes if vmem_bytes is not None else chip.usable_vmem()
-
-    def evaluate(knobs: dict) -> tuple[float, dict]:
-        y, x = knobs["y"], knobs["x"]
-        z_budget = (budget - y * x * 4) // max((y + 2 * x) * dtype_bytes, 1)
-        z = max(align, (min(z_budget, k) // align) * align)
-        t = tiling.Tile(y, x, z)
-        if t.vmem_elems() * dtype_bytes + y * x * 4 > budget + y * x * dtype_bytes:
-            return float("inf"), {}
-        res = cost_model.matmul_time_model(m, n, k, t, dtype_bytes=dtype_bytes)
-        return res["time_s"], {"tile": t, **res}
-
-    seed = tiling.solve_tpu(budget, dtype_bytes, m=m, n=n, k=k)
-    ys = sorted({align, 2 * align, 4 * align, 8 * align, seed.y})
-    xs = sorted({align, 2 * align, 4 * align, 8 * align, seed.x})
-    space = {"y": [v for v in ys if v <= max(m, align)],
-             "x": [v for v in xs if v <= max(n, align)]}
-    ranked = explore(space, evaluate, top=max(top, 1))
-    ranked = [c for c in ranked if c.detail and "tile" in c.detail]
-    ranked.sort(key=lambda c: (c.score, c.detail["tile"].y,
-                               c.detail["tile"].x, c.detail["tile"].z))
-    if not ranked:
-        res = cost_model.matmul_time_model(m, n, k, seed,
-                                           dtype_bytes=dtype_bytes)
-        ranked = [Candidate({"y": seed.y, "x": seed.x}, res["time_s"],
-                            {"tile": seed, **res})]
-    return ranked[:top]
+    """Deprecated: moved to `kernels.matmul.spec.rank_tiles` (the matmul
+    family's KernelSpec enumeration).  Kept as a delegating shim."""
+    from repro.kernels.matmul import spec as matmul_spec
+    return matmul_spec.rank_tiles(m, n, k, vmem_bytes=vmem_bytes,
+                                  dtype_bytes=dtype_bytes, align=align,
+                                  top=top)
 
 
 def autotune_matmul_tile(
@@ -110,7 +85,7 @@ def autotune_matmul_tile(
     vmem_bytes: int | None = None,
     dtype_bytes: int = 2,
     align: int = hardware.MXU_DIM,
-) -> tiling.Tile:
+):
     """Best analytical tile — `rank_matmul_tiles` winner (paper flow, one
     call).  Kept as the cheap non-measuring entry point; the measuring
     engine lives in `repro.kernels.autotune`."""
@@ -128,60 +103,12 @@ def rank_attention_blocks(
     block_cands: Sequence[int] = (128, 256, 512, 1024),
     top: int = 8,
 ) -> list[Candidate]:
-    """Sweep (block_q, block_k) pairs for the flash-attention kernel; score
-    with `cost_model.attention_time_model` under the VMEM budget.
-
-    The kernel clamps blocks to the sequence (``min(block, s)``) and pads
-    ragged remainders, so candidates are enumerated in *effective* block
-    space and deduped — a 64-token prefill collapses every block_q
-    candidate onto 64.  The mask enters the score: with block skipping the
-    model credits the causal triangle / window band, so the ranking trades
-    deeper q-blocks (less K/V re-streaming) against coarser masked-area
-    coverage instead of assuming every block runs.  Ranking is
-    deterministic: model time with (block_q, block_k) as the tie-break,
-    descending block_q preferred on ties.  Each ``Candidate.detail``
-    carries the effective blocks plus the model row.  Never returns empty:
-    if the budget rejects everything, the smallest legal pair is scored and
-    returned anyway (the kernel itself is the final arbiter on real VMEM).
-    """
-    chip = hardware.TPU_V5E
-    budget = vmem_bytes if vmem_bytes is not None else chip.usable_vmem()
-
-    # The kernel pads ragged remainders (and masks the tail), so candidates
-    # need not divide the sequence — enumerate effective (clamped) blocks
-    # and dedupe; a 64-token prefill still collapses onto a single pair.
-    pairs = []
-    seen = set()
-    for bq in block_cands:
-        for bk in block_cands:
-            ebq, ebk = min(bq, sq), min(bk, sk)
-            if (ebq, ebk) in seen:
-                continue
-            seen.add((ebq, ebk))
-            pairs.append({"block_q": ebq, "block_k": ebk})
-
-    def evaluate(knobs: dict) -> tuple[float, dict]:
-        res = cost_model.attention_time_model(
-            bh, sq, sk, dh, knobs["block_q"], knobs["block_k"],
-            causal=causal, window=window, dtype_bytes=dtype_bytes)
-        if res["vmem_bytes"] > budget:
-            return float("inf"), {}
-        return res["time_s"], {**knobs, **res}
-
-    # Score ALL pairs before truncating: explore()'s internal top-cut is
-    # insertion-ordered on ties, which would drop the deeper-block_q
-    # candidates the tie-break below exists to prefer.
-    ranked = explore(pairs, evaluate, top=len(pairs))
-    ranked = [c for c in ranked if c.detail and "block_q" in c.detail]
-    ranked.sort(key=lambda c: (c.score, -c.detail["block_q"],
-                               c.detail["block_k"]))
-    if not ranked:
-        knobs = min(pairs, key=lambda p: (p["block_q"], p["block_k"]))
-        res = cost_model.attention_time_model(
-            bh, sq, sk, dh, knobs["block_q"], knobs["block_k"],
-            causal=causal, window=window, dtype_bytes=dtype_bytes)
-        ranked = [Candidate(knobs, res["time_s"], {**knobs, **res})]
-    return ranked[:top]
+    """Deprecated: moved to `kernels.attention.spec.rank_attention_blocks`
+    (the attention family's KernelSpec enumeration).  Delegating shim."""
+    from repro.kernels.attention import spec as attn_spec
+    return attn_spec.rank_attention_blocks(
+        bh, sq, sk, dh, vmem_bytes=vmem_bytes, dtype_bytes=dtype_bytes,
+        causal=causal, window=window, block_cands=block_cands, top=top)
 
 
 def rank_decode_blocks(
@@ -191,42 +118,12 @@ def rank_decode_blocks(
     block_cands: Sequence[int] = (128, 256, 512, 1024, 2048),
     top: int = 8,
 ) -> list[Candidate]:
-    """Sweep block_k for the fused decode-attention kernel
-    (kernels/attention/decode.py); score with
-    `cost_model.decode_time_model` under the VMEM budget.
-
-    ``bkv = batch*kv_heads`` folded rows, ``g`` the GQA query group riding
-    each row, ``kv_len`` the KV-cache depth the server allocated.  The knob
-    trades tail over-fetch (coarse block_k rounds the cache up) against
-    grid-step count; ranking is deterministic — model time, then *larger*
-    block_k on ties (fewer grid steps for the same traffic).  Never empty:
-    the smallest candidate is scored unconditionally if the budget rejects
-    everything (the kernel is the final arbiter on real VMEM).
-    """
-    chip = hardware.TPU_V5E
-    budget = vmem_bytes if vmem_bytes is not None else chip.usable_vmem()
-
-    cands = sorted({min(bk, max(kv_len, 1)) for bk in block_cands})
-
-    def evaluate(knobs: dict) -> tuple[float, dict]:
-        res = cost_model.decode_time_model(bkv, g, kv_len, dh,
-                                           knobs["block_k"],
-                                           dtype_bytes=dtype_bytes)
-        if res["vmem_bytes"] > budget:
-            return float("inf"), {}
-        return res["time_s"], {**knobs, **res}
-
-    ranked = explore([{"block_k": bk} for bk in cands], evaluate,
-                     top=len(cands))
-    ranked = [c for c in ranked if c.detail and "block_k" in c.detail]
-    ranked.sort(key=lambda c: (c.score, -c.detail["block_k"]))
-    if not ranked:
-        bk = cands[0]
-        res = cost_model.decode_time_model(bkv, g, kv_len, dh, bk,
-                                           dtype_bytes=dtype_bytes)
-        ranked = [Candidate({"block_k": bk}, res["time_s"],
-                            {"block_k": bk, **res})]
-    return ranked[:top]
+    """Deprecated: moved to `kernels.attention.spec.rank_decode_blocks`
+    (the decode family's KernelSpec enumeration).  Delegating shim."""
+    from repro.kernels.attention import spec as attn_spec
+    return attn_spec.rank_decode_blocks(
+        bkv, g, kv_len, dh, vmem_bytes=vmem_bytes, dtype_bytes=dtype_bytes,
+        block_cands=block_cands, top=top)
 
 
 def sharding_candidates(num_chips: int, min_model: int = 1) -> list[dict]:

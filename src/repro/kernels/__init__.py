@@ -2,18 +2,30 @@
 
 - matmul/    — paper §V-A: eq.2-tiled blocked dense matmul (fused epilogue)
 - spmv/      — paper §V-B: nnz-balanced ELL sparse matvec (+ blocked-x)
-- attention/ — flash attention (prefill hot spot; beyond-paper)
-- autotune   — DSE -> measure -> cache engine; `tuned_matmul`/`tuned_spmv`/
-               `tuned_attention`/`tuned_decode` are the entry points
-               production paths should call.  `select_serving_batch` lifts
-               the same loop to the serving-batch knob.
+- attention/ — flash attention (prefill hot spot; beyond-paper) + the fused
+               single-query decode kernel
+- registry   — declarative KernelSpec API: a tuned kernel family is a
+               registration (candidates + cost model + launcher), not a
+               pipeline copy; each family's spec lives in
+               `<family>/spec.py`
+- autotune   — the one generic DSE -> measure -> cache engine:
+               `tune(spec, problem)` and `dispatch(family, *args)` are the
+               entry points production paths should call (the legacy
+               `tuned_*` wrappers remain as deprecation shims).
+               `select_serving_batch` lifts the same loop to the
+               serving-batch knob.
 
 Each kernel dir has kernel.py (pl.pallas_call + BlockSpec), ops.py (jitted
-wrapper with backend dispatch), ref.py (pure-jnp oracle).  Tests sweep
-shapes/dtypes in interpret mode against the oracles.
+wrapper with backend dispatch), ref.py (pure-jnp oracle), spec.py (the
+KernelSpec registration).  Tests sweep shapes/dtypes in interpret mode
+against the oracles.
 """
 
-from repro.kernels.autotune import (select_serving_batch, tune_attention,
-                                    tune_decode, tune_matmul, tune_spmv,
+from repro.kernels.autotune import (dispatch, plan_for_model,
+                                    select_serving_batch, tune,
+                                    tune_attention, tune_decode,
+                                    tune_matmul, tune_spmv,
                                     tuned_attention, tuned_decode,
                                     tuned_matmul, tuned_spmv)  # noqa: F401
+from repro.kernels.registry import (KernelSpec, Plan, families,
+                                    register)  # noqa: F401

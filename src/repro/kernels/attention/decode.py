@@ -11,14 +11,16 @@ K/V stream across the whole group (the same fold the prefill kernel gets
 from `ops.mha_attention`, but per KV head instead of per q head — decode
 must not `jnp.repeat` the cache).
 
-Cache-length skipping: the valid prefix length (``index + 1``) is a traced
-scalar at serving time, so it rides a scalar-prefetch argument: the K/V
-index maps clamp every grid step past the last valid block onto it (Pallas
+Cache-length skipping: the valid prefix length is a traced value at
+serving time, so it rides a scalar-prefetch argument — one int32 *per
+folded row* (continuous batching gives every sequence its own prefix; a
+shared scalar is the degenerate broadcast case).  For each row, the K/V
+index maps clamp every grid step past its last valid block onto it (Pallas
 elides the repeated DMA) and a `@pl.when` guard skips the FLOPs — blocks
-past the write index are neither streamed nor multiplied, the decode
+past a row's write index are neither streamed nor multiplied, the decode
 analogue of the prefill kernel's causal block triangle.  Cache lengths not
 divisible by block_k are padded once at the call site and masked via the
-same length scalar.
+same per-row length.
 """
 
 from __future__ import annotations
@@ -36,8 +38,9 @@ NEG_INF = -1e30
 def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref,
                    m_ref, l_ref, acc_ref, *,
                    scale: float, block_k: int, k_steps: int):
+    bb = pl.program_id(0)
     jj = pl.program_id(1)
-    length = len_ref[0]
+    length = len_ref[bb]
     last = jnp.maximum(0, (length - 1) // block_k)
 
     @pl.when(jj == 0)
@@ -74,15 +77,32 @@ def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref,
                     jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
 
 
+def _row_lengths(length, rows: int, kl: int) -> jax.Array:
+    """Normalize ``length`` (python int / traced scalar / per-row vector)
+    to a clamped int32 vector of one valid-prefix length per folded row —
+    the scalar-prefetch payload.  The scalar case is the degenerate
+    uniform broadcast."""
+    lv = jnp.asarray(length, jnp.int32)
+    if lv.ndim == 0:
+        lv = jnp.full((rows,), lv, jnp.int32)
+    elif lv.shape != (rows,):
+        raise ValueError(
+            f"length must be a scalar or a ({rows},) per-row vector, "
+            f"got shape {lv.shape}")
+    return jnp.minimum(lv, kl)
+
+
 def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
                      scale: float, length, block_k: int = 512,
                      interpret: bool = False) -> jax.Array:
     """q: (BKV, g, dh); k, v: (BKV, L, dh); length: valid cache prefix.
 
-    ``length`` may be a python int or a traced int32 scalar (the serving
-    cache index + 1); keys at positions >= length are masked and their
-    blocks skipped.  The KV-head fold (BKV = B * Hkv) is the caller's job —
-    see `gqa_decode_attention`.
+    ``length`` may be a python int, a traced int32 scalar (the serving
+    cache index + 1), or a per-row int32 vector of shape (BKV,) — the
+    continuous-batching case where every sequence sits at its own depth.
+    Keys at positions >= the row's length are masked and their blocks
+    skipped per row.  The KV-head fold (BKV = B * Hkv) is the caller's
+    job — see `gqa_decode_attention`.
     """
     out_dtype = q.dtype
     if q.dtype != k.dtype:
@@ -98,10 +118,10 @@ def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
         k = jnp.pad(k, ((0, 0), (0, k_pad), (0, 0)))
         v = jnp.pad(v, ((0, 0), (0, k_pad), (0, 0)))
     k_steps = (kl + k_pad) // block_k
-    length = jnp.minimum(jnp.asarray(length, jnp.int32), kl).reshape(1)
+    lengths = _row_lengths(length, bkv, kl)
 
     def kv_index(b, j, len_ref):
-        last = jnp.maximum(0, (len_ref[0] - 1) // block_k)
+        last = jnp.maximum(0, (len_ref[b] - 1) // block_k)
         return (b, jnp.minimum(j, last), 0)
 
     fn = functools.partial(_decode_kernel, scale=scale, block_k=block_k,
@@ -126,7 +146,7 @@ def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((bkv, g, dh), q.dtype),
         interpret=interpret,
-    )(length, q, k, v)
+    )(lengths, q, k, v)
     return out.astype(out_dtype)
 
 
@@ -137,13 +157,22 @@ def gqa_decode_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
     """q: (B, Hq, dh); k, v: (B, L, Hkv, dh) -> (B, Hq, dh).
 
     Folds the GQA group into the q-row axis per KV head (no cache repeat)
-    and dispatches to the fused kernel.
+    and dispatches to the fused kernel.  ``length`` is a scalar or a (B,)
+    per-sequence vector; the fold repeats it across each sequence's KV
+    heads (row b*Hkv+h belongs to sequence b).
     """
     b, hq, dh = q.shape
     _, kl, hkv, _ = k.shape
     g = hq // hkv
     if scale is None:
         scale = 1.0 / (dh ** 0.5)
+    lv = jnp.asarray(length, jnp.int32)
+    if lv.ndim == 1:
+        if lv.shape != (b,):
+            raise ValueError(
+                f"length must be a scalar or a ({b},) per-sequence vector, "
+                f"got shape {lv.shape}")
+        length = jnp.repeat(lv, hkv)
     qf = q.reshape(b, hkv, g, dh).reshape(b * hkv, g, dh)
     kf = k.transpose(0, 2, 1, 3).reshape(b * hkv, kl, dh)
     vf = v.transpose(0, 2, 1, 3).reshape(b * hkv, kl, dh)
@@ -154,7 +183,8 @@ def gqa_decode_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
 
 def decode_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
                length, scale: float | None = None) -> jax.Array:
-    """Pure-jnp oracle for `gqa_decode_attention` (materialized logits)."""
+    """Pure-jnp oracle for `gqa_decode_attention` (materialized logits).
+    ``length`` is a scalar or a (B,) per-sequence vector."""
     b, hq, dh = q.shape
     _, kl, hkv, _ = k.shape
     g = hq // hkv
@@ -164,8 +194,16 @@ def decode_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
     kr = k.transpose(0, 2, 1, 3).astype(jnp.float32)    # (b, hkv, kl, dh)
     vr = v.transpose(0, 2, 1, 3).astype(jnp.float32)
     s = jnp.einsum("bhgd,bhkd->bhgk", qr, kr) * scale
-    valid = jnp.arange(kl) < jnp.asarray(length, jnp.int32)
-    s = jnp.where(valid[None, None, None], s, NEG_INF)
+    lv = jnp.asarray(length, jnp.int32)
+    if lv.ndim == 0:
+        lv = jnp.full((b,), lv, jnp.int32)
+    valid = jnp.arange(kl)[None, :] < lv[:, None]       # (b, kl)
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
     out = jnp.einsum("bhgk,bhkd->bhgd", p, vr)
+    # A slot with no valid keys (length 0 — an idle continuous-batching
+    # slot) outputs zeros, matching the kernel's fully-masked-row path;
+    # softmax over an all-masked row would otherwise fabricate uniform
+    # attention onto garbage cache contents.
+    out = jnp.where((lv > 0)[:, None, None, None], out, 0.0)
     return out.reshape(b, hq, dh).astype(q.dtype)

@@ -1,24 +1,26 @@
-"""Autotuning kernel engine: the paper's DSE loop, closed over real kernels.
+"""Autotuning kernel engine: one generic DSE → measure → cache pipeline.
 
-The paper's §IV flow is: enumerate candidate configurations, *simulate* each
-(SystemC machine model), pick the winner, synthesize.  The repo has had the
-first half for a while (`core.dse` ranks `Tile` candidates with the analytic
-`core.cost_model`) but the Pallas kernels ran with fixed hand-picked tiles.
-This module closes the loop:
+The paper's §IV flow is: enumerate candidate configurations, *simulate*
+each (SystemC machine model), pick the winner, synthesize.  Earlier PRs
+closed that loop once per kernel family — and accumulated four parallel
+copies of the same pipeline.  This module now holds exactly one:
 
-1. **candidates** — `core.dse.rank_matmul_tiles` / `rank_spmv_configs` rank
-   feasible configurations under the VMEM budget with the analytic model
-   (the "simulate" step, at a few microseconds per point);
+1. **candidates** — the family's ``KernelSpec.enumerate_candidates``
+   ranks feasible configurations under the VMEM budget with the analytic
+   model (the "simulate" step, microseconds per point);
 2. **measure**    — the top-K survivors are timed on the real backend
    (Pallas on TPU; interpret-mode on CPU for small problems, analytic
-   fallback above `max_measure_elems` where interpret timing is
+   fallback above ``max_measure_elems`` where interpret timing is
    meaningless);
-3. **memoize**    — winners land in an on-disk JSON cache keyed by
-   (kernel, shape, dtype, backend), so a serving process pays the search
-   once per shape, ever.
+3. **memoize**    — winners land in a unified on-disk JSON cache keyed
+   ``family:{spec.key_fn(...)}:v{budget}`` (schema v3; v2 files are
+   migrated in place, preserving measured entries).
 
-`tuned_matmul` / `tuned_spmv` are the drop-in entry points benchmarks,
-examples and the serving path call instead of fixed tiles.
+`tune(spec, problem) -> Plan` and `dispatch(family, *args)` are the only
+engine entry points; which families exist is entirely the registry's
+business (`kernels/registry.py`).  The legacy per-family
+`tune_*`/`tuned_*` functions remain as thin deprecation shims so older
+call sites keep working while they migrate.
 """
 
 from __future__ import annotations
@@ -33,19 +35,18 @@ from typing import Callable, Sequence
 import jax
 import jax.numpy as jnp
 
-from repro.core import cost_model, dse, hardware, tiling
-from repro.kernels.attention import decode as attn_decode
-from repro.kernels.attention import kernel as attn_kernel
-from repro.kernels.attention import ops as attn_ops
-from repro.kernels.matmul import ops as matmul_ops
-from repro.kernels.spmv import ops as spmv_ops
+from repro.core import hardware, tiling
+from repro.kernels import registry
+from repro.kernels.registry import KernelSpec, Plan
 
-# v2: block-skipping flash kernel — a cached (block_q, block_k) for
-# causal=True now means triangular traffic/FLOPs, so v1 winners (ranked
-# under every-block accounting) are stale and must be re-tuned, and the
-# decode kernel family joins the cache.  Entries from any other version
-# are ignored wholesale (see TuneCache._load), never mis-applied.
-ENGINE_VERSION = 2
+# v3: the declarative KernelSpec registry unified the four per-family
+# pipelines and entry formats ({"knobs": ..., "detail": ...} instead of
+# family-specific field names).  The *meaning* of a cached winner is
+# unchanged from v2, so v2 files are migrated in place (measured entries
+# survive, re-shaped under the same family-prefixed keys); files from any
+# other version are dropped wholesale (see TuneCache._load) — v1 predates
+# block skipping and its winners must never be mis-applied.
+ENGINE_VERSION = 3
 CACHE_ENV = "REPRO_AUTOTUNE_CACHE"
 
 # Above this many total operand elements, CPU interpret-mode timing is both
@@ -62,6 +63,34 @@ def default_cache_path() -> pathlib.Path:
     if env:
         return pathlib.Path(env)
     return pathlib.Path.home() / ".cache" / "repro" / "autotune.json"
+
+
+# v2 entries carried family-specific field names; map them onto the v3
+# {"knobs", "detail"} shape by key prefix.  Unknown prefixes are dropped
+# (there is no family left to interpret them).
+_V2_KNOB_FIELDS = {
+    "matmul": (("tile",), ()),
+    "spmv": (("block_rows", "block_cols"), ("waste",)),
+    "attention": (("block_q", "block_k"), ()),
+    "decode": (("block_k",), ()),
+}
+
+
+def _migrate_v2_entry(key: str, entry: dict) -> dict | None:
+    family = key.split(":", 1)[0]
+    fields = _V2_KNOB_FIELDS.get(family)
+    if fields is None or not isinstance(entry, dict):
+        return None
+    knob_names, detail_names = fields
+    if any(f not in entry for f in knob_names):
+        return None
+    return {
+        "knobs": {f: entry[f] for f in knob_names},
+        "source": entry.get("source", "model"),
+        "model_time_s": entry.get("model_time_s", 0.0),
+        "measured_us": entry.get("measured_us"),
+        "detail": {f: entry[f] for f in detail_names if f in entry},
+    }
 
 
 class TuneCache:
@@ -85,6 +114,17 @@ class TuneCache:
                 raw = json.loads(self.path.read_text())
             except (OSError, ValueError):
                 raw = None
+            if (isinstance(raw, dict) and raw.get("version") == 2
+                    and isinstance(raw.get("entries"), dict)):
+                # v2 -> v3: same winners, new entry shape.  Measured TPU
+                # entries are expensive; migration preserves them instead
+                # of dropping the whole file.
+                migrated = {}
+                for key, entry in raw["entries"].items():
+                    new = _migrate_v2_entry(key, entry)
+                    if new is not None:
+                        migrated[key] = new
+                raw = {"version": ENGINE_VERSION, "entries": migrated}
             if not (isinstance(raw, dict)
                     and raw.get("version") == ENGINE_VERSION
                     and isinstance(raw.get("entries"), dict)):
@@ -145,9 +185,129 @@ def _backend() -> str:
     return jax.default_backend()
 
 
+def _budget_tag(vmem_bytes: int | None) -> str:
+    # The budget shapes the feasible set, so constrained and default
+    # tunings must not share cache entries.
+    return "dflt" if vmem_bytes is None else str(vmem_bytes)
+
+
+def cache_key(spec: KernelSpec, problem: dict, dtype_name: str,
+              backend: str, vmem_bytes: int | None) -> str:
+    """`family:{spec suffix}:v{budget}` — the unified v3 key format."""
+    return (f"{spec.name}:{spec.key_fn(problem, dtype_name, backend)}"
+            f":v{_budget_tag(vmem_bytes)}")
+
+
 # ---------------------------------------------------------------------------
-# Matmul
+# The generic engine
 # ---------------------------------------------------------------------------
+
+def tune(
+    spec: KernelSpec | str, problem: dict, dtype=jnp.float32, *,
+    measure_k: int = 3,
+    vmem_bytes: int | None = None,
+    max_measure_elems: int = MAX_MEASURE_ELEMS,
+    cache: TuneCache | None = None,
+    interpret: bool | None = None,
+) -> Plan:
+    """Pick the family's knobs for ``problem`` via DSE → measure → cache.
+
+    ``measure_k=0`` disables measurement (pure analytic ranking) — used by
+    planning paths that must stay fast, e.g. server startup on CPU.
+    """
+    if isinstance(spec, str):
+        spec = registry.get(spec)
+    dtype = jnp.dtype(dtype)
+    backend = _backend()
+    cache = cache or get_cache()
+    key = cache_key(spec, problem, dtype.name, backend, vmem_bytes)
+    measurable = (measure_k > 0
+                  and (backend == "tpu"
+                       or spec.measure_elems(problem) <= max_measure_elems))
+
+    hit = cache.get(key)
+    # An analytic-only entry (e.g. written by serve startup with
+    # measure_k=0) is upgraded, not returned, once a measuring caller
+    # shows up — otherwise the measure step would be skipped forever.
+    if hit is not None and not (measurable and hit.get("source") == "model"):
+        return Plan(spec.name, key, dict(problem), dict(hit["knobs"]),
+                    "cache", hit["model_time_s"], hit.get("measured_us"),
+                    dict(hit.get("detail") or {}))
+
+    ranked = spec.enumerate_candidates(problem, dtype_bytes=dtype.itemsize,
+                                       vmem_bytes=vmem_bytes,
+                                       top=max(measure_k, 1))
+    # Deterministic order + dedupe are the engine's job: score first, the
+    # family's declared tie-break second, identical knob sets collapsed
+    # (small problems clamp many candidates onto the same point).
+    seen, cands = set(), []
+    for c in sorted(ranked, key=lambda c: (c.score, spec.tie_break(c.knobs))):
+        sig = json.dumps(c.knobs, sort_keys=True)
+        if sig not in seen:
+            seen.add(sig)
+            cands.append(c)
+
+    interpret = (backend != "tpu") if interpret is None else interpret
+    best, best_us = None, float("inf")
+    if measurable and cands:
+        inputs = spec.make_inputs(problem, dtype)
+        for c in cands[:measure_k]:
+            fn = spec.build_launcher(problem, c.knobs, interpret=interpret)
+            try:
+                us = measure(lambda fn=fn: fn(*inputs))
+            except Exception:
+                continue  # e.g. real VMEM overflow the model missed
+            if us < best_us:
+                best, best_us = c, us
+    if best is not None:
+        chosen, source, measured_us = best, "measured", best_us
+    else:
+        chosen, source, measured_us = cands[0], "model", None
+
+    detail = {f: chosen.detail[f] for f in spec.detail_keys
+              if chosen.detail and f in chosen.detail}
+    cache.put(key, {"knobs": chosen.knobs, "source": source,
+                    "model_time_s": chosen.score,
+                    "measured_us": measured_us, "detail": detail})
+    return Plan(spec.name, key, dict(problem), dict(chosen.knobs), source,
+                chosen.score, measured_us, detail)
+
+
+def dispatch(family: str, *args, cache: TuneCache | None = None,
+             interpret: bool = False, use_kernel: bool | None = None,
+             measure_k: int | None = None, **kwargs):
+    """Run ``family``'s kernel on ``args`` with its autotuned plan.
+
+    Keeps the repo's dispatch convention: Pallas on TPU (or with
+    ``interpret=True`` anywhere), the family's pure-jnp oracle otherwise —
+    so CPU callers that never reach the kernel path pay no tuning cost.
+    ``measure_k=None`` uses the family's declared default (0 for families
+    dispatched inside a jit trace, where wall-clocking is impossible;
+    measured winners then come from offline callers through the shared
+    cache).
+    """
+    spec = registry.get(family)
+    if use_kernel is None:
+        use_kernel = interpret or _backend() == "tpu"
+    if not use_kernel:
+        return spec.reference_fn(*args, **kwargs)
+    problem, dtype = spec.problem_fn(*args, **kwargs)
+    plan = tune(spec, problem, dtype,
+                measure_k=spec.default_measure_k
+                if measure_k is None else measure_k,
+                cache=cache, interpret=interpret)
+    return spec.run_fn(plan, *args, interpret=interpret, **kwargs)
+
+
+# ---------------------------------------------------------------------------
+# Deprecated per-family shims
+# ---------------------------------------------------------------------------
+# Everything below delegates to tune()/dispatch(); the per-family plan
+# dataclasses and tune_*/tuned_* signatures are kept only so pre-registry
+# call sites keep working.  New code should call the engine directly:
+#
+#     plan = autotune.tune("attention", {...})
+#     out = autotune.dispatch("matmul", a, b, activation="gelu")
 
 @dataclasses.dataclass(frozen=True)
 class MatmulPlan:
@@ -157,122 +317,6 @@ class MatmulPlan:
     measured_us: float | None
     key: str
 
-
-def _budget_tag(vmem_bytes: int | None) -> str:
-    # The budget shapes the feasible set, so constrained and default
-    # tunings must not share cache entries.
-    return "dflt" if vmem_bytes is None else str(vmem_bytes)
-
-
-def _matmul_key(m: int, n: int, k: int, dtype: str, backend: str,
-                vmem_bytes: int | None) -> str:
-    return f"matmul:{m}x{n}x{k}:{dtype}:{backend}:v{_budget_tag(vmem_bytes)}"
-
-
-def tune_matmul(
-    m: int, n: int, k: int, dtype=jnp.float32, *,
-    measure_k: int = 3,
-    vmem_bytes: int | None = None,
-    max_measure_elems: int = MAX_MEASURE_ELEMS,
-    cache: TuneCache | None = None,
-    interpret: bool | None = None,
-) -> MatmulPlan:
-    """Pick a Tile for an (m,k)@(k,n) product via DSE -> measure -> cache.
-
-    ``measure_k=0`` disables measurement (pure analytic ranking) — used by
-    planning paths that must stay fast, e.g. server startup on CPU.
-    """
-    dtype = jnp.dtype(dtype)
-    backend = _backend()
-    cache = cache or get_cache()
-    key = _matmul_key(m, n, k, dtype.name, backend, vmem_bytes)
-    measurable = (measure_k > 0
-                  and (backend == "tpu"
-                       or m * k + k * n + m * n <= max_measure_elems))
-
-    hit = cache.get(key)
-    # An analytic-only entry (e.g. written by serve startup with
-    # measure_k=0) is upgraded, not returned, once a measuring caller
-    # shows up — otherwise the measure step would be skipped forever.
-    if hit is not None and not (measurable and hit.get("source") == "model"):
-        return MatmulPlan(tiling.Tile(*hit["tile"]), "cache",
-                          hit["model_time_s"], hit.get("measured_us"), key)
-
-    ranked = dse.rank_matmul_tiles(m, n, k, vmem_bytes=vmem_bytes,
-                                   dtype_bytes=dtype.itemsize,
-                                   top=max(measure_k, 1))
-    # Clamp to the padded problem and dedupe (small shapes collapse many
-    # candidates onto the same effective tile).
-    seen, cands = set(), []
-    for c in ranked:
-        t = matmul_ops.clamp_tile(c.detail["tile"], m, n, k)
-        if t not in seen:
-            seen.add(t)
-            cands.append((c.score, t))
-
-    interpret = (backend != "tpu") if interpret is None else interpret
-    measured_us = None
-    if measurable and len(cands) > 0:
-        a = jax.random.normal(jax.random.PRNGKey(0), (m, k), jnp.float32)
-        b = jax.random.normal(jax.random.PRNGKey(1), (k, n), jnp.float32)
-        a, b = a.astype(dtype), b.astype(dtype)
-        best_t, best_us = None, float("inf")
-        for _, t in cands[:measure_k]:
-            try:
-                us = measure(lambda t=t: matmul_ops.matmul(
-                    a, b, tile=t, interpret=interpret, use_kernel=True))
-            except Exception:
-                continue  # e.g. real VMEM overflow the model missed
-            if us < best_us:
-                best_t, best_us = t, us
-        measurable = best_t is not None
-    if measurable:
-        tile, source, measured_us = best_t, "measured", best_us
-        model_time_s = next(s for s, t in cands if t == tile)
-    else:
-        model_time_s, tile = cands[0]
-        source = "model"
-        measured_us = None
-
-    cache.put(key, {"tile": [tile.y, tile.x, tile.z], "source": source,
-                    "model_time_s": model_time_s,
-                    "measured_us": measured_us})
-    return MatmulPlan(tile, source, model_time_s, measured_us, key)
-
-
-def tuned_matmul(a: jax.Array, b: jax.Array,
-                 bias: jax.Array | None = None,
-                 activation: str | None = None,
-                 interpret: bool = False,
-                 use_kernel: bool | None = None,
-                 compute_dtype=None, out_dtype=None,
-                 cache: TuneCache | None = None) -> jax.Array:
-    """C = act(A @ B + bias) with the autotuned tile for A/B's shape.
-
-    Same dispatch semantics as `kernels.matmul.matmul` (Pallas on TPU /
-    interpret, oracle otherwise) — the tuner only runs when the kernel
-    path would, so CPU oracle callers pay nothing.
-    """
-    if use_kernel is None:
-        use_kernel = interpret or _backend() == "tpu"
-    tile = None
-    if use_kernel:
-        m, k = a.shape
-        _, n = b.shape
-        dtype = jnp.dtype(compute_dtype) if compute_dtype is not None \
-            else a.dtype
-        tile = tune_matmul(m, n, k, dtype, cache=cache,
-                           interpret=interpret).tile
-    return matmul_ops.matmul(a, b, tile=tile, bias=bias,
-                             activation=activation, interpret=interpret,
-                             use_kernel=use_kernel,
-                             compute_dtype=compute_dtype,
-                             out_dtype=out_dtype)
-
-
-# ---------------------------------------------------------------------------
-# SpMV
-# ---------------------------------------------------------------------------
 
 @dataclasses.dataclass(frozen=True)
 class SpmvPlan:
@@ -285,133 +329,6 @@ class SpmvPlan:
     key: str
 
 
-def _spmv_key(rows: int, width: int, n: int, nnz: int, layout: str,
-              dtype: str, backend: str, vmem_bytes: int | None) -> str:
-    return (f"spmv:{rows}x{width}:n{n}:nnz{nnz}:l{layout}:{dtype}:{backend}"
-            f":v{_budget_tag(vmem_bytes)}")
-
-
-def rank_spmv_configs(
-    mat: spmv_ops.EllMatrix,
-    vmem_bytes: int | None = None,
-    block_rows_cands: Sequence[int] = (8, 16, 32, 64),
-    block_cols_cands: Sequence[int | None] = (None, 256, 512, 1024, 2048),
-) -> list[tuple[float, int, int | None, float]]:
-    """Rank (block_rows, block_cols) configs by the bandwidth model.
-
-    The active/fetched balance metric (`EllMatrix.sliced_waste`, built on
-    `core.loadbalance`) enters the score as the fetch-amplification of the
-    ELL payload — the tuner's analogue of the paper's "% of nnz per core"
-    column.  Returns (score, block_rows, block_cols, waste) ascending,
-    deterministically tie-broken.
-    """
-    budget = vmem_bytes if vmem_bytes is not None \
-        else hardware.TPU_V5E.usable_vmem()
-    rows, width = mat.cols.shape
-    _, n = mat.shape
-    out = []
-    for br in block_rows_cands:
-        if rows % br:
-            continue
-        waste = mat.sliced_waste(block_rows=br)
-        for bc in block_cols_cands:
-            if bc is not None and bc >= n + 128:
-                continue  # slab larger than the vector: same as resident
-            res = cost_model.spmv_time_model(rows, width, n, mat.nnz,
-                                             block_rows=br, block_cols=bc,
-                                             waste=waste)
-            if res["vmem_bytes"] > budget:
-                continue
-            out.append((res["time_s"], br, bc, waste))
-    out.sort(key=lambda r: (r[0], r[1], r[2] if r[2] is not None else 0))
-    return out
-
-
-def tune_spmv(
-    mat: spmv_ops.EllMatrix, dtype=jnp.float32, *,
-    measure_k: int = 3,
-    vmem_bytes: int | None = None,
-    max_measure_elems: int = MAX_MEASURE_ELEMS,
-    cache: TuneCache | None = None,
-    interpret: bool | None = None,
-) -> SpmvPlan:
-    """Pick (block_rows, block_cols) for an ELL matrix: DSE -> measure -> cache."""
-    dtype = jnp.dtype(dtype)
-    backend = _backend()
-    cache = cache or get_cache()
-    rows, width = mat.cols.shape
-    _, n = mat.shape
-    key = _spmv_key(rows, width, n, mat.nnz, mat.layout_fingerprint(),
-                    dtype.name, backend, vmem_bytes)
-    measurable = (measure_k > 0
-                  and (backend == "tpu"
-                       or rows * width + n <= max_measure_elems))
-
-    hit = cache.get(key)
-    # Same upgrade rule as tune_matmul: analytic-only entries don't block
-    # a later measuring caller.
-    if hit is not None and not (measurable and hit.get("source") == "model"):
-        return SpmvPlan(hit["block_rows"], hit["block_cols"], "cache",
-                        hit["model_time_s"], hit.get("measured_us"),
-                        hit.get("waste", 0.0), key)
-
-    ranked = rank_spmv_configs(mat, vmem_bytes=vmem_bytes)
-    if not ranked:
-        # Degenerate budget: fall back to the smallest legal blocked-x
-        # config, scored normally so the cache entry stays finite JSON.
-        fb = cost_model.spmv_time_model(rows, width, n, mat.nnz,
-                                        block_rows=8, block_cols=256,
-                                        waste=mat.padding_waste)
-        ranked = [(fb["time_s"], 8, 256, mat.padding_waste)]
-
-    interpret = (backend != "tpu") if interpret is None else interpret
-    measured_us = None
-    if measurable:
-        x = jax.random.normal(jax.random.PRNGKey(0), (n,), dtype)
-        best, best_us = None, float("inf")
-        for score, br, bc, waste in ranked[:measure_k]:
-            try:
-                us = measure(lambda br=br, bc=bc: spmv_ops.spmv(
-                    mat, x, block_rows=br, block_cols=bc,
-                    interpret=interpret, use_kernel=True))
-            except Exception:
-                continue  # e.g. real VMEM overflow the model missed
-            if us < best_us:
-                best, best_us = (score, br, bc, waste), us
-        measurable = best is not None
-    if measurable:
-        score, br, bc, waste = best
-        source, measured_us = "measured", best_us
-    else:
-        score, br, bc, waste = ranked[0]
-        source = "model"
-        measured_us = None
-
-    cache.put(key, {"block_rows": br, "block_cols": bc, "source": source,
-                    "model_time_s": score, "measured_us": measured_us,
-                    "waste": waste})
-    return SpmvPlan(br, bc, source, score, measured_us, waste, key)
-
-
-def tuned_spmv(mat: spmv_ops.EllMatrix, x: jax.Array,
-               interpret: bool = False,
-               use_kernel: bool | None = None,
-               cache: TuneCache | None = None) -> jax.Array:
-    """y = A @ x with autotuned (block_rows, block_cols) for A's layout."""
-    if use_kernel is None:
-        use_kernel = interpret or _backend() == "tpu"
-    if not use_kernel:
-        return spmv_ops.spmv(mat, x, use_kernel=False)
-    plan = tune_spmv(mat, x.dtype, cache=cache, interpret=interpret)
-    return spmv_ops.spmv(mat, x, block_rows=plan.block_rows,
-                         block_cols=plan.block_cols, interpret=interpret,
-                         use_kernel=True)
-
-
-# ---------------------------------------------------------------------------
-# Attention
-# ---------------------------------------------------------------------------
-
 @dataclasses.dataclass(frozen=True)
 class AttentionPlan:
     block_q: int
@@ -422,122 +339,6 @@ class AttentionPlan:
     key: str
 
 
-def _attention_key(bh: int, sq: int, sk: int, dh: int, causal: bool,
-                   window: int | None, dtype: str, backend: str,
-                   vmem_bytes: int | None) -> str:
-    return (f"attention:{bh}x{sq}x{sk}x{dh}:c{int(causal)}"
-            f":w{'none' if window is None else window}:{dtype}:{backend}"
-            f":v{_budget_tag(vmem_bytes)}")
-
-
-def tune_attention(
-    bh: int, sq: int, sk: int, dh: int, dtype=jnp.float32, *,
-    causal: bool = True,
-    window: int | None = None,
-    measure_k: int = 3,
-    vmem_bytes: int | None = None,
-    max_measure_elems: int = MAX_MEASURE_ELEMS,
-    cache: TuneCache | None = None,
-    interpret: bool | None = None,
-) -> AttentionPlan:
-    """Pick (block_q, block_k) for the flash kernel: DSE -> measure -> cache.
-
-    ``bh`` is the folded batch*heads leading axis the kernel sees (GQA
-    callers fold before calling — see `attention.ops.mha_attention`).  The
-    window size enters both the key and the ranking: the block-skipping
-    kernel streams only the active block band, so the scored traffic and
-    FLOPs depend on it.
-    """
-    dtype = jnp.dtype(dtype)
-    backend = _backend()
-    cache = cache or get_cache()
-    key = _attention_key(bh, sq, sk, dh, causal, window, dtype.name, backend,
-                         vmem_bytes)
-    measurable = (measure_k > 0
-                  and (backend == "tpu"
-                       or bh * (sq + 2 * sk) * dh <= max_measure_elems))
-
-    hit = cache.get(key)
-    # Same upgrade rule as tune_matmul/tune_spmv: an analytic-only entry
-    # (e.g. written at serve startup with measure_k=0) never blocks a later
-    # measuring caller.
-    if hit is not None and not (measurable and hit.get("source") == "model"):
-        return AttentionPlan(hit["block_q"], hit["block_k"], "cache",
-                             hit["model_time_s"], hit.get("measured_us"), key)
-
-    ranked = dse.rank_attention_blocks(bh, sq, sk, dh,
-                                       vmem_bytes=vmem_bytes,
-                                       dtype_bytes=dtype.itemsize,
-                                       causal=causal, window=window,
-                                       top=max(measure_k, 1))
-    cands = [(c.score, c.detail["block_q"], c.detail["block_k"])
-             for c in ranked]
-
-    interpret = (backend != "tpu") if interpret is None else interpret
-    measured_us = None
-    if measurable:
-        scale = 1.0 / (dh ** 0.5)
-        q = jax.random.normal(jax.random.PRNGKey(0), (bh, sq, dh), dtype)
-        k = jax.random.normal(jax.random.PRNGKey(1), (bh, sk, dh), dtype)
-        v = jax.random.normal(jax.random.PRNGKey(2), (bh, sk, dh), dtype)
-        best, best_us = None, float("inf")
-        for score, bq, bk in cands[:measure_k]:
-            try:
-                us = measure(lambda bq=bq, bk=bk: attn_kernel.flash_attention(
-                    q, k, v, scale=scale, causal=causal, window=window,
-                    block_q=bq, block_k=bk, interpret=interpret))
-            except Exception:
-                continue  # e.g. real VMEM overflow the model missed
-            if us < best_us:
-                best, best_us = (score, bq, bk), us
-        measurable = best is not None
-    if measurable:
-        score, bq, bk = best
-        source, measured_us = "measured", best_us
-    else:
-        score, bq, bk = cands[0]
-        source = "model"
-        measured_us = None
-
-    cache.put(key, {"block_q": bq, "block_k": bk, "source": source,
-                    "model_time_s": score, "measured_us": measured_us})
-    return AttentionPlan(bq, bk, source, score, measured_us, key)
-
-
-def tuned_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
-                    causal: bool = True, window: int | None = None,
-                    interpret: bool = False,
-                    use_kernel: bool | None = None,
-                    measure_k: int = 0,
-                    cache: TuneCache | None = None) -> jax.Array:
-    """Flash attention with autotuned (block_q, block_k) for q/k/v's shape.
-
-    Same signature/dispatch as `attention.ops.mha_attention` — q is
-    (B, Sq, Hq, dh), k/v are (B, Sk, Hkv, dh), GQA folding included.
-    ``measure_k`` defaults to 0 (analytic ranking only) because the serving
-    prefill path calls this *inside* a jit trace, where wall-clock
-    measurement is impossible; measured winners come from offline callers
-    (benchmarks) through the shared cache.
-    """
-    b, sq, hq, dh = q.shape
-    _, sk, _, _ = k.shape
-    if use_kernel is None:
-        use_kernel = interpret or _backend() == "tpu"
-    if not use_kernel:
-        return attn_ops.mha_attention(q, k, v, causal=causal, window=window,
-                                      use_kernel=False)
-    plan = tune_attention(b * hq, sq, sk, dh, q.dtype, causal=causal,
-                          window=window, measure_k=measure_k, cache=cache,
-                          interpret=interpret)
-    return attn_ops.mha_attention(q, k, v, causal=causal, window=window,
-                                  block_q=plan.block_q, block_k=plan.block_k,
-                                  interpret=interpret, use_kernel=True)
-
-
-# ---------------------------------------------------------------------------
-# Decode attention
-# ---------------------------------------------------------------------------
-
 @dataclasses.dataclass(frozen=True)
 class DecodePlan:
     block_k: int
@@ -547,81 +348,121 @@ class DecodePlan:
     key: str
 
 
-def _decode_key(bkv: int, g: int, cache_len: int, dh: int, dtype: str,
-                backend: str, vmem_bytes: int | None) -> str:
-    return (f"decode:{bkv}x{g}x{cache_len}x{dh}:{dtype}:{backend}"
-            f":v{_budget_tag(vmem_bytes)}")
+def _attention_key(bh: int, sq: int, sk: int, dh: int, causal: bool,
+                   window: int | None, dtype: str, backend: str,
+                   vmem_bytes: int | None) -> str:
+    """Deprecated: compose `cache_key` with the spec's key_fn instead."""
+    return cache_key(registry.get("attention"),
+                     {"bh": bh, "sq": sq, "sk": sk, "dh": dh,
+                      "causal": causal, "window": window},
+                     dtype, backend, vmem_bytes)
 
 
-def tune_decode(
-    bkv: int, g: int, cache_len: int, dh: int, dtype=jnp.float32, *,
-    measure_k: int = 3,
-    vmem_bytes: int | None = None,
-    max_measure_elems: int = MAX_MEASURE_ELEMS,
-    cache: TuneCache | None = None,
-    interpret: bool | None = None,
-) -> DecodePlan:
-    """Pick block_k for the fused decode kernel: DSE -> measure -> cache.
+def rank_spmv_configs(mat, vmem_bytes: int | None = None,
+                      block_rows_cands: Sequence[int] = (8, 16, 32, 64),
+                      block_cols_cands: Sequence[int | None] = (None, 256,
+                                                                512, 1024,
+                                                                2048)):
+    """Deprecated: moved to `kernels.spmv.spec.rank_configs`."""
+    from repro.kernels.spmv import spec as spmv_spec
+    return spmv_spec.rank_configs(mat, vmem_bytes=vmem_bytes,
+                                  block_rows_cands=block_rows_cands,
+                                  block_cols_cands=block_cols_cands)
 
-    ``bkv = batch * kv_heads`` folded rows, ``g = heads / kv_heads`` the GQA
-    group per row, ``cache_len`` the allocated KV-cache depth.  The valid
-    prefix length is a runtime scalar the kernel skips on, so it is not in
-    the key — the plan is ranked and measured at the full cache depth (the
-    worst case the server allocated for).
-    """
-    dtype = jnp.dtype(dtype)
-    backend = _backend()
-    cache = cache or get_cache()
-    key = _decode_key(bkv, g, cache_len, dh, dtype.name, backend, vmem_bytes)
-    measurable = (measure_k > 0
-                  and (backend == "tpu"
-                       or bkv * (g + 2 * cache_len) * dh
-                       <= max_measure_elems))
 
-    hit = cache.get(key)
-    # Same upgrade rule as the other families: analytic-only entries never
-    # block a later measuring caller.
-    if hit is not None and not (measurable and hit.get("source") == "model"):
-        return DecodePlan(hit["block_k"], "cache", hit["model_time_s"],
-                          hit.get("measured_us"), key)
+def tune_matmul(m: int, n: int, k: int, dtype=jnp.float32, *,
+                measure_k: int = 3, vmem_bytes: int | None = None,
+                max_measure_elems: int = MAX_MEASURE_ELEMS,
+                cache: TuneCache | None = None,
+                interpret: bool | None = None) -> MatmulPlan:
+    """Deprecated shim over ``tune("matmul", ...)``."""
+    p = tune("matmul", {"m": m, "n": n, "k": k}, dtype,
+             measure_k=measure_k, vmem_bytes=vmem_bytes,
+             max_measure_elems=max_measure_elems, cache=cache,
+             interpret=interpret)
+    return MatmulPlan(tiling.Tile(*p.knobs["tile"]), p.source,
+                      p.model_time_s, p.measured_us, p.key)
 
-    ranked = dse.rank_decode_blocks(bkv, g, cache_len, dh,
-                                    vmem_bytes=vmem_bytes,
-                                    dtype_bytes=dtype.itemsize,
-                                    top=max(measure_k, 1))
-    cands = [(c.score, c.detail["block_k"]) for c in ranked]
 
-    interpret = (backend != "tpu") if interpret is None else interpret
-    measured_us = None
-    if measurable:
-        scale = 1.0 / (dh ** 0.5)
-        q = jax.random.normal(jax.random.PRNGKey(0), (bkv, g, dh), dtype)
-        k = jax.random.normal(jax.random.PRNGKey(1), (bkv, cache_len, dh),
-                              dtype)
-        v = jax.random.normal(jax.random.PRNGKey(2), (bkv, cache_len, dh),
-                              dtype)
-        best, best_us = None, float("inf")
-        for score, bk in cands[:measure_k]:
-            try:
-                us = measure(lambda bk=bk: attn_decode.decode_attention(
-                    q, k, v, scale=scale, length=cache_len, block_k=bk,
-                    interpret=interpret))
-            except Exception:
-                continue  # e.g. real VMEM overflow the model missed
-            if us < best_us:
-                best, best_us = (score, bk), us
-        measurable = best is not None
-    if measurable:
-        score, bk = best
-        source, measured_us = "measured", best_us
-    else:
-        score, bk = cands[0]
-        source = "model"
-        measured_us = None
+def tune_spmv(mat, dtype=jnp.float32, *,
+              measure_k: int = 3, vmem_bytes: int | None = None,
+              max_measure_elems: int = MAX_MEASURE_ELEMS,
+              cache: TuneCache | None = None,
+              interpret: bool | None = None) -> SpmvPlan:
+    """Deprecated shim over ``tune("spmv", ...)``."""
+    p = tune("spmv", {"mat": mat}, dtype, measure_k=measure_k,
+             vmem_bytes=vmem_bytes, max_measure_elems=max_measure_elems,
+             cache=cache, interpret=interpret)
+    return SpmvPlan(p.knobs["block_rows"], p.knobs["block_cols"], p.source,
+                    p.model_time_s, p.measured_us,
+                    p.detail.get("waste", 0.0), p.key)
 
-    cache.put(key, {"block_k": bk, "source": source, "model_time_s": score,
-                    "measured_us": measured_us})
-    return DecodePlan(bk, source, score, measured_us, key)
+
+def tune_attention(bh: int, sq: int, sk: int, dh: int, dtype=jnp.float32, *,
+                   causal: bool = True, window: int | None = None,
+                   measure_k: int = 3, vmem_bytes: int | None = None,
+                   max_measure_elems: int = MAX_MEASURE_ELEMS,
+                   cache: TuneCache | None = None,
+                   interpret: bool | None = None) -> AttentionPlan:
+    """Deprecated shim over ``tune("attention", ...)``."""
+    p = tune("attention", {"bh": bh, "sq": sq, "sk": sk, "dh": dh,
+                           "causal": causal, "window": window}, dtype,
+             measure_k=measure_k, vmem_bytes=vmem_bytes,
+             max_measure_elems=max_measure_elems, cache=cache,
+             interpret=interpret)
+    return AttentionPlan(p.knobs["block_q"], p.knobs["block_k"], p.source,
+                         p.model_time_s, p.measured_us, p.key)
+
+
+def tune_decode(bkv: int, g: int, cache_len: int, dh: int,
+                dtype=jnp.float32, *,
+                measure_k: int = 3, vmem_bytes: int | None = None,
+                max_measure_elems: int = MAX_MEASURE_ELEMS,
+                cache: TuneCache | None = None,
+                interpret: bool | None = None) -> DecodePlan:
+    """Deprecated shim over ``tune("decode", ...)``."""
+    p = tune("decode", {"bkv": bkv, "g": g, "cache_len": cache_len,
+                        "dh": dh}, dtype,
+             measure_k=measure_k, vmem_bytes=vmem_bytes,
+             max_measure_elems=max_measure_elems, cache=cache,
+             interpret=interpret)
+    return DecodePlan(p.knobs["block_k"], p.source, p.model_time_s,
+                      p.measured_us, p.key)
+
+
+def tuned_matmul(a: jax.Array, b: jax.Array,
+                 bias: jax.Array | None = None,
+                 activation: str | None = None,
+                 interpret: bool = False,
+                 use_kernel: bool | None = None,
+                 compute_dtype=None, out_dtype=None,
+                 cache: TuneCache | None = None) -> jax.Array:
+    """Deprecated shim over ``dispatch("matmul", ...)``."""
+    return dispatch("matmul", a, b, bias=bias, activation=activation,
+                    interpret=interpret, use_kernel=use_kernel,
+                    compute_dtype=compute_dtype, out_dtype=out_dtype,
+                    cache=cache)
+
+
+def tuned_spmv(mat, x: jax.Array,
+               interpret: bool = False,
+               use_kernel: bool | None = None,
+               cache: TuneCache | None = None) -> jax.Array:
+    """Deprecated shim over ``dispatch("spmv", ...)``."""
+    return dispatch("spmv", mat, x, interpret=interpret,
+                    use_kernel=use_kernel, cache=cache)
+
+
+def tuned_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: int | None = None,
+                    interpret: bool = False,
+                    use_kernel: bool | None = None,
+                    measure_k: int = 0,
+                    cache: TuneCache | None = None) -> jax.Array:
+    """Deprecated shim over ``dispatch("attention", ...)``."""
+    return dispatch("attention", q, k, v, causal=causal, window=window,
+                    interpret=interpret, use_kernel=use_kernel,
+                    measure_k=measure_k, cache=cache)
 
 
 def tuned_decode(q: jax.Array, k: jax.Array, v: jax.Array, *,
@@ -629,39 +470,33 @@ def tuned_decode(q: jax.Array, k: jax.Array, v: jax.Array, *,
                  use_kernel: bool | None = None,
                  measure_k: int = 0,
                  cache: TuneCache | None = None) -> jax.Array:
-    """Fused decode attention with autotuned block_k for the cache shape.
-
-    q: (B, Hq, dh); k, v: (B, L, Hkv, dh); ``length`` the valid cache
-    prefix (python int or traced scalar — the serving index + 1).
-    ``measure_k`` defaults to 0 because the serving decode step calls this
-    inside a jit trace (same contract as `tuned_attention`); measured
-    winners come from offline callers through the shared cache.
-    """
-    b, hq, dh = q.shape
-    _, kl, hkv, _ = k.shape
-    if use_kernel is None:
-        use_kernel = interpret or _backend() == "tpu"
-    if not use_kernel:
-        return attn_decode.decode_ref(q, k, v, length=length)
-    # The kernel streams the cache (and upcasts q to it), so the plan is
-    # keyed and priced on the *cache* dtype — an f32 cache costs twice the
-    # KV traffic of a bf16 one regardless of the activation dtype.
-    plan = tune_decode(b * hkv, hq // hkv, kl, dh, k.dtype,
-                       measure_k=measure_k, cache=cache, interpret=interpret)
-    return attn_decode.gqa_decode_attention(q, k, v, length=length,
-                                            block_k=plan.block_k,
-                                            interpret=interpret)
+    """Deprecated shim over ``dispatch("decode", ...)``."""
+    return dispatch("decode", q, k, v, length=length, interpret=interpret,
+                    use_kernel=use_kernel, measure_k=measure_k, cache=cache)
 
 
 # ---------------------------------------------------------------------------
 # Model-serving plans
 # ---------------------------------------------------------------------------
 
+@dataclasses.dataclass(frozen=True)
+class OpPlan:
+    """A tuned Plan bound to a named serving op (e.g. "ffn_up") — the unit
+    `plan_for_model` returns and `predict_decode_step_us` consumes."""
+
+    op: str
+    plan: Plan
+
+    def record(self) -> dict:
+        return {"op": self.op, "problem": dict(self.plan.problem),
+                **self.plan.record()}
+
+
 def plan_for_model(cfg, batch: int, *, prefill_len: int = 0,
                    cache_len: int = 0,
                    kv_dtype=jnp.bfloat16,
                    cache: TuneCache | None = None,
-                   measure_k: int = 0) -> list[dict]:
+                   measure_k: int = 0) -> list[OpPlan]:
     """Pre-tune the serving-path kernel shapes of a model config.
 
     Called by `launch.serve` at server startup so the first request never
@@ -669,7 +504,8 @@ def plan_for_model(cfg, batch: int, *, prefill_len: int = 0,
     startup happens on the serving critical path.  Covers the decode-path
     matmuls, — when ``prefill_len`` is given — the prefill flash-attention
     shape, and — when ``cache_len`` is given — the fused decode-attention
-    fold, so all four tuned kernel families share one warmup.
+    fold, so every registered serving family shares one warmup.  Returns
+    typed `OpPlan`s; `.record()` them for logging.
     """
     d, f, v = cfg.d_model, cfg.d_ff or cfg.d_model * 4, cfg.vocab_size
     qkv = max(cfg.num_heads * cfg.head_dim, d) or d
@@ -682,37 +518,25 @@ def plan_for_model(cfg, batch: int, *, prefill_len: int = 0,
     ]
     plans = []
     for name, m, n, k in shapes:
-        p = tune_matmul(m, n, k, jnp.bfloat16, measure_k=measure_k,
-                        cache=cache)
-        plans.append({"op": name, "mnk": [m, n, k],
-                      "tile": [p.tile.y, p.tile.x, p.tile.z],
-                      "source": p.source,
-                      "model_time_us": p.model_time_s * 1e6})
+        plans.append(OpPlan(name, tune(
+            "matmul", {"m": m, "n": n, "k": k}, jnp.bfloat16,
+            measure_k=measure_k, cache=cache)))
     if prefill_len > 0 and cfg.num_heads:
-        ap = tune_attention(batch * cfg.num_heads, prefill_len, prefill_len,
-                            cfg.head_dim, jnp.bfloat16, causal=cfg.causal,
-                            window=cfg.sliding_window, measure_k=measure_k,
-                            cache=cache)
-        plans.append({"op": "attn_prefill",
-                      "bh_sq_sk_dh": [batch * cfg.num_heads, prefill_len,
-                                      prefill_len, cfg.head_dim],
-                      "block": [ap.block_q, ap.block_k],
-                      "source": ap.source,
-                      "model_time_us": ap.model_time_s * 1e6})
+        plans.append(OpPlan("attn_prefill", tune(
+            "attention",
+            {"bh": batch * cfg.num_heads, "sq": prefill_len,
+             "sk": prefill_len, "dh": cfg.head_dim,
+             "causal": cfg.causal, "window": cfg.sliding_window},
+            jnp.bfloat16, measure_k=measure_k, cache=cache)))
     if cache_len > 0 and cfg.num_heads and cfg.num_kv_heads:
         # Keyed on the KV-cache dtype the server allocates (`kv_dtype`) —
         # the decode kernel streams the cache, not the activations.
-        dp = tune_decode(batch * cfg.num_kv_heads,
-                         cfg.num_heads // cfg.num_kv_heads, cache_len,
-                         cfg.head_dim, kv_dtype, measure_k=measure_k,
-                         cache=cache)
-        plans.append({"op": "attn_decode",
-                      "bkv_g_len_dh": [batch * cfg.num_kv_heads,
-                                       cfg.num_heads // cfg.num_kv_heads,
-                                       cache_len, cfg.head_dim],
-                      "block_k": dp.block_k,
-                      "source": dp.source,
-                      "model_time_us": dp.model_time_s * 1e6})
+        plans.append(OpPlan("attn_decode", tune(
+            "decode",
+            {"bkv": batch * cfg.num_kv_heads,
+             "g": cfg.num_heads // cfg.num_kv_heads,
+             "cache_len": cache_len, "dh": cfg.head_dim},
+            kv_dtype, measure_k=measure_k, cache=cache)))
     return plans
 
 
@@ -722,7 +546,7 @@ def _attn_layer_count(cfg) -> int:
 
 def predict_decode_step_us(cfg, batch: int, *, cache_len: int,
                            kv_dtype=jnp.bfloat16,
-                           plans: list[dict] | None = None,
+                           plans: list[OpPlan] | None = None,
                            cache: TuneCache | None = None) -> float:
     """Predicted wall time of one decode step at this batch, from the tuned
     plans' model times.
@@ -739,15 +563,15 @@ def predict_decode_step_us(cfg, batch: int, *, cache_len: int,
     attn_ops_ = {"qkv_proj", "out_proj"}
     ffn_ops = {"ffn_up", "ffn_down"}
     n_attn = _attn_layer_count(cfg)
-    attn_us = sum(p["model_time_us"] for p in plans if p["op"] in attn_ops_)
-    ffn_us = sum(p["model_time_us"] for p in plans if p["op"] in ffn_ops)
-    logits_us = sum(p["model_time_us"] for p in plans if p["op"] == "logits")
-    decode_plan = next((p for p in plans if p["op"] == "attn_decode"), None)
+    attn_us = sum(p.plan.model_time_us for p in plans if p.op in attn_ops_)
+    ffn_us = sum(p.plan.model_time_us for p in plans if p.op in ffn_ops)
+    logits_us = sum(p.plan.model_time_us for p in plans if p.op == "logits")
+    decode_plan = next((p for p in plans if p.op == "attn_decode"), None)
     if decode_plan is not None:
         # The tuned decode-attention plan prices the KV stream *and* the
         # attention FLOPs at the chosen block_k (including ragged-tail
         # over-fetch) — strictly more faithful than the raw byte floor.
-        kv_us = n_attn * decode_plan["model_time_us"]
+        kv_us = n_attn * decode_plan.plan.model_time_us
     else:
         kv_bytes = (2.0 * batch * cache_len * cfg.kv_dim
                     * jnp.dtype(kv_dtype).itemsize)            # K+V stream
@@ -782,13 +606,21 @@ def select_serving_batch(
         plans = plan_for_model(cfg, b, prefill_len=prefill_len,
                                cache_len=cache_len, kv_dtype=kv_dtype,
                                cache=cache)
-        dp = next((p for p in plans if p["op"] == "attn_decode"), None)
-        # Provenance ("model" cold vs "cache" warm) is volatile across
-        # runs; the decision record must stay deterministic.  Full
-        # provenance lives in the Server's kernel_plan log.
-        decode_plans[b] = (
-            {k: v for k, v in dp.items() if k != "source"}
-            if dp is not None else None)
+        dp = next((p for p in plans if p.op == "attn_decode"), None)
+        # Provenance ("model" cold vs "cache" warm) and wall-clock numbers
+        # are volatile across runs, so they are stripped from the record;
+        # the kept knobs/model_time_us are reproducible *given the same
+        # cache contents* (a measured winner in the shared cache
+        # deliberately refines the plan — and hence the sweep — relative
+        # to a cold cache).  Full provenance lives in the Server's
+        # kernel_plan log.
+        if dp is not None:
+            rec = dp.record()
+            for volatile in ("source", "provenance", "measured_us"):
+                rec.pop(volatile, None)
+            decode_plans[b] = rec
+        else:
+            decode_plans[b] = None
         step_us = predict_decode_step_us(cfg, b, cache_len=cache_len,
                                          kv_dtype=kv_dtype, plans=plans)
         tok_per_s = b / (step_us * 1e-6)

@@ -1,0 +1,221 @@
+"""Declarative kernel-family registry: a tuned kernel family is a *spec*.
+
+The paper's core claim is that a many-core system is *generated from a set
+of architectural parameters* rather than hand-designed.  The tuning layer
+now holds itself to the same standard: instead of four copy-pasted
+DSE → measure → cache pipelines (one per kernel family), a family is a
+single declarative :class:`KernelSpec` — candidates + cost model +
+launcher — and the generic engine in ``kernels/autotune.py``
+(``tune``/``dispatch``) does everything else: deterministic ranking,
+top-K wall-clock measurement, the interpret fallback, the analytic-entry
+upgrade rule, and the unified versioned JSON cache.  Adding kernel family
+#5 is one ``register(KernelSpec(...))`` call, not another pipeline copy.
+
+This module is deliberately jax-free: the specs themselves live next to
+their kernels (``kernels/<family>/spec.py``, loaded lazily on first
+lookup), so the registry — and tools like ``tools/check_registry.py`` —
+can be reasoned about without touching device state.
+
+Spec contract (``problem`` is the family's plain-dict shape description,
+``knobs`` the JSON-able chosen configuration):
+
+=====================  =====================================================
+field                  signature / meaning
+=====================  =====================================================
+``name``               unique family name; the cache-key prefix
+``key_fn``             ``(problem, dtype_name, backend) -> str`` key suffix
+``enumerate_candidates``  ``(problem, dtype_bytes, vmem_bytes, top) ->
+                       list[core.dse.Candidate]`` scored ascending, never
+                       empty (the family provides its own fallback)
+``cost_fn``            ``(problem, knobs, dtype_bytes) -> dict`` — the
+                       analytic model row (wraps ``core.cost_model``)
+``make_inputs``        ``(problem, dtype) -> tuple[Array, ...]`` synthetic
+                       operands for wall-clock measurement
+``build_launcher``     ``(problem, knobs, interpret) -> fn(*inputs)`` — the
+                       Pallas call the engine times
+``reference_fn``       the pure-jnp oracle path ``dispatch`` uses off-TPU
+``problem_fn``         ``(*args, **kwargs) -> (problem, dtype)`` — derive
+                       the tuning problem from runtime dispatch arguments
+``run_fn``             ``(plan, *args, interpret=..., **kwargs) -> Array``
+                       — execute the kernel with the plan's knobs
+``measure_elems``      ``(problem) -> int`` operand-element count gating
+                       interpret-mode measurement
+``tie_break``          ``(knobs) -> tuple`` deterministic ranking tie-break
+``detail_keys``        candidate-detail fields persisted into the plan
+``default_measure_k``  measurement depth when ``dispatch`` tunes implicitly
+                       (0 for families dispatched inside a jit trace)
+``bench_key``          the family's row in BENCH_kernels.json (checked by
+                       ``tools/check_registry.py``)
+=====================  =====================================================
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Sequence
+
+
+@dataclasses.dataclass(frozen=True)
+class Plan:
+    """A tuned configuration for one (family, problem) point — the typed
+    object serving-plan logging and step-time prediction consume.
+
+    ``source`` is where *this* plan object came from (``"cache"`` for a
+    file hit); ``provenance`` is the durable answer to "was the winner
+    wall-clocked or only ranked analytically", stable across cache trips.
+    """
+
+    family: str
+    key: str
+    problem: dict
+    knobs: dict
+    source: str                  # "cache" | "measured" | "model"
+    model_time_s: float
+    measured_us: float | None = None
+    detail: dict = dataclasses.field(default_factory=dict)
+
+    @property
+    def model_time_us(self) -> float:
+        return self.model_time_s * 1e6
+
+    @property
+    def provenance(self) -> str:
+        return "measured" if self.measured_us is not None else "analytic"
+
+    def record(self) -> dict:
+        """JSON-able log row (problem included — serving problems are
+        plain scalars; families whose problem holds live objects should
+        log the key instead)."""
+        return {
+            "family": self.family,
+            "key": self.key,
+            "knobs": dict(self.knobs),
+            "source": self.source,
+            "provenance": self.provenance,
+            "model_time_us": self.model_time_us,
+            "measured_us": self.measured_us,
+            **({"detail": dict(self.detail)} if self.detail else {}),
+        }
+
+
+def _default_tie_break(knobs: dict) -> tuple:
+    return tuple(sorted((k, repr(v)) for k, v in knobs.items()))
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelSpec:
+    """Everything the generic engine needs to tune and run one family."""
+
+    name: str
+    key_fn: Callable[[dict, str, str], str]
+    enumerate_candidates: Callable[..., Sequence[Any]]
+    cost_fn: Callable[..., dict]
+    make_inputs: Callable[..., tuple]
+    build_launcher: Callable[..., Callable]
+    reference_fn: Callable[..., Any]
+    problem_fn: Callable[..., tuple]
+    run_fn: Callable[..., Any]
+    measure_elems: Callable[[dict], int]
+    tie_break: Callable[[dict], tuple] = _default_tie_break
+    detail_keys: tuple = ()
+    default_measure_k: int = 3
+    bench_key: str = ""
+
+
+_REGISTRY: dict[str, KernelSpec] = {}
+
+# Built-in families, loaded on first lookup so `import repro.kernels.registry`
+# stays jax-free.  tools/check_registry.py parses these module paths
+# statically to enumerate the shipped families without importing jax.
+BUILTIN_SPEC_MODULES = (
+    "repro.kernels.matmul.spec",
+    "repro.kernels.spmv.spec",
+    "repro.kernels.attention.spec",
+)
+# The names those modules register, declared statically: `unregister`
+# refuses them without loading anything, and no runtime snapshot is needed
+# (a snapshot taken mid-load misses a family whose spec module triggered
+# the load from inside its own in-flight registration).  Agreement with
+# the modules is asserted post-load and by tests/test_registry.py.
+BUILTIN_FAMILIES = ("matmul", "spmv", "attention", "decode")
+_builtins_loaded = False
+_loading_builtins = False
+
+
+def register(spec: KernelSpec) -> KernelSpec:
+    """Add a family to the registry; duplicate names are a hard error."""
+    if not isinstance(spec, KernelSpec):
+        raise TypeError(f"register() takes a KernelSpec, got {type(spec)!r}")
+    # Load the built-ins first so a caller can't silently shadow a builtin
+    # name before the first lookup (which would then trip the duplicate
+    # guard *inside* _load_builtins forever).  The spec modules' own
+    # register() calls re-enter here mid-load; the _loading guard makes
+    # that a no-op.
+    _load_builtins()
+    if spec.name in _REGISTRY:
+        raise ValueError(
+            f"kernel family {spec.name!r} is already registered; "
+            f"unregister() it first or pick a unique name")
+    _REGISTRY[spec.name] = spec
+    return spec
+
+
+def unregister(name: str) -> None:
+    """Remove a family (tests registering toy specs clean up with this).
+
+    Built-in families are refused: their spec modules register at import
+    time, so once unregistered they could never be reloaded in-process
+    (the builtin latch is one-way) and every later lookup would fail.
+    """
+    if name in BUILTIN_FAMILIES:
+        raise ValueError(f"cannot unregister built-in family {name!r}")
+    _REGISTRY.pop(name, None)
+
+
+def _load_builtins() -> None:
+    global _builtins_loaded, _loading_builtins
+    if _builtins_loaded or _loading_builtins:
+        return
+    import importlib
+    _loading_builtins = True
+    try:
+        for mod in BUILTIN_SPEC_MODULES:
+            # Roll back a module's partial registrations if its import
+            # fails: Python evicts the failed module from sys.modules, so
+            # the next lookup re-executes it — which would otherwise trip
+            # the duplicate-name guard on whatever it had registered
+            # before dying, hiding the real error.
+            before = set(_REGISTRY)
+            try:
+                importlib.import_module(mod)
+            except Exception:
+                for name in set(_REGISTRY) - before:
+                    del _REGISTRY[name]
+                raise
+        # Latched only after every module imported: a failed import
+        # surfaces its real error again on the next lookup instead of
+        # collapsing into a misleading "unknown family" KeyError forever.
+        # (A spec module that triggered this load from inside its own
+        # registration finishes inserting its name right after we return,
+        # within the same synchronous call — see register().)
+        _builtins_loaded = True
+    finally:
+        _loading_builtins = False
+
+
+def get(name: str) -> KernelSpec:
+    """Look up a family, loading the built-in specs on first miss."""
+    spec = _REGISTRY.get(name)
+    if spec is None:
+        _load_builtins()
+        spec = _REGISTRY.get(name)
+    if spec is None:
+        raise KeyError(
+            f"unknown kernel family {name!r}; registered: {families()}")
+    return spec
+
+
+def families() -> list[str]:
+    """Registered family names (built-ins included), sorted."""
+    _load_builtins()
+    return sorted(_REGISTRY)

@@ -1,10 +1,13 @@
 """Production mesh construction.
 
 Defined as FUNCTIONS (not module constants) so importing this module never
-touches jax device state.  The two jax API points that moved across the
-pinned-version boundary (``jax.sharding.AxisType``, ``jax.set_mesh``) are
-wrapped in compat helpers here so every caller imports cleanly on jax
-0.4.x and newer alike.
+touches jax device state.  The jax API points that moved across the
+pinned-version boundary (``jax.sharding.AxisType``, ``jax.set_mesh``,
+``jax.make_mesh(axis_types=...)``, ``jax.sharding.get_abstract_mesh``,
+``jax.shard_map``) are wrapped in compat helpers here so every caller —
+including ``parallel/compression.py`` and ``models/moe.py``, which import
+them lazily inside the function body to keep the layer diagram acyclic —
+runs on jax 0.4.x and newer alike.
 """
 
 from __future__ import annotations
@@ -40,6 +43,54 @@ def set_mesh(mesh: jax.sharding.Mesh):
     if hasattr(jax.sharding, "use_mesh"):
         return jax.sharding.use_mesh(mesh)
     return contextlib.nullcontext(mesh) if mesh is None else mesh
+
+
+def make_mesh(axis_shapes, axis_names) -> jax.sharding.Mesh:
+    """``jax.make_mesh`` with Auto axis types where the kwarg exists.
+
+    Older jax (0.4.x) has no ``axis_types`` parameter — and no axis types
+    at all, so every axis is implicitly Auto and omitting the kwarg is
+    semantically identical.
+    """
+    return jax.make_mesh(tuple(axis_shapes), tuple(axis_names),
+                         **axis_types_kwargs(len(tuple(axis_names))))
+
+
+def get_abstract_mesh():
+    """The ambient mesh: ``jax.sharding.get_abstract_mesh()`` where it
+    exists, the 0.4.x thread-resources physical mesh otherwise (both are
+    what ``set_mesh`` above installed)."""
+    if hasattr(jax.sharding, "get_abstract_mesh"):
+        return jax.sharding.get_abstract_mesh()
+    from jax._src import mesh as _mesh_lib
+    return _mesh_lib.thread_resources.env.physical_mesh
+
+
+def shard_map(f, mesh, in_specs, out_specs, axis_names=None):
+    """``jax.shard_map`` across the API move.
+
+    Modern jax spells partial-manual mode ``axis_names={...}`` and replica
+    checking ``check_vma``; 0.4.x has ``jax.experimental.shard_map`` with
+    the complement ``auto={...}`` and ``check_rep``.  Checking is disabled
+    on both: the repo's callers reduce manually (psum/pmean) inside the
+    mapped body.
+    """
+    if hasattr(jax, "shard_map"):
+        kw = {} if axis_names is None else {"axis_names": frozenset(axis_names)}
+        try:
+            return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                                 out_specs=out_specs, check_vma=False, **kw)
+        except TypeError:  # pre-rename spelling of the same knob
+            return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                                 out_specs=out_specs, check_rep=False, **kw)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    kw = {}
+    if axis_names is not None:
+        auto = frozenset(mesh.axis_names) - frozenset(axis_names)
+        if auto:
+            kw["auto"] = auto
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=False, **kw)
 
 
 def _mesh(shape, axes) -> jax.sharding.Mesh:

@@ -43,7 +43,8 @@ class Server:
         # matmul shapes, the prefill flash-attention shape AND the fused
         # decode-attention fold so the kernel engine's cache is warm
         # (analytic-only here — measurement happens offline / on first TPU
-        # run).
+        # run).  `plan_for_model` returns typed OpPlans; they are
+        # serialized via `.record()` when logged below.
         # kv_dtype matches the cache_init dtype below — the decode plan is
         # keyed on the dtype the kernel actually streams.
         self.kernel_plan = (autotune.plan_for_model(cfg, batch,
@@ -159,7 +160,7 @@ def main(argv=None):
         "tokens_generated": generated,
         "wall_s": round(wall, 2),
         "tok_per_s": round(generated / wall, 1),
-        "kernel_plan": server.kernel_plan,
+        "kernel_plan": [p.record() for p in server.kernel_plan],
     }))
     return 0
 

@@ -203,12 +203,12 @@ def attention_apply(
         v = constrain(v, "batch", "seq", "kv_heads", None)
         if prefill and jax.default_backend() == "tpu":
             # Serving prefill: the forward-only hot spot goes through the
-            # autotuned flash kernel (analytic plan at trace time — the
-            # cache was pre-warmed by `autotune.plan_for_model`).  Training
-            # keeps the differentiable jnp path below.
-            from repro.kernels.autotune import tuned_attention
-            out = tuned_attention(q, k, v, causal=cfg.causal,
-                                  window=cfg.sliding_window)
+            # registry's autotuned flash kernel (analytic plan at trace
+            # time — the cache was pre-warmed by `autotune.plan_for_model`).
+            # Training keeps the differentiable jnp path below.
+            from repro.kernels.autotune import dispatch
+            out = dispatch("attention", q, k, v, causal=cfg.causal,
+                           window=cfg.sliding_window)
         else:
             out = attention_core(q, k, v, positions, positions,
                                  causal=cfg.causal,
@@ -238,17 +238,18 @@ def attention_apply(
                 and (mode == "interpret"
                      or jax.default_backend() == "tpu")):
             # Serving decode: the single-token hot loop goes through the
-            # fused autotuned decode kernel (plan resolved at trace time
-            # against the cache `plan_for_model` pre-warmed; the valid
-            # prefix `index + 1` rides a runtime scalar the kernel skips
-            # on).  The ring-buffer SWA layout and training stay on the
-            # jnp path below.  $REPRO_DECODE_KERNEL: "auto" (TPU only),
-            # "interpret" (force interpret mode — CPU tests/demos), "off";
-            # resolved at trace time, so changing it after the serve step
-            # is jitted requires a retrace (new process / cache clear).
-            from repro.kernels.autotune import tuned_decode
-            out = tuned_decode(q[:, 0], ck, cv, length=index + 1,
-                               interpret=(mode == "interpret"))[:, None]
+            # registry's fused autotuned decode kernel (plan resolved at
+            # trace time against the cache `plan_for_model` pre-warmed;
+            # the valid prefix `index + 1` rides a runtime scalar the
+            # kernel skips on).  The ring-buffer SWA layout and training
+            # stay on the jnp path below.  $REPRO_DECODE_KERNEL: "auto"
+            # (TPU only), "interpret" (force interpret mode — CPU
+            # tests/demos), "off"; resolved at trace time, so changing it
+            # after the serve step is jitted requires a retrace (new
+            # process / cache clear).
+            from repro.kernels.autotune import dispatch
+            out = dispatch("decode", q[:, 0], ck, cv, length=index + 1,
+                           interpret=(mode == "interpret"))[:, None]
         else:
             k_valid = (k_pos <= index) & (k_pos >= 0)
             out = attention_core(q, ck, cv, positions, k_pos,

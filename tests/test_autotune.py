@@ -136,9 +136,9 @@ def test_corrupt_cache_file_is_ignored(cache):
 
 def test_stale_version_entries_ignored_not_misapplied(cache):
     """Block skipping changed what a cached (block_q, block_k) means for
-    causal=True, so the schema version was bumped: entries written under
-    any other ENGINE_VERSION must be dropped wholesale (re-tuned), never
-    returned as hits."""
+    causal=True, so v1 entries must be dropped wholesale (re-tuned), never
+    returned as hits.  (v2 entries mean the same thing as v3 and are
+    *migrated* instead — see tests/test_registry.py.)"""
     import json
     # A v1-era file whose entry sits under the *current* key with an
     # absurd winner — if version checking ever regresses, the poisoned
@@ -146,7 +146,7 @@ def test_stale_version_entries_ignored_not_misapplied(cache):
     key = autotune._attention_key(8, 256, 256, 64, True, None, "float32",
                                   autotune._backend(), None)
     cache.path.write_text(json.dumps({
-        "version": autotune.ENGINE_VERSION - 1,
+        "version": 1,
         "entries": {key: {"block_q": 7, "block_k": 13, "source": "measured",
                           "model_time_s": 1e-9, "measured_us": 0.1}},
     }))
@@ -527,31 +527,44 @@ def _serve_cfg():
 def test_plan_for_model_covers_attention(cache):
     cfg = _serve_cfg()
     plans = autotune.plan_for_model(cfg, 2, prefill_len=64, cache=cache)
-    ops = {p["op"] for p in plans}
+    ops = {p.op for p in plans}
     assert {"qkv_proj", "out_proj", "ffn_up", "ffn_down", "logits",
             "attn_prefill"} <= ops
-    attn = next(p for p in plans if p["op"] == "attn_prefill")
-    assert attn["bh_sq_sk_dh"] == [2 * cfg.num_heads, 64, 64, cfg.head_dim]
-    assert attn["block"][0] >= 1 and attn["model_time_us"] > 0
+    attn = next(p for p in plans if p.op == "attn_prefill")
+    assert attn.plan.family == "attention"
+    assert attn.plan.problem == {"bh": 2 * cfg.num_heads, "sq": 64,
+                                 "sk": 64, "dh": cfg.head_dim,
+                                 "causal": cfg.causal,
+                                 "window": cfg.sliding_window}
+    assert attn.plan.knobs["block_q"] >= 1 and attn.plan.model_time_us > 0
     # attention plans ride the same cache pipeline: second call hits
     plans2 = autotune.plan_for_model(cfg, 2, prefill_len=64, cache=cache)
-    attn2 = next(p for p in plans2 if p["op"] == "attn_prefill")
-    assert attn2["source"] == "cache" and attn2["block"] == attn["block"]
+    attn2 = next(p for p in plans2 if p.op == "attn_prefill")
+    assert attn2.plan.source == "cache"
+    assert attn2.plan.knobs == attn.plan.knobs
+    # the log record is plain JSON (what serve.py dumps at startup)
+    import json
+    rec = attn.record()
+    assert rec["op"] == "attn_prefill" and rec["family"] == "attention"
+    json.dumps(rec)
 
 
 def test_plan_for_model_covers_decode(cache):
     cfg = _serve_cfg()
     plans = autotune.plan_for_model(cfg, 2, prefill_len=64, cache_len=128,
                                     cache=cache)
-    dec = next(p for p in plans if p["op"] == "attn_decode")
-    assert dec["bkv_g_len_dh"] == [2 * cfg.num_kv_heads,
-                                   cfg.num_heads // cfg.num_kv_heads,
-                                   128, cfg.head_dim]
-    assert dec["block_k"] >= 1 and dec["model_time_us"] > 0
+    dec = next(p for p in plans if p.op == "attn_decode")
+    assert dec.plan.family == "decode"
+    assert dec.plan.problem == {"bkv": 2 * cfg.num_kv_heads,
+                                "g": cfg.num_heads // cfg.num_kv_heads,
+                                "cache_len": 128, "dh": cfg.head_dim}
+    assert dec.plan.knobs["block_k"] >= 1 and dec.plan.model_time_us > 0
+    assert dec.plan.provenance == "analytic"        # measure_k=0 warmup
     plans2 = autotune.plan_for_model(cfg, 2, prefill_len=64, cache_len=128,
                                      cache=cache)
-    dec2 = next(p for p in plans2 if p["op"] == "attn_decode")
-    assert dec2["source"] == "cache" and dec2["block_k"] == dec["block_k"]
+    dec2 = next(p for p in plans2 if p.op == "attn_decode")
+    assert dec2.plan.source == "cache"
+    assert dec2.plan.knobs == dec.plan.knobs
 
 
 def test_select_serving_batch_logs_decode_plan(cache):
@@ -560,8 +573,12 @@ def test_select_serving_batch_logs_decode_plan(cache):
                                       candidates=(1, 2, 4), cache=cache)
     assert d["decode_plan"] is not None
     assert d["decode_plan"]["op"] == "attn_decode"
-    assert d["decode_plan"]["bkv_g_len_dh"][0] \
+    assert d["decode_plan"]["problem"]["bkv"] \
         == d["batch"] * cfg.num_kv_heads
+    # volatile provenance/wall-clock fields are excluded; the kept
+    # knobs/model_time_us are reproducible given the same cache contents
+    assert "source" not in d["decode_plan"]
+    assert "provenance" not in d["decode_plan"]
 
 
 def test_select_serving_batch_deterministic(cache):

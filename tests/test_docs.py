@@ -1,14 +1,17 @@
-"""Docs hygiene (same invariants the CI docs job enforces via
-tools/check_docs.py): no broken relative links, and the ARCHITECTURE.md
-module map covers every src/repro module."""
+"""Docs + registry hygiene (same invariants the CI docs job enforces via
+tools/check_docs.py and tools/check_registry.py): no broken relative
+links, the ARCHITECTURE.md module map covers every src/repro module, and
+every registered kernel family has a benchmark row and an equivalence
+test."""
 
 import pathlib
 import sys
 
-sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent
-                       / "tools"))
+REPO = pathlib.Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(REPO / "tools"))
 
 import check_docs  # noqa: E402
+import check_registry  # noqa: E402
 
 
 def test_no_broken_relative_links():
@@ -17,3 +20,17 @@ def test_no_broken_relative_links():
 
 def test_architecture_map_covers_every_module():
     assert check_docs.check_architecture_coverage() == []
+
+
+def test_every_registered_family_is_benchmarked_and_tested():
+    assert check_registry.check(REPO / "BENCH_kernels.json") == []
+
+
+def test_registry_static_parse_matches_runtime_registry():
+    """The static parse the CI job relies on must agree with what the
+    registry actually loads — else the check could rot silently."""
+    static = {f["name"]
+              for spec in check_registry.builtin_spec_files()
+              for f in check_registry.registered_families(spec)}
+    from repro.kernels import registry
+    assert static == set(registry.families())

@@ -299,6 +299,89 @@ def test_decode_kernel_traced_length_under_jit():
             rtol=2e-3, atol=2e-3)
 
 
+@pytest.mark.parametrize("lengths,block_k", [
+    ((256, 100), 128),               # mixed depths, one per sequence
+    ((123, 1), 128),                 # ragged vs single valid slot
+    ((300, 77, 150), 512),           # cache_len % block_k != 0, coarse block
+])
+def test_decode_kernel_per_row_lengths(lengths, block_k):
+    """Continuous batching: every sequence sits at its own cache depth, so
+    `length` is a per-sequence vector and each folded row skips its own
+    tail blocks.  Must agree with the oracle at every row."""
+    b, hq, hkv, dh = len(lengths), 4, 2, 32
+    cache_len = 320
+    q = jax.random.normal(KEY, (b, hq, dh), jnp.float32)
+    k = jax.random.normal(jax.random.PRNGKey(1), (b, cache_len, hkv, dh),
+                          jnp.float32)
+    v = jax.random.normal(jax.random.PRNGKey(2), (b, cache_len, hkv, dh),
+                          jnp.float32)
+    lv = jnp.asarray(lengths, jnp.int32)
+    out = gqa_decode_attention(q, k, v, length=lv, block_k=block_k,
+                               interpret=True)
+    ref = decode_ref(q, k, v, length=lv)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-3, atol=2e-3)
+    # every row must equal its scalar-length counterpart (the degenerate
+    # case the vector path generalizes)
+    for i, n in enumerate(lengths):
+        solo = gqa_decode_attention(q[i:i + 1], k[i:i + 1], v[i:i + 1],
+                                    length=int(n), block_k=block_k,
+                                    interpret=True)
+        np.testing.assert_allclose(np.asarray(out[i]), np.asarray(solo[0]),
+                                   rtol=2e-3, atol=2e-3)
+
+
+def test_decode_kernel_per_row_lengths_traced_under_jit():
+    """The continuous-batching serve step carries per-slot write indexes as
+    a traced vector; the per-row skip must work inside jit."""
+    b, hq, hkv, dh, cache_len = 3, 4, 2, 32, 256
+    q = jax.random.normal(KEY, (b, hq, dh), jnp.float32)
+    k = jax.random.normal(jax.random.PRNGKey(1), (b, cache_len, hkv, dh),
+                          jnp.float32)
+    v = jax.random.normal(jax.random.PRNGKey(2), (b, cache_len, hkv, dh),
+                          jnp.float32)
+    f = jax.jit(lambda lv: gqa_decode_attention(q, k, v, length=lv,
+                                                block_k=128, interpret=True))
+    for lens in ((1, 100, 256), (256, 256, 256), (13, 200, 64)):
+        lv = jnp.asarray(lens, jnp.int32)
+        np.testing.assert_allclose(
+            np.asarray(f(lv)),
+            np.asarray(decode_ref(q, k, v, length=lv)),
+            rtol=2e-3, atol=2e-3)
+
+
+def test_decode_kernel_empty_slot_outputs_zeros():
+    """A length-0 row (idle continuous-batching slot) must output zeros on
+    BOTH dispatch paths — the kernel's fully-masked-row path and the
+    oracle — never uniform attention onto garbage cache contents."""
+    b, hq, hkv, dh, cache_len = 2, 4, 2, 32, 128
+    q = jax.random.normal(KEY, (b, hq, dh), jnp.float32)
+    k = jax.random.normal(jax.random.PRNGKey(1), (b, cache_len, hkv, dh),
+                          jnp.float32)
+    v = jax.random.normal(jax.random.PRNGKey(2), (b, cache_len, hkv, dh),
+                          jnp.float32)
+    lv = jnp.asarray([100, 0], jnp.int32)
+    out = gqa_decode_attention(q, k, v, length=lv, block_k=64,
+                               interpret=True)
+    ref = decode_ref(q, k, v, length=lv)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-3, atol=2e-3)
+    assert np.all(np.asarray(out[1]) == 0) and np.all(np.asarray(ref[1]) == 0)
+    assert np.any(np.asarray(out[0]) != 0)
+
+
+def test_decode_kernel_rejects_wrong_length_shape():
+    b, hq, hkv, dh, cache_len = 2, 4, 2, 32, 128
+    q = jax.random.normal(KEY, (b, hq, dh), jnp.float32)
+    k = jax.random.normal(jax.random.PRNGKey(1), (b, cache_len, hkv, dh),
+                          jnp.float32)
+    v = jax.random.normal(jax.random.PRNGKey(2), (b, cache_len, hkv, dh),
+                          jnp.float32)
+    with pytest.raises(ValueError):
+        gqa_decode_attention(q, k, v, length=jnp.ones((b + 1,), jnp.int32),
+                             interpret=True)
+
+
 def test_decode_kernel_mixed_cache_dtype():
     """bf16 activations against an f32 KV cache (the serve default)."""
     b, hq, hkv, dh, cache_len = 1, 4, 2, 32, 128

@@ -1,0 +1,299 @@
+"""KernelSpec registry: registration round-trip, duplicate rejection, the
+v2->v3 cache migration, and a fifth toy family registered in-test to prove
+the extension path end to end (the ~50-line "adding kernel family #5"
+claim)."""
+
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import dse
+from repro.kernels import autotune, registry
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.fixture
+def cache(tmp_path, monkeypatch):
+    path = tmp_path / "autotune.json"
+    monkeypatch.setenv(autotune.CACHE_ENV, str(path))
+    return autotune.TuneCache(path)
+
+
+# ---------------------------------------------------------------------------
+# registration round-trip
+# ---------------------------------------------------------------------------
+
+def _toy_spec(name="toy_scale"):
+    """A complete (if silly) family: y = x * alpha, knob = unroll chunk.
+
+    The cost model charges one pass over x plus a per-chunk overhead, so
+    the ranking deterministically prefers the largest chunk.
+    """
+    def cost_fn(problem, knobs, dtype_bytes=4):
+        n = problem["n"]
+        chunks = -(-n // knobs["chunk"])
+        time_s = n * dtype_bytes / 1e9 + chunks * 1e-6
+        return {"time_s": time_s, "vmem_bytes": knobs["chunk"] * dtype_bytes}
+
+    def enumerate_candidates(problem, dtype_bytes, vmem_bytes, top):
+        cands = []
+        for chunk in (64, 128, 256):
+            row = cost_fn(problem, {"chunk": chunk}, dtype_bytes)
+            if vmem_bytes is not None and row["vmem_bytes"] > vmem_bytes:
+                continue
+            cands.append(dse.Candidate({"chunk": chunk}, row["time_s"], {}))
+        return cands or [dse.Candidate({"chunk": 64}, 1.0, {})]
+
+    def launcher(problem, knobs, interpret):
+        return lambda x: x * problem["alpha"]
+
+    return registry.KernelSpec(
+        name=name,
+        key_fn=lambda p, dtype, backend: f"n{p['n']}:{dtype}:{backend}",
+        enumerate_candidates=enumerate_candidates,
+        cost_fn=cost_fn,
+        make_inputs=lambda p, dtype: (
+            jax.random.normal(KEY, (p["n"],), dtype),),
+        build_launcher=launcher,
+        reference_fn=lambda x, alpha=2.0: x * alpha,
+        problem_fn=lambda x, alpha=2.0: ({"n": x.shape[0], "alpha": alpha},
+                                         x.dtype),
+        run_fn=lambda plan, x, *, interpret=False, alpha=2.0: x * alpha,
+        measure_elems=lambda p: p["n"],
+        tie_break=lambda knobs: (-knobs["chunk"],),
+        default_measure_k=2,
+        bench_key="",
+    )
+
+
+@pytest.fixture
+def toy_spec():
+    spec = registry.register(_toy_spec())
+    yield spec
+    registry.unregister(spec.name)
+
+
+def test_register_roundtrip(toy_spec):
+    assert registry.get(toy_spec.name) is toy_spec
+    assert toy_spec.name in registry.families()
+
+
+def test_builtin_families_registered():
+    assert {"matmul", "spmv", "attention", "decode"} \
+        <= set(registry.families())
+    # the static declaration unregister() guards on must agree with what
+    # the spec modules actually register
+    assert set(registry.BUILTIN_FAMILIES) <= set(registry.families())
+
+
+def test_duplicate_name_rejected(toy_spec):
+    with pytest.raises(ValueError, match="already registered"):
+        registry.register(_toy_spec(toy_spec.name))
+    # builtin names are protected the same way
+    with pytest.raises(ValueError, match="already registered"):
+        registry.register(_toy_spec("matmul"))
+
+
+def test_builtin_families_cannot_be_unregistered():
+    """Spec modules register at import time, so an unregistered builtin
+    could never be reloaded in-process — the call is refused outright."""
+    registry.families()                         # latch the builtins
+    with pytest.raises(ValueError, match="cannot unregister built-in"):
+        registry.unregister("matmul")
+    assert "matmul" in registry.families()
+
+
+def test_unknown_family_lists_registered():
+    with pytest.raises(KeyError, match="unknown kernel family"):
+        registry.get("no_such_family")
+
+
+def test_register_rejects_non_spec():
+    with pytest.raises(TypeError):
+        registry.register({"name": "dict_not_spec"})
+
+
+# ---------------------------------------------------------------------------
+# fifth family end to end: tune -> cache -> dispatch
+# ---------------------------------------------------------------------------
+
+def test_toy_spec_tunes_through_generic_engine(cache, toy_spec):
+    p1 = autotune.tune(toy_spec.name, {"n": 512, "alpha": 2.0},
+                       cache=cache, measure_k=0)
+    assert p1.family == toy_spec.name
+    assert p1.knobs == {"chunk": 256}          # largest chunk wins the model
+    assert p1.source == "model" and p1.provenance == "analytic"
+    assert p1.key.startswith(f"{toy_spec.name}:n512:")
+    # second call is a cache hit with identical knobs
+    p2 = autotune.tune(toy_spec.name, {"n": 512, "alpha": 2.0},
+                       cache=cache, measure_k=0)
+    assert p2.source == "cache" and p2.knobs == p1.knobs
+    # measuring caller upgrades the analytic entry (the shared engine rule)
+    p3 = autotune.tune(toy_spec.name, {"n": 512, "alpha": 2.0},
+                       cache=cache, measure_k=2)
+    assert p3.source == "measured" and p3.measured_us is not None
+    assert p3.provenance == "measured"
+
+
+def test_toy_spec_respects_vmem_budget(cache, toy_spec):
+    p = autotune.tune(toy_spec.name, {"n": 512, "alpha": 2.0},
+                      cache=cache, measure_k=0, vmem_bytes=300)
+    assert p.knobs == {"chunk": 64}            # only 64*4B fits the budget
+    assert ":v300" in p.key                    # budget is part of the key
+
+
+def test_toy_spec_dispatches(cache, toy_spec):
+    x = jax.random.normal(KEY, (256,), jnp.float32)
+    out = autotune.dispatch(toy_spec.name, x, alpha=3.0, interpret=True,
+                            cache=cache)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(x) * 3.0)
+    # the oracle path pays no tuning state
+    hits, misses = cache.hits, cache.misses
+    out_ref = autotune.dispatch(toy_spec.name, x, alpha=3.0,
+                                use_kernel=False, cache=cache)
+    np.testing.assert_allclose(np.asarray(out_ref), np.asarray(x) * 3.0)
+    assert (cache.hits, cache.misses) == (hits, misses)
+
+
+# ---------------------------------------------------------------------------
+# cache schema v2 -> v3 migration
+# ---------------------------------------------------------------------------
+
+def _v2_file(path):
+    backend = autotune._backend()
+    entries = {
+        # measured matmul entry: must survive with its wall-clock evidence
+        f"matmul:128x128x128:float32:{backend}:vdflt": {
+            "tile": [128, 128, 128], "source": "measured",
+            "model_time_s": 3.2e-5, "measured_us": 41.5},
+        # analytic spmv entry with its balance metric
+        f"spmv:64x10:n300:nnz512:labc:float32:{backend}:vdflt": {
+            "block_rows": 16, "block_cols": None, "source": "model",
+            "model_time_s": 1.1e-6, "measured_us": None, "waste": 1.25},
+        # measured attention entry
+        f"attention:8x256x256x64:c1:wnone:float32:{backend}:vdflt": {
+            "block_q": 256, "block_k": 128, "source": "measured",
+            "model_time_s": 2.0e-6, "measured_us": 120.0},
+        # decode entry
+        f"decode:4x2x256x32:float32:{backend}:vdflt": {
+            "block_k": 256, "source": "model", "model_time_s": 5.0e-7,
+            "measured_us": None},
+        # a family that no longer exists: dropped, not crashed on
+        "ghost:1x1:float32:cpu:vdflt": {"widget": 7, "source": "measured",
+                                        "model_time_s": 1.0,
+                                        "measured_us": 1.0},
+    }
+    path.write_text(json.dumps({"version": 2, "entries": entries}))
+    return entries
+
+
+def test_v2_cache_migrates_to_v3(cache):
+    _v2_file(cache.path)
+    data = autotune.TuneCache(cache.path)._load()
+    assert data["version"] == autotune.ENGINE_VERSION
+    entries = data["entries"]
+    backend = autotune._backend()
+    # measured entries survive, re-shaped to the unified v3 format and
+    # still keyed under the family-prefixed key
+    mm = entries[f"matmul:128x128x128:float32:{backend}:vdflt"]
+    assert mm == {"knobs": {"tile": [128, 128, 128]}, "source": "measured",
+                  "model_time_s": 3.2e-5, "measured_us": 41.5, "detail": {}}
+    sp = entries[f"spmv:64x10:n300:nnz512:labc:float32:{backend}:vdflt"]
+    assert sp["knobs"] == {"block_rows": 16, "block_cols": None}
+    assert sp["detail"] == {"waste": 1.25}
+    dc = entries[f"decode:4x2x256x32:float32:{backend}:vdflt"]
+    assert dc["knobs"] == {"block_k": 256}
+    # unknown-family entries are dropped, not mis-applied
+    assert not any(k.startswith("ghost:") for k in entries)
+
+
+def test_v2_measured_entry_served_as_hit_after_migration(cache):
+    """A measured v2 winner must come back as a cache hit through tune() —
+    the whole point of migrating instead of dropping the file."""
+    _v2_file(cache.path)
+    p = autotune.tune("matmul", {"m": 128, "n": 128, "k": 128},
+                      jnp.float32, cache=autotune.TuneCache(cache.path),
+                      measure_k=2)
+    assert p.source == "cache"
+    assert p.knobs == {"tile": [128, 128, 128]}
+    assert p.measured_us == 41.5 and p.provenance == "measured"
+    ap = autotune.tune_attention(8, 256, 256, 64, jnp.float32, measure_k=0,
+                                 cache=autotune.TuneCache(cache.path))
+    assert ap.source == "cache" and (ap.block_q, ap.block_k) == (256, 128)
+
+
+def test_v1_cache_still_dropped_wholesale(cache):
+    """Migration applies to v2 only: v1 predates block skipping, so its
+    winners mean something different and must never be served."""
+    backend = autotune._backend()
+    cache.path.write_text(json.dumps({
+        "version": 1,
+        "entries": {
+            f"attention:8x256x256x64:c1:wnone:float32:{backend}:vdflt": {
+                "block_q": 7, "block_k": 13, "source": "measured",
+                "model_time_s": 1e-9, "measured_us": 0.1}},
+    }))
+    data = autotune.TuneCache(cache.path)._load()
+    assert data["version"] == autotune.ENGINE_VERSION
+    assert data["entries"] == {}
+
+
+def test_malformed_v2_entries_dropped_not_crashed(cache):
+    backend = autotune._backend()
+    cache.path.write_text(json.dumps({
+        "version": 2,
+        "entries": {
+            f"matmul:64x64x64:float32:{backend}:vdflt": {"source": "model"},
+            "attention:missing_fields": ["not", "a", "dict"],
+        },
+    }))
+    data = autotune.TuneCache(cache.path)._load()
+    assert data["version"] == autotune.ENGINE_VERSION
+    assert data["entries"] == {}
+
+
+# ---------------------------------------------------------------------------
+# the engine is family-agnostic
+# ---------------------------------------------------------------------------
+
+def test_v3_key_format_is_family_prefixed(cache):
+    p = autotune.tune("matmul", {"m": 128, "n": 128, "k": 128},
+                      cache=cache, measure_k=0)
+    family, rest = p.key.split(":", 1)
+    assert family == "matmul" and rest.endswith(":vdflt")
+    entry = json.loads(cache.path.read_text())["entries"][p.key]
+    assert set(entry) == {"knobs", "source", "model_time_s", "measured_us",
+                          "detail"}
+
+
+def test_all_builtin_families_share_one_engine(cache):
+    """Every registered built-in family tunes through the same tune() call
+    and lands in the same cache file with the same entry shape."""
+    from repro.kernels.spmv import pack_csr
+    rng = np.random.default_rng(0)
+    dense = (rng.random((64, 200)) < 0.1) * rng.standard_normal((64, 200))
+    nnz_per_row = (dense != 0).sum(1)
+    indptr = np.concatenate([[0], np.cumsum(nnz_per_row)]).astype(np.int32)
+    cols = np.concatenate(
+        [np.nonzero(r)[0] for r in dense]).astype(np.int32)
+    vals = dense[dense != 0].astype(np.float32)
+    mat = pack_csr(indptr, cols, vals, (64, 200), scheme="sorted")
+    problems = {
+        "matmul": {"m": 128, "n": 128, "k": 128},
+        "spmv": {"mat": mat},
+        "attention": {"bh": 4, "sq": 128, "sk": 128, "dh": 32,
+                      "causal": True, "window": None},
+        "decode": {"bkv": 4, "g": 2, "cache_len": 128, "dh": 32},
+    }
+    for family, problem in problems.items():
+        plan = autotune.tune(family, problem, cache=cache, measure_k=0)
+        assert plan.family == family and plan.key.startswith(f"{family}:")
+    entries = json.loads(cache.path.read_text())["entries"]
+    assert len(entries) == len(problems)
+    for entry in entries.values():
+        assert set(entry) == {"knobs", "source", "model_time_s",
+                              "measured_us", "detail"}

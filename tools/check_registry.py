@@ -1,0 +1,153 @@
+#!/usr/bin/env python
+"""Kernel-registry coverage checker, run by the CI docs job (and
+tests/test_docs.py).
+
+Every kernel family shipped through the KernelSpec registry
+(`src/repro/kernels/registry.py` -> `BUILTIN_SPEC_MODULES` ->
+`kernels/<family>/spec.py`) must stay observable:
+
+1. **A benchmark row.**  The spec's declared ``bench_key`` must be present
+   and non-empty in BENCH_kernels.json — a family the perf trajectory
+   cannot see is a family whose regressions land silently.
+2. **An equivalence test.**  Some file under tests/ must exercise the
+   family against its oracle: either through the engine
+   (``dispatch("<name>"`` / ``tune("<name>"``) or through the legacy shim
+   (``tuned_<name>(``).
+
+The spec files are parsed *statically* (ast), so this check needs no jax
+install — it runs in the same bare-python CI job as check_docs.py.
+
+Usage: python tools/check_registry.py [BENCH_kernels.json]
+Exit code 0 = clean; 1 = problems (listed one per line).
+"""
+
+from __future__ import annotations
+
+import ast
+import json
+import pathlib
+import sys
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+REGISTRY_PY = REPO / "src" / "repro" / "kernels" / "registry.py"
+
+
+def _registry_assign(name: str):
+    tree = ast.parse(REGISTRY_PY.read_text())
+    for node in ast.walk(tree):
+        if (isinstance(node, ast.Assign)
+                and any(isinstance(t, ast.Name) and t.id == name
+                        for t in node.targets)):
+            return ast.literal_eval(node.value)
+    raise SystemExit(f"{name} not found in {REGISTRY_PY}")
+
+
+def builtin_spec_files() -> list[pathlib.Path]:
+    """Resolve BUILTIN_SPEC_MODULES from registry.py without importing it."""
+    return [REPO / "src" / (m.replace(".", "/") + ".py")
+            for m in _registry_assign("BUILTIN_SPEC_MODULES")]
+
+
+def declared_builtin_families() -> set[str]:
+    """The BUILTIN_FAMILIES names registry.unregister() protects."""
+    return set(_registry_assign("BUILTIN_FAMILIES"))
+
+
+def registered_families(spec_file: pathlib.Path) -> list[dict]:
+    """Statically extract KernelSpec(name=..., bench_key=...) registrations."""
+    out = []
+    for node in ast.walk(ast.parse(spec_file.read_text())):
+        if not isinstance(node, ast.Call):
+            continue
+        fn = node.func
+        fn_name = fn.attr if isinstance(fn, ast.Attribute) else \
+            getattr(fn, "id", None)
+        if fn_name != "KernelSpec":
+            continue
+        fields = {}
+        for kw in node.keywords:
+            if kw.arg in ("name", "bench_key") \
+                    and isinstance(kw.value, ast.Constant):
+                fields[kw.arg] = kw.value.value
+        if "name" in fields:
+            out.append({"name": fields["name"],
+                        "bench_key": fields.get("bench_key", ""),
+                        "file": spec_file.relative_to(REPO).as_posix()})
+    return out
+
+
+def check(bench_path: pathlib.Path) -> list[str]:
+    problems: list[str] = []
+    families: list[dict] = []
+    for spec_file in builtin_spec_files():
+        if not spec_file.exists():
+            problems.append(f"registry: spec module missing -> "
+                            f"{spec_file.relative_to(REPO).as_posix()}")
+            continue
+        found = registered_families(spec_file)
+        if not found:
+            problems.append(
+                f"{spec_file.relative_to(REPO).as_posix()}: no KernelSpec "
+                f"registration found")
+        families.extend(found)
+
+    names = [f["name"] for f in families]
+    for dup in {n for n in names if names.count(n) > 1}:
+        problems.append(f"registry: family {dup!r} registered twice")
+    declared = declared_builtin_families()
+    if declared != set(names):
+        problems.append(
+            f"registry: BUILTIN_FAMILIES {sorted(declared)} does not match "
+            f"the names the spec modules register {sorted(set(names))}")
+
+    try:
+        report = json.loads(bench_path.read_text())
+    except (OSError, ValueError) as e:
+        report = None
+        problems.append(f"{bench_path}: unreadable benchmark report ({e!r})")
+
+    tests_text = "\n".join(p.read_text()
+                           for p in sorted((REPO / "tests").glob("*.py")))
+
+    for fam in families:
+        name, bench_key = fam["name"], fam["bench_key"]
+        if not bench_key:
+            problems.append(
+                f"{fam['file']}: family {name!r} declares no bench_key — "
+                f"every shipped family needs a BENCH_kernels.json row")
+        elif report is not None:
+            rows = report.get(bench_key)
+            if rows is None or (isinstance(rows, (list, dict)) and not rows):
+                problems.append(
+                    f"{bench_path.name}: family {name!r} has no "
+                    f"{bench_key!r} row — benchmarks/run.py must cover "
+                    f"every registered family")
+        test_patterns = (f'dispatch("{name}"', f"dispatch('{name}'",
+                         f'tune("{name}"', f"tune('{name}'",
+                         f"tuned_{name}(")
+        if not any(p in tests_text for p in test_patterns):
+            problems.append(
+                f"tests/: family {name!r} has no equivalence test "
+                f"(expected one of {', '.join(test_patterns)})")
+    if not families:
+        problems.append("registry: no built-in families found at all")
+    return problems
+
+
+def main(argv: list[str]) -> int:
+    bench = pathlib.Path(argv[1] if len(argv) > 1
+                         else REPO / "BENCH_kernels.json")
+    problems = check(bench)
+    for p in problems:
+        print(p)
+    if problems:
+        print(f"{len(problems)} registry problem(s)", file=sys.stderr)
+        return 1
+    n = sum(len(registered_families(f)) for f in builtin_spec_files())
+    print(f"registry OK: {n} families, each with a benchmark row and an "
+          f"equivalence test")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv))
