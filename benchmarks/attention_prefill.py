@@ -179,6 +179,67 @@ def decode_step_measured(b: int = 2, hq: int = 8, hkv: int = 2,
     }
 
 
+def decode_ragged_measured(b: int = 4, hq: int = 4, hkv: int = 2,
+                           dh: int = 32, cache_len: int = 256,
+                           block_k: int = 64,
+                           reps: int = 3, trials: int = 3):
+    """Ragged per-slot lengths vs the shared-scalar broadcast through the
+    SAME fused decode kernel — the continuous-batching perf claim,
+    recorded two ways:
+
+    * ``fetched_speedup``: K/V blocks streamed under the batch-max
+      broadcast / blocks streamed with per-row lengths
+      (`cost_model.decode_time_model`'s active-prefix accounting) — the
+      exact per-row block count the kernel's scalar-prefetch skip
+      executes, deterministic on any backend;
+    * ``wall_speedup``: interleaved best-of-``trials`` wall-clock of the
+      two calls (interpret mode off-TPU dilutes it with grid overhead —
+      the block count is the load-bearing number there).
+
+    The ragged lengths are the staggered steady state of a continuous
+    batch: slot i at depth ~(2i+1)/(2b) of the cache.
+    """
+    from repro.kernels.attention import decode as attn_decode
+
+    interpret = jax.default_backend() != "tpu"
+    g = hq // hkv
+    lengths = [max(1, ((2 * i + 1) * cache_len) // (2 * b))
+               for i in range(b)]
+    scale = 1.0 / (dh ** 0.5)
+    q = jax.random.normal(jax.random.PRNGKey(0), (b, hq, dh), jnp.float32)
+    k = jax.random.normal(jax.random.PRNGKey(1), (b, cache_len, hkv, dh),
+                          jnp.float32)
+    v = jax.random.normal(jax.random.PRNGKey(2), (b, cache_len, hkv, dh),
+                          jnp.float32)
+    len_vec = jnp.asarray(lengths, jnp.int32)
+
+    slots = _interleaved_best_us({
+        key: (lambda length=length: attn_decode.gqa_decode_attention(
+            q, k, v, scale=scale, length=length, block_k=block_k,
+            interpret=interpret))
+        for key, length in (("ragged", len_vec), ("broadcast", cache_len))},
+        reps, trials)
+
+    problem = {"bkv": b * hkv, "g": g, "cache_len": cache_len, "dh": dh}
+    ragged = cost_model.decode_time_model(
+        problem["bkv"], g, cache_len, dh, block_k, lengths=lengths)
+    broadcast = cost_model.decode_time_model(
+        problem["bkv"], g, cache_len, dh, block_k)
+    return {
+        "shape": [b, hq, hkv, cache_len, dh],
+        "lengths": lengths,
+        "block_k": block_k,
+        "fetched_ragged": ragged["fetched_k"],
+        "fetched_broadcast": broadcast["fetched_k"],
+        "fetched_speedup": broadcast["fetched_k"] / ragged["fetched_k"],
+        "model_speedup": broadcast["time_s"] / ragged["time_s"],
+        "ragged_us": slots["ragged"],
+        "broadcast_us": slots["broadcast"],
+        "wall_speedup": slots["broadcast"] / slots["ragged"],
+        "interpret": interpret,
+    }
+
+
 def tuned_vs_fixed_measured(bh: int = 4, seq: int = 256, dh: int = 32,
                             reps: int = 3, trials: int = 3):
     """Wall-clock tuned-vs-fixed at a size where CPU interpret timing is
@@ -215,7 +276,8 @@ def tuned_vs_fixed_measured(bh: int = 4, seq: int = 256, dh: int = 32,
     }
 
 
-def main(tuned_recs=None, measured_rec=None, skip_rec=None, decode_rec=None):
+def main(tuned_recs=None, measured_rec=None, skip_rec=None, decode_rec=None,
+         ragged_rec=None):
     lines = []
     for r in (tuned_recs if tuned_recs is not None else tuned_vs_fixed()):
         bh, sq, sk, dh = r["shape"]
@@ -242,6 +304,13 @@ def main(tuned_recs=None, measured_rec=None, skip_rec=None, decode_rec=None):
         f"{d['tuned_us']:.1f},"
         f"speedup_vs_fixed={d['speedup_vs_fixed']:.3f};"
         f"block_k={d['tuned_block_k']};src={d['tuned_source']}")
+    rg = ragged_rec if ragged_rec is not None else decode_ragged_measured()
+    lines.append(
+        f"attn.decode_ragged_b{rg['shape'][0]}_l{rg['shape'][3]},"
+        f"{rg['ragged_us']:.1f},"
+        f"fetched_speedup={rg['fetched_speedup']:.3f};"
+        f"wall_speedup={rg['wall_speedup']:.3f};"
+        f"block_k={rg['block_k']}")
     return lines
 
 

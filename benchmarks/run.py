@@ -30,10 +30,13 @@ SMOKE_ATTN_MEASURED = dict(bh=2, seq=128, dh=32, reps=2, trials=2)
 SMOKE_CAUSAL_SKIP = dict(bh=1, seq=256, dh=32, block_q=64, block_k=64,
                          reps=2, trials=2)
 SMOKE_DECODE = dict(b=1, hq=4, hkv=2, dh=32, cache_len=256, reps=2, trials=2)
+SMOKE_RAGGED = dict(b=2, hq=4, hkv=2, dh=32, cache_len=128, block_k=32,
+                    reps=2, trials=2)
 
 
 def kernel_report(tuned_recs=None, attn_recs=None, attn_measured=None,
-                  attn_skip=None, attn_decode=None) -> dict:
+                  attn_skip=None, attn_decode=None,
+                  attn_ragged=None) -> dict:
     import jax
 
     from benchmarks import attention_prefill, table1_matmul, table2_spmv
@@ -58,6 +61,9 @@ def kernel_report(tuned_recs=None, attn_recs=None, attn_measured=None,
         "attention_decode": (
             attn_decode if attn_decode is not None
             else attention_prefill.decode_step_measured()),
+        "decode_ragged": (
+            attn_ragged if attn_ragged is not None
+            else attention_prefill.decode_ragged_measured()),
     }
 
 
@@ -90,11 +96,13 @@ def main(argv=None) -> None:
         **(SMOKE_CAUSAL_SKIP if args.smoke else {}))
     attn_decode = attention_prefill.decode_step_measured(
         **(SMOKE_DECODE if args.smoke else {}))
+    attn_ragged = attention_prefill.decode_ragged_measured(
+        **(SMOKE_RAGGED if args.smoke else {}))
     lines: list[str] = []
     lines += table1_matmul.main(tuned_recs)
     lines += table2_spmv.main()
     lines += attention_prefill.main(attn_recs, attn_measured, attn_skip,
-                                    attn_decode)
+                                    attn_decode, attn_ragged)
     lines += bandwidth_extrapolation.main()
     try:
         lines += roofline_report.main()
@@ -106,7 +114,7 @@ def main(argv=None) -> None:
 
     if not args.skip_json:
         report = kernel_report(tuned_recs, attn_recs, attn_measured,
-                               attn_skip, attn_decode)
+                               attn_skip, attn_decode, attn_ragged)
         with open(args.out, "w") as f:
             json.dump(report, f, indent=1, sort_keys=True)
         print(f"# wrote {args.out}")

@@ -16,6 +16,7 @@ The dominant term is the bottleneck the perf loop iterates on.
 from __future__ import annotations
 
 import dataclasses
+from typing import Sequence
 
 from repro.core import hardware
 
@@ -269,23 +270,48 @@ def decode_time_model(
     block_k: int,
     chip: hardware.Chip = hardware.TPU_V5E,
     dtype_bytes: int = 2,
+    lengths: Sequence[int] | None = None,
 ) -> dict:
     """Bandwidth model of the fused decode-attention kernel
     (kernels/attention/decode.py) for the tuner's candidate ranking.
 
     One generated token attends over the KV cache: ``bkv = batch*kv_heads``
     folded rows, each carrying its ``g = heads/kv_heads`` GQA query group
-    as the q-row axis.  The kernel streams ceil(kv_len/block_k) K/V blocks
-    per row — the decode hot loop's memory floor — so the fetched volume is
-    the block-rounded cache, and ``waste`` is the same fetched-vs-active
-    metric the SpMV load-balance model charges: a coarse block_k over-
-    fetches the ragged tail, a fine one adds grid steps for free traffic.
+    as the q-row axis.  The kernel streams each row's *own* block-rounded
+    valid prefix — the decode hot loop's memory floor — and ``waste`` is
+    the same fetched-vs-active metric the SpMV load-balance model charges:
+    a coarse block_k over-fetches the ragged tail, a fine one adds grid
+    steps for free traffic.
+
+    ``lengths`` (optional) is the per-sequence valid-prefix distribution of
+    a ragged continuous batch; ``bkv`` must be a multiple of its size (the
+    per-KV-head fold repeats each sequence's length).  Each row is charged
+    ceil(len_i/block_k) blocks, clamped to the allocated ``kv_len`` — the
+    active-prefix accounting, not the batch max.  ``lengths=None`` is the
+    shared-scalar broadcast: every row pays the full ``kv_len``.
     """
-    k_steps = max(1, -(-max(kv_len, 1) // block_k))
-    fetched = k_steps * block_k              # block-rounded cache stream
-    kv_bytes = 2.0 * bkv * fetched * dh * dtype_bytes
+    if lengths is not None:
+        if not lengths or bkv % len(lengths):
+            raise ValueError(
+                f"bkv={bkv} must be a positive multiple of "
+                f"len(lengths)={len(lengths)}")
+        rep = bkv // len(lengths)
+        clamped = [min(max(int(l), 0), kv_len) for l in lengths]
+        # The kernel always executes block 0 even for an idle slot.
+        row_steps = [max(1, -(-l // block_k)) for l in clamped]
+        fetched_total = rep * sum(s * block_k for s in row_steps)
+        active_total = rep * sum(max(l, 1) for l in clamped)
+        fetched = fetched_total / bkv        # mean per-row stream
+        active = active_total / bkv
+    else:
+        k_steps = max(1, -(-max(kv_len, 1) // block_k))
+        fetched = k_steps * block_k          # block-rounded cache stream
+        fetched_total = bkv * fetched
+        active = min(kv_len, fetched)
+        active_total = bkv * max(kv_len, 1)
+    kv_bytes = 2.0 * fetched_total * dh * dtype_bytes
     qo_bytes = 2.0 * bkv * g * dh * dtype_bytes
-    flops = 4.0 * bkv * g * fetched * dh     # qK^T + pV over fetched blocks
+    flops = 4.0 * g * fetched_total * dh     # qK^T + pV over fetched blocks
     memory_s = (kv_bytes + qo_bytes) / chip.hbm_bw
     compute_s = flops / chip.peak_flops
     total_s = max(compute_s, memory_s)
@@ -304,8 +330,8 @@ def decode_time_model(
         "time_s": total_s,
         "gflops": flops / total_s / 1e9,
         "fetched_k": fetched,
-        "active_k": min(kv_len, fetched),
-        "waste": fetched / max(kv_len, 1),
+        "active_k": active,
+        "waste": fetched_total / active_total,
     }
 
 

@@ -117,13 +117,14 @@ def rank_decode_blocks(
     dtype_bytes: int = 2,
     block_cands: Sequence[int] = (128, 256, 512, 1024, 2048),
     top: int = 8,
+    lengths: Sequence[int] | None = None,
 ) -> list[Candidate]:
     """Deprecated: moved to `kernels.attention.spec.rank_decode_blocks`
     (the decode family's KernelSpec enumeration).  Delegating shim."""
     from repro.kernels.attention import spec as attn_spec
     return attn_spec.rank_decode_blocks(
         bkv, g, kv_len, dh, vmem_bytes=vmem_bytes, dtype_bytes=dtype_bytes,
-        block_cands=block_cands, top=top)
+        block_cands=block_cands, top=top, lengths=lengths)
 
 
 def sharding_candidates(num_chips: int, min_model: int = 1) -> list[dict]:

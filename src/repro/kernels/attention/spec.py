@@ -185,6 +185,7 @@ def rank_decode_blocks(
     dtype_bytes: int = 2,
     block_cands: Sequence[int] = (128, 256, 512, 1024, 2048),
     top: int = 8,
+    lengths: Sequence[int] | None = None,
 ) -> list[dse.Candidate]:
     """Sweep block_k for the fused decode-attention kernel
     (kernels/attention/decode.py); score with
@@ -197,6 +198,13 @@ def rank_decode_blocks(
     block_k on ties (fewer grid steps for the same traffic).  Never empty:
     the smallest candidate is scored unconditionally if the budget rejects
     everything (the kernel is the final arbiter on real VMEM).
+
+    ``lengths`` (optional) is a ragged batch's per-sequence valid-prefix
+    distribution: candidates are scored on each row's block-rounded
+    *active prefix* instead of the full ``kv_len``, so a batch mixing
+    shallow and deep slots prefers a finer block_k that lets the shallow
+    rows skip — the fetched-vs-active load-balancing argument applied to
+    the serving plan.
     """
     chip = hardware.TPU_V5E
     budget = vmem_bytes if vmem_bytes is not None else chip.usable_vmem()
@@ -206,7 +214,8 @@ def rank_decode_blocks(
     def evaluate(knobs: dict) -> tuple[float, dict]:
         res = cost_model.decode_time_model(bkv, g, kv_len, dh,
                                            knobs["block_k"],
-                                           dtype_bytes=dtype_bytes)
+                                           dtype_bytes=dtype_bytes,
+                                           lengths=lengths)
         if res["vmem_bytes"] > budget:
             return float("inf"), {}
         return res["time_s"], {**knobs, **res}
@@ -218,15 +227,26 @@ def rank_decode_blocks(
     if not ranked:
         bk = cands[0]
         res = cost_model.decode_time_model(bkv, g, kv_len, dh, bk,
-                                           dtype_bytes=dtype_bytes)
+                                           dtype_bytes=dtype_bytes,
+                                           lengths=lengths)
         ranked = [dse.Candidate({"block_k": bk}, res["time_s"],
                                 {"block_k": bk, **res})]
     return ranked[:top]
 
 
 def _decode_key_fn(problem: dict, dtype: str, backend: str) -> str:
+    # The optional per-slot length distribution is part of the key: a plan
+    # tuned for a ragged workload must not shadow the batch-max one.
+    lengths = problem.get("lengths")
+    ltag = ("" if not lengths
+            else ":l" + "-".join(str(int(l)) for l in lengths))
     return (f"{problem['bkv']}x{problem['g']}x{problem['cache_len']}"
-            f"x{problem['dh']}:{dtype}:{backend}")
+            f"x{problem['dh']}{ltag}:{dtype}:{backend}")
+
+
+def _decode_lengths(problem: dict) -> list[int] | None:
+    lengths = problem.get("lengths")
+    return list(lengths) if lengths else None
 
 
 def _decode_enumerate(problem: dict, dtype_bytes: int,
@@ -234,7 +254,8 @@ def _decode_enumerate(problem: dict, dtype_bytes: int,
     # Over-request: the engine's tie_break performs the authoritative cut.
     ranked = rank_decode_blocks(
         problem["bkv"], problem["g"], problem["cache_len"], problem["dh"],
-        vmem_bytes=vmem_bytes, dtype_bytes=dtype_bytes, top=max(top, 8))
+        vmem_bytes=vmem_bytes, dtype_bytes=dtype_bytes, top=max(top, 8),
+        lengths=_decode_lengths(problem))
     return [dse.Candidate({"block_k": c.detail["block_k"]}, c.score, {})
             for c in ranked]
 
@@ -242,7 +263,8 @@ def _decode_enumerate(problem: dict, dtype_bytes: int,
 def _decode_cost_fn(problem: dict, knobs: dict, dtype_bytes: int = 2) -> dict:
     return cost_model.decode_time_model(
         problem["bkv"], problem["g"], problem["cache_len"], problem["dh"],
-        knobs["block_k"], dtype_bytes=dtype_bytes)
+        knobs["block_k"], dtype_bytes=dtype_bytes,
+        lengths=_decode_lengths(problem))
 
 
 def _decode_make_inputs(problem: dict, dtype) -> tuple:
@@ -255,11 +277,21 @@ def _decode_make_inputs(problem: dict, dtype) -> tuple:
 
 
 def _decode_build_launcher(problem: dict, knobs: dict, interpret: bool):
+    import numpy as np
+
     scale = 1.0 / (problem["dh"] ** 0.5)
-    # Ranked and measured at the full cache depth — the worst case the
-    # server allocated for; the valid prefix is a runtime scalar.
+    # Measured at the depths the plan is priced at: the per-row ragged
+    # lengths when the problem carries a distribution (each sequence's
+    # length repeated across its folded KV heads), else the full cache
+    # depth — the worst case the server allocated for.
+    lengths = _decode_lengths(problem)
+    if lengths:
+        rep = problem["bkv"] // len(lengths)
+        length = np.repeat(np.asarray(lengths, np.int32), rep)
+    else:
+        length = problem["cache_len"]
     return lambda q, k, v: attn_decode.decode_attention(
-        q, k, v, scale=scale, length=problem["cache_len"],
+        q, k, v, scale=scale, length=length,
         block_k=knobs["block_k"], interpret=interpret)
 
 

@@ -495,6 +495,7 @@ class OpPlan:
 def plan_for_model(cfg, batch: int, *, prefill_len: int = 0,
                    cache_len: int = 0,
                    kv_dtype=jnp.bfloat16,
+                   slot_lengths: Sequence[int] | None = None,
                    cache: TuneCache | None = None,
                    measure_k: int = 0) -> list[OpPlan]:
     """Pre-tune the serving-path kernel shapes of a model config.
@@ -506,6 +507,14 @@ def plan_for_model(cfg, batch: int, *, prefill_len: int = 0,
     shape, and — when ``cache_len`` is given — the fused decode-attention
     fold, so every registered serving family shares one warmup.  Returns
     typed `OpPlan`s; `.record()` them for logging.
+
+    ``slot_lengths`` (optional) is the workload's steady-state slot-depth
+    distribution: the decode plan is then tuned on ``batch`` quantiles of
+    it (per-slot active-prefix accounting — a ragged batch prefers a finer
+    block_k so shallow slots skip more), and the winner is *pinned* under
+    the plain runtime dispatch key so the jitted serve step — whose traced
+    problem cannot carry the distribution — actually runs the
+    workload-aware block.  Pinning never overwrites a measured entry.
     """
     d, f, v = cfg.d_model, cfg.d_ff or cfg.d_model * 4, cfg.vocab_size
     qkv = max(cfg.num_heads * cfg.head_dim, d) or d
@@ -531,12 +540,36 @@ def plan_for_model(cfg, batch: int, *, prefill_len: int = 0,
     if cache_len > 0 and cfg.num_heads and cfg.num_kv_heads:
         # Keyed on the KV-cache dtype the server allocates (`kv_dtype`) —
         # the decode kernel streams the cache, not the activations.
-        plans.append(OpPlan("attn_decode", tune(
-            "decode",
-            {"bkv": batch * cfg.num_kv_heads,
-             "g": cfg.num_heads // cfg.num_kv_heads,
-             "cache_len": cache_len, "dh": cfg.head_dim},
-            kv_dtype, measure_k=measure_k, cache=cache)))
+        problem = {"bkv": batch * cfg.num_kv_heads,
+                   "g": cfg.num_heads // cfg.num_kv_heads,
+                   "cache_len": cache_len, "dh": cfg.head_dim}
+        if slot_lengths:
+            problem["lengths"] = tuple(
+                _quantile_lengths(batch, slot_lengths, cache_len))
+        plan = tune("decode", problem, kv_dtype, measure_k=measure_k,
+                    cache=cache)
+        if slot_lengths:
+            # Pin the workload-aware winner under the runtime dispatch key
+            # (the jit-traced problem has no distribution field), unless a
+            # measured winner already owns it.
+            run_problem = {k: v for k, v in problem.items()
+                           if k != "lengths"}
+            spec = registry.get("decode")
+            cache_obj = cache or get_cache()
+            run_key = cache_key(spec, run_problem,
+                                jnp.dtype(kv_dtype).name, _backend(), None)
+            existing = cache_obj._load()["entries"].get(run_key)
+            if existing is None or existing.get("source") == "model":
+                # Re-score the pinned knobs at the runtime problem: the
+                # entry's model time must describe the key it lives under
+                # (batch-max accounting), not the ragged score.
+                run_cost = spec.cost_fn(run_problem, plan.knobs)
+                cache_obj.put(run_key, {
+                    "knobs": dict(plan.knobs), "source": "model",
+                    "model_time_s": run_cost["time_s"],
+                    "measured_us": None,
+                    "detail": {"pinned_from": plan.key}})
+        plans.append(OpPlan("attn_decode", plan))
     return plans
 
 
@@ -544,8 +577,18 @@ def _attn_layer_count(cfg) -> int:
     return sum(1 for l in range(cfg.num_layers) if cfg.is_attn_layer(l))
 
 
+def _quantile_lengths(batch: int, slot_lengths: Sequence[int],
+                      cache_len: int) -> list[int]:
+    """Resample a workload slot-depth distribution to ``batch`` evenly
+    spaced quantiles (sorted, clamped to the allocated cache) — the
+    per-slot lengths a candidate batch is priced at."""
+    ls = sorted(max(0, min(int(l), cache_len)) for l in slot_lengths)
+    return [ls[((2 * i + 1) * len(ls)) // (2 * batch)] for i in range(batch)]
+
+
 def predict_decode_step_us(cfg, batch: int, *, cache_len: int,
                            kv_dtype=jnp.bfloat16,
+                           lengths: Sequence[int] | None = None,
                            plans: list[OpPlan] | None = None,
                            cache: TuneCache | None = None) -> float:
     """Predicted wall time of one decode step at this batch, from the tuned
@@ -557,9 +600,16 @@ def predict_decode_step_us(cfg, batch: int, *, cache_len: int,
     logits matmul once.  The KV stream (`2 * batch * cache_len * kv_dim`
     bf16 bytes per attention layer at `hbm_bw`) is the decode hot loop's
     memory floor.
+
+    ``lengths`` (optional, one valid prefix per slot) prices the KV term
+    at the ragged batch's active prefixes — the block-rounded per-row
+    stream the fused kernel actually executes — instead of the batch-max
+    broadcast that charges every short slot the full ``cache_len``.
     """
+    lengths = lengths or None            # empty == no distribution
     plans = plans if plans is not None else plan_for_model(
-        cfg, batch, cache_len=cache_len, kv_dtype=kv_dtype, cache=cache)
+        cfg, batch, cache_len=cache_len, kv_dtype=kv_dtype,
+        slot_lengths=lengths, cache=cache)
     attn_ops_ = {"qkv_proj", "out_proj"}
     ffn_ops = {"ffn_up", "ffn_down"}
     n_attn = _attn_layer_count(cfg)
@@ -571,9 +621,24 @@ def predict_decode_step_us(cfg, batch: int, *, cache_len: int,
         # The tuned decode-attention plan prices the KV stream *and* the
         # attention FLOPs at the chosen block_k (including ragged-tail
         # over-fetch) — strictly more faithful than the raw byte floor.
-        kv_us = n_attn * decode_plan.plan.model_time_us
+        if lengths is not None:
+            # Re-price the tuned block_k on the actual length
+            # distribution (the plan itself is tuned at the allocated
+            # cache depth — the worst case the kernel must still fit).
+            from repro.core import cost_model
+            prob = decode_plan.plan.problem
+            model = cost_model.decode_time_model(
+                prob["bkv"], prob["g"], prob["cache_len"], prob["dh"],
+                decode_plan.plan.knobs["block_k"],
+                dtype_bytes=jnp.dtype(kv_dtype).itemsize,
+                lengths=list(lengths))
+            kv_us = n_attn * model["time_s"] * 1e6
+        else:
+            kv_us = n_attn * decode_plan.plan.model_time_us
     else:
-        kv_bytes = (2.0 * batch * cache_len * cfg.kv_dim
+        streamed = (float(sum(lengths)) if lengths is not None
+                    else float(batch * cache_len))
+        kv_bytes = (2.0 * streamed * cfg.kv_dim
                     * jnp.dtype(kv_dtype).itemsize)            # K+V stream
         kv_us = n_attn * kv_bytes / hardware.TPU_V5E.hbm_bw * 1e6
     return (n_attn * attn_us + cfg.num_layers * ffn_us + logits_us + kv_us)
@@ -584,6 +649,7 @@ def select_serving_batch(
     kv_dtype=jnp.bfloat16,
     candidates: Sequence[int] = (1, 2, 4, 8, 16, 32, 64),
     latency_budget_ms: float | None = None,
+    slot_lengths: Sequence[int] | None = None,
     cache: TuneCache | None = None,
 ) -> dict:
     """Sweep candidate batch sizes against the tuned plans' predicted step
@@ -598,14 +664,23 @@ def select_serving_batch(
     entries, when present, refine the underlying plans but the sweep itself
     never wall-clocks).  Returns the decision record `launch.serve` logs at
     startup: {"batch", "latency_budget_ms", "sweep": [...]}.
+
+    ``slot_lengths`` (optional) is the workload's steady-state slot-depth
+    distribution; each candidate batch is priced at ``b`` evenly spaced
+    quantiles of it (per-slot active-prefix accounting) instead of the
+    batch-max broadcast that over-charges ragged batches — so a mixed
+    16/500-token batch no longer pays 500 everywhere in the sweep.
     """
+    slot_lengths = slot_lengths or None   # empty queue == no distribution
     sweep = []
     best = None
     decode_plans = {}
     for b in candidates:
         plans = plan_for_model(cfg, b, prefill_len=prefill_len,
                                cache_len=cache_len, kv_dtype=kv_dtype,
-                               cache=cache)
+                               slot_lengths=slot_lengths, cache=cache)
+        lengths_b = (None if slot_lengths is None
+                     else _quantile_lengths(b, slot_lengths, cache_len))
         dp = next((p for p in plans if p.op == "attn_decode"), None)
         # Provenance ("model" cold vs "cache" warm) and wall-clock numbers
         # are volatile across runs, so they are stripped from the record;
@@ -622,12 +697,17 @@ def select_serving_batch(
         else:
             decode_plans[b] = None
         step_us = predict_decode_step_us(cfg, b, cache_len=cache_len,
-                                         kv_dtype=kv_dtype, plans=plans)
+                                         kv_dtype=kv_dtype, plans=plans,
+                                         lengths=lengths_b)
         tok_per_s = b / (step_us * 1e-6)
         feasible = (latency_budget_ms is None
                     or step_us <= latency_budget_ms * 1e3)
-        sweep.append({"batch": b, "step_us": step_us,
-                      "tok_per_s": tok_per_s, "feasible": feasible})
+        row = {"batch": b, "step_us": step_us,
+               "tok_per_s": tok_per_s, "feasible": feasible}
+        if lengths_b is not None:
+            row["slot_lengths"] = lengths_b
+            row["mean_len"] = sum(lengths_b) / len(lengths_b)
+        sweep.append(row)
         if feasible and (best is None or tok_per_s > best["tok_per_s"]):
             best = sweep[-1]
     if best is None:       # nothing met the budget: least-bad latency wins
@@ -636,5 +716,7 @@ def select_serving_batch(
             "predicted_step_us": best["step_us"],
             "predicted_tok_per_s": best["tok_per_s"],
             "latency_budget_ms": latency_budget_ms,
+            "length_model": ("active-prefix" if slot_lengths is not None
+                             else "batch-max"),
             "decode_plan": decode_plans[best["batch"]],
             "sweep": sweep}

@@ -1,14 +1,19 @@
-"""Batched serving driver: prefill + decode loop with continuous batching.
+"""Batched serving driver: ragged continuous batching end to end.
 
 Requests queue up; the server packs up to ``--batch`` sequences, prefills
-them (one forward), then decodes with the shared KV cache until each hits
-its stop length; finished slots are refilled from the queue (continuous
-batching).  ``--batch 0`` (the default) asks the autotuner for the batch:
-`autotune.select_serving_batch` sweeps candidate batch sizes against the
-cached kernel plans' predicted step time and picks the batch maximizing
-predicted decode throughput under ``--latency-budget-ms`` — the DSE loop
-driving a serving decision instead of a kernel tile.  Runs on CPU with
-smoke configs:
+each arriving request with a *masked batched prefill* (only the target
+slot's cache rows are written, from depth 0), then decodes with per-slot
+cache depths — every slot attends only over its own valid prefix, carried
+as the cache's ``lengths: (B,)`` vector all the way into the fused decode
+kernel's scalar-prefetch skip.  Finished slots are zeroed and refilled
+from the queue (continuous batching).  ``--batch 0`` (the default) asks
+the autotuner for the batch: `autotune.select_serving_batch` sweeps
+candidate batch sizes against the cached kernel plans' predicted step
+time — priced at quantiles of the workload's slot-depth distribution, the
+active-prefix accounting, not the batch max — and picks the batch
+maximizing predicted decode throughput under ``--latency-budget-ms`` —
+the DSE loop driving a serving decision instead of a kernel tile.  Runs
+on CPU with smoke configs:
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3_14b --smoke \
       --requests 6 --prompt-len 16 --gen 12
@@ -35,7 +40,8 @@ from repro.parallel import sharding as shd
 
 class Server:
     def __init__(self, cfg, batch: int, max_len: int,
-                 prefill_len: int = 0, autotune_kernels: bool = True):
+                 prefill_len: int = 0, autotune_kernels: bool = True,
+                 slot_lengths=None):
         self.cfg = cfg
         self.batch = batch
         self.max_len = max_len
@@ -47,10 +53,15 @@ class Server:
         # serialized via `.record()` when logged below.
         # kv_dtype matches the cache_init dtype below — the decode plan is
         # keyed on the dtype the kernel actually streams.
+        # `slot_lengths` is the workload's steady-state slot-depth
+        # distribution: the decode plan is tuned on its quantiles (and
+        # pinned under the runtime dispatch key), so the fused kernel runs
+        # the ragged-workload-aware block, not the batch-max one.
         self.kernel_plan = (autotune.plan_for_model(cfg, batch,
                                                     prefill_len=prefill_len,
                                                     cache_len=max_len,
-                                                    kv_dtype=jnp.float32)
+                                                    kv_dtype=jnp.float32,
+                                                    slot_lengths=slot_lengths)
                             if autotune_kernels else [])
         self.params = transformer.init(cfg, jax.random.PRNGKey(0),
                                        dtype=jnp.float32)
@@ -64,21 +75,40 @@ class Server:
 
     def prefill(self, slot: int, req_id: int, prompt: np.ndarray,
                 gen_len: int):
-        """Prefill one slot by stepping the shared cache over the prompt
-        (slot-local prefill keeps the demo simple; the production prefill
-        path is `make_prefill_step` on a separate prefill mesh)."""
-        for t in prompt:
-            tok = jnp.zeros((self.batch, 1), jnp.int32).at[slot, 0].set(int(t))
-            nxt, self.cache = self.serve_step(self.params, self.cache, tok)
+        """Masked batched prefill of one slot: the whole prompt in a single
+        forward whose ``active`` mask is the slot's one-hot, so ONLY this
+        slot's cache rows are written and only its per-slot length advances
+        from depth 0.  (The previous slot-local loop stepped the *shared*
+        cache with zero tokens for every other slot, silently polluting
+        their KV entries and advancing their depths.)  The recycled slot's
+        stale KV/state rows are zeroed first — a refilled slot must be
+        indistinguishable from a fresh one."""
+        prompt = np.asarray(prompt, np.int32)
+        if self.cfg.sliding_window:
+            # The ring buffer keeps at most `window` keys; feeding more in
+            # one masked scatter would alias ring rows. A fresh slot only
+            # ever attends the last `window` prompt tokens anyway.
+            prompt = prompt[-self.cfg.sliding_window:]
+        self.cache = transformer.cache_reset_slot(self.cache, slot)
+        toks = jnp.zeros((self.batch, prompt.size),
+                         jnp.int32).at[slot].set(prompt)
+        active = jnp.zeros((self.batch,), jnp.bool_).at[slot].set(True)
+        nxt, self.cache = self.serve_step(self.params, self.cache, toks,
+                                          active)
         self.last_tok = self.last_tok.at[slot, 0].set(int(nxt[slot, 0]))
         self.slot_len[slot] = 0
         self.slot_target[slot] = gen_len
         self.slot_req[slot] = req_id
 
     def decode_step(self):
+        """One ragged decode step: every occupied slot attends over its own
+        valid cache prefix (per-slot ``lengths`` threaded down to the fused
+        decode kernel's scalar-prefetch vector); idle slots neither write
+        nor advance."""
+        active = jnp.asarray(self.slot_req >= 0)
         nxt, self.cache = self.serve_step(self.params, self.cache,
-                                          self.last_tok)
-        self.last_tok = nxt
+                                          self.last_tok, active)
+        self.last_tok = jnp.where(active[:, None], nxt, self.last_tok)
         self.slot_len[self.slot_req >= 0] += 1
         done = [s for s in range(self.batch)
                 if self.slot_req[s] >= 0
@@ -112,6 +142,13 @@ def main(argv=None):
     rules = specs.rules_for(mesh)
     max_len = args.prompt_len + args.gen + 8
 
+    # Steady-state slot-depth distribution: continuous batching staggers
+    # occupied slots roughly uniformly across [prompt, prompt + gen] — the
+    # length model the batch sweep and the decode-plan tuning both price.
+    n_dist = max(args.batch_candidates + [args.batch, 1])
+    dist = [args.prompt_len + ((2 * i + 1) * args.gen) // (2 * n_dist)
+            for i in range(n_dist)]
+
     if args.batch > 0:
         batch = args.batch
         decision = {"batch": batch, "source": "flag"}
@@ -122,10 +159,14 @@ def main(argv=None):
         # still pay the step), so cap the sweep at --requests.
         cands = [c for c in args.batch_candidates if c <= args.requests]
         cands = cands or [min(args.batch_candidates)]
+        # The sweep prices each candidate at quantiles of the slot-depth
+        # distribution — the ragged batch the kernel actually skips on,
+        # not the batch-max broadcast that over-charges every short slot.
         decision = autotune.select_serving_batch(
             cfg, cache_len=max_len, prefill_len=args.prompt_len,
             kv_dtype=jnp.float32,          # the Server's cache dtype
             candidates=tuple(cands),
+            slot_lengths=dist,
             latency_budget_ms=args.latency_budget_ms)
         decision["source"] = "autotune"
         batch = decision["batch"]
@@ -136,7 +177,8 @@ def main(argv=None):
               args.gen) for i in range(args.requests)]
 
     with set_mesh(mesh), shd.use_rules(rules):
-        server = Server(cfg, batch, max_len, prefill_len=args.prompt_len)
+        server = Server(cfg, batch, max_len, prefill_len=args.prompt_len,
+                        slot_lengths=dist)
         t0 = time.time()
         completed, generated = 0, 0
         # initial fill

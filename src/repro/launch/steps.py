@@ -67,11 +67,19 @@ def make_prefill_step(cfg: ModelConfig):
 
 
 def make_serve_step(cfg: ModelConfig):
-    """One decode step: new token in, next token + updated cache out."""
+    """One decode step: new token(s) in, next token + updated cache out.
 
-    def serve_step(params, cache, tokens):
+    ``active`` ((B,) bool, optional) is the ragged continuous-batching
+    mask: only active slots write cache rows and advance their per-slot
+    ``lengths``; ``None`` advances everyone (the uniform-batch case).
+    The same step serves two shapes: S=1 is the decode hot loop, S>1 with
+    a one-hot ``active`` is the masked batched prefill that fills exactly
+    one slot's cache from depth 0 without touching its neighbours.
+    """
+
+    def serve_step(params, cache, tokens, active=None):
         logits, new_cache, _ = transformer.forward(
-            cfg, params, {"tokens": tokens}, cache=cache)
+            cfg, params, {"tokens": tokens}, cache=cache, active=active)
         nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
         return nxt[:, None], new_cache
 

@@ -104,15 +104,22 @@ def attention_param_specs(cfg) -> Params:
 
 def _mask_block(q_pos, k_pos, causal: bool, window: int | None,
                 k_valid=None):
-    """(q_len, k_len) boolean mask from position vectors."""
-    diff = q_pos[:, None] - k_pos[None, :]
+    """Boolean mask from position vectors.
+
+    Every operand may be shared across the batch (1-D: ``q_pos (Sq,)``,
+    ``k_pos (Sk,)``, ``k_valid (Sk,)``) or per-sequence (2-D with a
+    leading batch axis) — ragged continuous batching gives each slot its
+    own positions and valid cache prefix.  Returns ``(Sq, Sk)`` when all
+    operands are shared, ``(B, Sq, Sk)`` otherwise.
+    """
+    diff = q_pos[..., :, None] - k_pos[..., None, :]
     ok = jnp.ones(diff.shape, dtype=bool)
     if causal:
         ok &= diff >= 0
     if window is not None:
         ok &= diff < window
     if k_valid is not None:
-        ok &= k_valid[None, :]
+        ok = ok & k_valid[..., None, :]
     return ok
 
 
@@ -122,6 +129,9 @@ def attention_core(q, k, v, q_pos, k_pos, *, causal, window, scale,
     """Memory-safe multi-head attention with GQA grouping.
 
     q: (B,Sq,Hq,dh), k/v: (B,Sk,Hkv,dh), q_pos: (Sq,), k_pos: (Sk,).
+    ``q_pos``/``k_pos``/``k_valid`` may also carry a leading batch axis
+    ((B, Sq) / (B, Sk)) — the ragged continuous-batching decode path, where
+    every slot sits at its own cache depth and masks its own prefix.
     When ``chunk_q`` divides Sq, query blocks are processed sequentially with
     `lax.scan` so the (Sq, Sk) logits never materialize — the jnp analogue of
     the Pallas flash-attention kernel's VMEM blocking.
@@ -136,7 +146,11 @@ def attention_core(q, k, v, q_pos, k_pos, *, causal, window, scale,
         logits = jnp.einsum("bqhgd,bkhd->bhgqk", q_blk, k,
                             preferred_element_type=jnp.float32) * scale
         mask = _mask_block(qp_blk, k_pos, causal, window, k_valid)
-        logits = jnp.where(mask[None, None, None], logits, -1e30)
+        # (q, k) masks are shared across (b, h, g); (b, q, k) masks are
+        # per-sequence and broadcast over (h, g) only.
+        mask = (mask[None, None, None] if mask.ndim == 2
+                else mask[:, None, None])
+        logits = jnp.where(mask, logits, -1e30)
         probs = jax.nn.softmax(logits, axis=-1)
         return jnp.einsum("bhgqk,bkhd->bqhgd", probs.astype(v.dtype), v,
                           preferred_element_type=jnp.float32)
@@ -144,7 +158,8 @@ def attention_core(q, k, v, q_pos, k_pos, *, causal, window, scale,
     if chunk_q and sq > chunk_q and sq % chunk_q == 0:
         nchunks = sq // chunk_q
         qc = jnp.moveaxis(qr.reshape(b, nchunks, chunk_q, hkv, g, dh), 1, 0)
-        pc = q_pos.reshape(nchunks, chunk_q)
+        pc = (jnp.moveaxis(q_pos.reshape(b, nchunks, chunk_q), 1, 0)
+              if q_pos.ndim == 2 else q_pos.reshape(nchunks, chunk_q))
         fn = blk
         if remat_chunks and not unroll:
             # backward recomputes each chunk's logits/probs instead of
@@ -165,9 +180,10 @@ def attention_apply(
     params: Params,
     x: jax.Array,                       # (B, S, D)
     cfg,
-    positions: jax.Array,               # (S,) int32 absolute positions
+    positions: jax.Array,               # (S,) or (B, S) int32 abs positions
     cache: Params | None = None,        # {"k","v": (B, S_cache, Hkv, dh)}
-    index: jax.Array | None = None,     # decode write position (scalar)
+    lengths: jax.Array | None = None,   # (B,) per-slot valid cache prefix
+    active: jax.Array | None = None,    # (B,) slots that write/advance
     chunk_q: int | None = None,
     prefill: bool = False,              # serving prefill (fwd-only, no grad)
 ) -> tuple[jax.Array, Params | None]:
@@ -186,8 +202,11 @@ def attention_apply(
     if cfg.qk_norm:
         q = rmsnorm(params["q_norm"], q, cfg.norm_eps)
         k = rmsnorm(params["k_norm"], k, cfg.norm_eps)
-    q = apply_rope(q, positions[None], cfg.rope_theta)
-    k = apply_rope(k, positions[None], cfg.rope_theta)
+    # Shared (S,) positions broadcast across the batch; per-slot (B, S)
+    # positions (ragged decode) index each sequence at its own depth.
+    pos_b = positions if positions.ndim == 2 else positions[None]
+    q = apply_rope(q, pos_b, cfg.rope_theta)
+    k = apply_rope(k, pos_b, cfg.rope_theta)
     q = constrain(q, "batch", "seq", "heads", None)
     scale = 1.0 / math.sqrt(cfg.head_dim)
     if chunk_q is None:
@@ -217,21 +236,41 @@ def attention_apply(
                                  remat_chunks=(cfg.remat == "full"))
         new_cache = None
     else:
-        # Decode: write new K/V at `index` (ring buffer for SWA), attend over
-        # the whole (possibly sequence-sharded) cache.
+        # Decode: every slot writes its new K/V at its OWN depth
+        # (`lengths[b]`; ring-buffer modulo for SWA) and attends only over
+        # its own valid cache prefix — ragged continuous batching.  A shared
+        # scalar depth is the degenerate case where `lengths` is uniform.
         ck, cv = cache["k"], cache["v"]
         cache_len = ck.shape[1]
-        write = index % cache_len if cfg.sliding_window else index
-        ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype), (0, write, 0, 0))
-        cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype), (0, write, 0, 0))
+        if lengths is None:
+            lengths = jnp.zeros((b,), jnp.int32)
+        act = (jnp.ones((b,), bool) if active is None
+               else jnp.asarray(active).astype(bool))
+        b_idx = jnp.arange(b, dtype=jnp.int32)[:, None]            # (B, 1)
+        t_abs = lengths[:, None] + jnp.arange(s, dtype=jnp.int32)  # (B, S)
+        t_write = t_abs % cache_len if cfg.sliding_window else t_abs
+        # Inactive slots must not write: aim their rows out of bounds and
+        # let mode="drop" discard them (also guards depth overflow).
+        t_write = jnp.where(act[:, None], t_write, cache_len)
+        ck = ck.at[b_idx, t_write].set(k.astype(ck.dtype), mode="drop")
+        cv = cv.at[b_idx, t_write].set(v.astype(cv.dtype), mode="drop")
         ck = constrain(ck, "batch", "kv_seq", "kv_heads", None)
         cv = constrain(cv, "batch", "kv_seq", "kv_heads", None)
         k_slots = jnp.arange(cache_len, dtype=jnp.int32)
+        # Valid prefix after the write, per slot (inactive: unchanged).
+        new_len = lengths + s * act.astype(jnp.int32)
         if cfg.sliding_window:
-            # Ring buffer: slot holds absolute position idx - ((w - slot) % L)
-            k_pos = index - ((write - k_slots) % cache_len)
+            # Ring buffer, per slot: ring slot j holds absolute position
+            # end - ((end % L - j) % L) where end is the slot's newest
+            # written position.
+            end = new_len - 1                                      # (B,)
+            k_pos = (end[:, None]
+                     - ((end[:, None] % cache_len - k_slots[None, :])
+                        % cache_len))                              # (B, L)
+            k_valid = (k_pos >= 0) & (k_pos < new_len[:, None])
         else:
-            k_pos = k_slots
+            k_pos = k_slots                                        # (L,)
+            k_valid = k_slots[None, :] < new_len[:, None]          # (B, L)
         mode = os.environ.get("REPRO_DECODE_KERNEL", "auto")
         if (s == 1 and cfg.causal and not cfg.sliding_window
                 and mode != "off"
@@ -240,19 +279,19 @@ def attention_apply(
             # Serving decode: the single-token hot loop goes through the
             # registry's fused autotuned decode kernel (plan resolved at
             # trace time against the cache `plan_for_model` pre-warmed;
-            # the valid prefix `index + 1` rides a runtime scalar the
-            # kernel skips on).  The ring-buffer SWA layout and training
-            # stay on the jnp path below.  $REPRO_DECODE_KERNEL: "auto"
-            # (TPU only), "interpret" (force interpret mode — CPU
+            # the per-slot valid prefixes ride the scalar-prefetch vector
+            # the kernel skips on — each slot streams only its own
+            # blocks).  The ring-buffer SWA layout and training stay on
+            # the jnp path below.  $REPRO_DECODE_KERNEL: "auto" (TPU
+            # only), "interpret" (force interpret mode — CPU
             # tests/demos), "off"; resolved at trace time, so changing it
             # after the serve step is jitted requires a retrace (new
             # process / cache clear).
             from repro.kernels.autotune import dispatch
-            out = dispatch("decode", q[:, 0], ck, cv, length=index + 1,
+            out = dispatch("decode", q[:, 0], ck, cv, length=new_len,
                            interpret=(mode == "interpret"))[:, None]
         else:
-            k_valid = (k_pos <= index) & (k_pos >= 0)
-            out = attention_core(q, ck, cv, positions, k_pos,
+            out = attention_core(q, ck, cv, pos_b, k_pos,
                                  causal=cfg.causal,
                                  window=cfg.sliding_window, scale=scale,
                                  k_valid=k_valid)

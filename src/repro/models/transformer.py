@@ -51,9 +51,29 @@ def _layer_init(key, cfg: ModelConfig, l: int, dtype) -> Params:
     return p
 
 
+def _keep_inactive(new_c, old_c, active):
+    """Mask a recurrent per-layer cache update: inactive slots keep their
+    old state.  Only the SSM/RWKV leaves need this — the attention cache
+    is protected at the write itself (inactive slots' scatter rows are
+    dropped), and re-masking its full (B, L, Hkv, dh) buffers would
+    double the decode hot loop's KV-cache traffic for nothing."""
+    if active is None or new_c is None:
+        return new_c
+    return jax.tree.map(
+        lambda n, o: jnp.where(
+            active.reshape((-1,) + (1,) * (n.ndim - 1)), n, o),
+        new_c, old_c)
+
+
 def _layer_apply(p: Params, x, cfg: ModelConfig, l: int, positions,
-                 cache: Params | None, index, prefill: bool = False):
-    """Pre-norm block l.  Returns (x, new_cache, aux)."""
+                 cache: Params | None, lengths, active,
+                 prefill: bool = False):
+    """Pre-norm block l.  Returns (x, new_cache, aux).
+
+    ``lengths`` is the per-slot valid cache prefix ((B,) int32) and
+    ``active`` the per-slot advance mask — the ragged continuous-batching
+    contract threaded from the serve loop; both are None outside decode.
+    """
     aux = jnp.zeros((), jnp.float32)
     h = layers.rmsnorm(p["ln1"], x, cfg.norm_eps)
     if cfg.family == "ssm":
@@ -62,15 +82,18 @@ def _layer_apply(p: Params, x, cfg: ModelConfig, l: int, positions,
         h2 = layers.rmsnorm(p["ln2"], x, cfg.norm_eps)
         h2, new_c = rwkv.rwkv_channel_mix(p["mlp"], h2, cfg, cache)
         x = x + h2
-        new_cache = {**new_t, **new_c} if cache is not None else None
-        return x, new_cache, aux
+        new_cache = ({**new_t, **new_c} if cache is not None else None)
+        return x, _keep_inactive(new_cache, cache, active), aux
 
     if cfg.is_attn_layer(l):
+        # Per-slot write masking happens inside the scatter — no
+        # _keep_inactive pass over the KV buffers.
         h, new_mix_cache = layers.attention_apply(
-            p["mixer"], h, cfg, positions, cache=cache, index=index,
-            prefill=prefill)
+            p["mixer"], h, cfg, positions, cache=cache, lengths=lengths,
+            active=active, prefill=prefill)
     else:
         h, new_mix_cache = ssm.mamba_apply(p["mixer"], h, cfg, cache=cache)
+        new_mix_cache = _keep_inactive(new_mix_cache, cache, active)
     x = x + h
 
     h2 = layers.rmsnorm(p["ln2"], x, cfg.norm_eps)
@@ -167,7 +190,7 @@ def cache_specs(cfg: ModelConfig):
         blocks = _prepend_layer_axis(group)
     else:
         blocks = _prepend_layer_axis(_layer_cache_specs(cfg, 0))
-    return {"blocks": blocks, "index": ()}
+    return {"blocks": blocks, "index": (), "lengths": ("batch",)}
 
 
 # ---------------------------------------------------------------------------
@@ -219,7 +242,23 @@ def cache_init(cfg: ModelConfig, batch: int, cache_len: int,
             _layer_cache_init(cfg, l, batch, cache_len, dtype)
             for l in range(cfg.num_layers)
         ])
-    return {"blocks": blocks, "index": jnp.full((), index, jnp.int32)}
+    return {"blocks": blocks, "index": jnp.full((), index, jnp.int32),
+            "lengths": jnp.full((batch,), index, jnp.int32)}
+
+
+def cache_reset_slot(cache: Params, slot: int) -> Params:
+    """Zero one slot's rows across every per-layer cache leaf (KV rows,
+    SSM conv tails / states, RWKV shifts) and reset its length to 0.
+
+    A recycled continuous-batching slot must start from a state identical
+    to a freshly initialized one: the per-slot length masks already hide
+    the stale prefix from attention, but zeroing is the defense in depth
+    that makes a refilled slot reproduce single-sequence decode bitwise
+    (and resets the recurrent states masking cannot reach).
+    """
+    blocks = jax.tree.map(lambda a: a.at[:, slot].set(0), cache["blocks"])
+    return {"blocks": blocks, "index": cache["index"],
+            "lengths": cache["lengths"].at[slot].set(0)}
 
 
 # ---------------------------------------------------------------------------
@@ -242,19 +281,33 @@ def _embed_inputs(cfg: ModelConfig, params: Params, inputs: dict) -> jax.Array:
 
 def forward(cfg: ModelConfig, params: Params, inputs: dict,
             cache: Params | None = None, compute_dtype=jnp.bfloat16,
-            return_hidden: bool = False, last_only: bool = False):
+            return_hidden: bool = False, last_only: bool = False,
+            active: jax.Array | None = None):
     """Returns (logits-or-hidden, new_cache, aux_loss).
 
     ``return_hidden`` skips the unembedding (the caller fuses it into a
     chunked loss); ``last_only`` unembeds only the final position (prefill).
+    ``active`` ((B,) bool, decode only) masks which slots advance this
+    step: inactive slots neither write cache rows nor move their per-slot
+    ``lengths`` — the ragged continuous-batching contract (a masked
+    batched prefill is ``active`` = one-hot of the refilled slot).
     """
     x = _embed_inputs(cfg, params, inputs).astype(compute_dtype)
     b, s, _ = x.shape
     index = cache["index"] if cache is not None else None
+    lengths = None
     if cache is not None:
-        positions = index + jnp.arange(s, dtype=jnp.int32)
+        lengths = cache.get("lengths")
+        if lengths is None:          # legacy cache without the vector
+            lengths = jnp.full((b,), index, jnp.int32)
+        # Per-slot absolute positions: each sequence continues from its
+        # own depth (uniform lengths reproduce the old shared `index`).
+        positions = lengths[:, None] + jnp.arange(s, dtype=jnp.int32)[None]
     else:
         positions = jnp.arange(s, dtype=jnp.int32)
+    act = None
+    if cache is not None and active is not None:
+        act = jnp.asarray(active).astype(bool)
 
     blocks = params["blocks"]
     block_caches = cache["blocks"] if cache is not None else None
@@ -280,7 +333,7 @@ def forward(cfg: ModelConfig, params: Params, inputs: dict,
             for i in range(period):
                 lc = gc[str(i)] if decode else None
                 xx, nc, aux = lapply(gp[str(i)], xx, cfg, i, positions,
-                                     lc, index)
+                                     lc, lengths, act)
                 aux_tot += aux
                 if decode:
                     new_gc[str(i)] = nc
@@ -288,7 +341,8 @@ def forward(cfg: ModelConfig, params: Params, inputs: dict,
     else:
 
         def body(xx, gp, gc):
-            xx, nc, aux = apply_fn(gp, xx, cfg, 0, positions, gc, index)
+            xx, nc, aux = apply_fn(gp, xx, cfg, 0, positions, gc, lengths,
+                                   act)
             return xx, (nc if decode else 0), aux
 
     if cfg.remat == "full":
@@ -332,7 +386,9 @@ def forward(cfg: ModelConfig, params: Params, inputs: dict,
     x = layers.rmsnorm(params["final_norm"], x, cfg.norm_eps)
     new_cache = None
     if cache is not None:
-        new_cache = {"blocks": new_caches, "index": index + s}
+        adv = s if act is None else s * act.astype(jnp.int32)
+        new_cache = {"blocks": new_caches, "index": index + s,
+                     "lengths": lengths + adv}
     if return_hidden:
         return x, new_cache, aux
     head = params["embed"] if cfg.tie_embeddings else params["head"]

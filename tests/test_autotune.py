@@ -466,6 +466,70 @@ def test_decode_model_charges_ragged_tail_overfetch():
     assert coarse["waste"] > 1.0
 
 
+def test_decode_model_lengths_active_prefix_accounting():
+    """The ragged length distribution is charged per-row block-rounded
+    active prefixes, not the batch max — and degenerates to the scalar
+    path when every row sits at the full depth."""
+    from repro.core import cost_model
+    bmax = cost_model.decode_time_model(8, 4, 1024, 64, 128)
+    ragged = cost_model.decode_time_model(8, 4, 1024, 64, 128,
+                                          lengths=[128, 256, 512, 1024])
+    assert ragged["time_s"] < bmax["time_s"]
+    # rep=2 rows per length; fetched = mean per-row block-rounded prefix
+    assert ragged["fetched_k"] == pytest.approx((128 + 256 + 512 + 1024) / 4)
+    full = cost_model.decode_time_model(8, 4, 1024, 64, 128,
+                                        lengths=[1024] * 4)
+    assert full["time_s"] == pytest.approx(bmax["time_s"])
+    assert full["fetched_k"] == bmax["fetched_k"]
+    # lengths are clamped to the allocated depth; an idle slot still pays
+    # one block (the kernel always executes block 0)
+    clamped = cost_model.decode_time_model(8, 4, 1024, 64, 128,
+                                           lengths=[0, 9999, 64, 64])
+    assert clamped["fetched_k"] == pytest.approx((128 + 1024 + 128 + 128) / 4)
+    with pytest.raises(ValueError):
+        cost_model.decode_time_model(8, 4, 1024, 64, 128, lengths=[1, 2, 3])
+
+
+def test_rank_decode_blocks_prefers_finer_blocks_for_ragged_lengths():
+    """A ragged distribution shifts the ranking toward finer block_k (the
+    shallow rows skip more), while batch-max keeps the coarse tie-break."""
+    ragged = dse.rank_decode_blocks(8, 2, 512, 64,
+                                    lengths=[32, 64, 128, 512])
+    bmax = dse.rank_decode_blocks(8, 2, 512, 64)
+    assert ragged[0].detail["block_k"] < bmax[0].detail["block_k"]
+
+
+def test_plan_for_model_lengths_key_and_runtime_pin(cache):
+    """A slot-length distribution tunes a lengths-keyed decode plan AND
+    pins its knobs under the plain runtime dispatch key (re-scored at
+    batch-max) so the jitted serve step runs the workload-aware block."""
+    cfg = _serve_cfg()
+    plans = autotune.plan_for_model(cfg, 4, cache_len=512,
+                                    slot_lengths=[32, 64, 128, 512],
+                                    cache=cache)
+    dec = next(p for p in plans if p.op == "attn_decode")
+    assert dec.plan.problem["lengths"] == (32, 64, 128, 512)
+    assert ":l32-64-128-512:" in dec.plan.key
+    run_problem = {k: v for k, v in dec.plan.problem.items()
+                   if k != "lengths"}
+    run_key = autotune.cache_key(
+        autotune.registry.get("decode"), run_problem, "bfloat16",
+        autotune._backend(), None)
+    entry = cache._load()["entries"][run_key]
+    assert entry["knobs"] == dec.plan.knobs
+    assert entry["detail"]["pinned_from"] == dec.plan.key
+    # the pinned entry is re-scored at the batch-max problem it lives under
+    spec = autotune.registry.get("decode")
+    assert entry["model_time_s"] == pytest.approx(
+        spec.cost_fn(run_problem, dec.plan.knobs)["time_s"])
+    # a later measured winner must not be clobbered by re-pinning
+    entry2 = dict(entry, source="measured", measured_us=1.0)
+    cache.put(run_key, entry2)
+    autotune.plan_for_model(cfg, 4, cache_len=512,
+                            slot_lengths=[32, 64, 128, 512], cache=cache)
+    assert cache._load()["entries"][run_key]["source"] == "measured"
+
+
 def test_decode_cache_miss_then_hit_and_upgrade(cache):
     p1 = autotune.tune_decode(4, 2, 256, 32, cache=cache, measure_k=0)
     assert p1.source == "model" and p1.measured_us is None

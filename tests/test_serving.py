@@ -1,0 +1,211 @@
+"""Ragged continuous batching end-to-end: per-slot decode lengths from the
+serve loop through the transformer cache into the (fused) decode kernel.
+
+The load-bearing invariant: a ragged batch — mixed prompt/gen lengths plus
+a mid-run slot refill — must produce tokens identical to serving each
+sequence alone, because every slot attends only over its own valid cache
+prefix.  The masked batched prefill must write ONLY the target slot's
+cache rows (the old slot-local loop stepped the shared cache with zero
+tokens for every other slot, polluting their KV and advancing their
+depths), and a recycled slot must reproduce single-sequence decode
+exactly.  The cost-model side: the active-prefix length accounting must
+price a ragged batch strictly below the batch-max broadcast.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import autotune
+from repro.launch.serve import Server
+from repro.models import transformer
+from repro.models.config import ModelConfig
+
+KEY = jax.random.PRNGKey(11)
+
+
+def _cfg(**kw):
+    base = dict(name="tiny-serve", family="dense", num_layers=2, d_model=32,
+                d_ff=64, vocab_size=101, num_heads=4, num_kv_heads=2)
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+def _requests(cfg, spec):
+    """spec: list of (prompt_len, gen_len) -> [(rid, prompt, gen)]."""
+    out = []
+    for rid, (plen, gen) in enumerate(spec):
+        prompt = np.asarray(
+            jax.random.randint(jax.random.PRNGKey(100 + rid), (plen,), 0,
+                               cfg.vocab_size), np.int32)
+        out.append((rid, prompt, gen))
+    return out
+
+
+def _serve_all(cfg, batch, requests, max_len):
+    """Run the continuous-batching loop from launch.serve's main(); returns
+    {rid: [generated token ids]} (the prefill's next-token prediction plus
+    every decode-step token)."""
+    server = Server(cfg, batch, max_len, autotune_kernels=False)
+    queue = list(requests)
+    tokens = {rid: [] for rid, _, _ in requests}
+    slot_rid = {}
+    for slot in range(min(batch, len(queue))):
+        rid, prompt, gen = queue.pop(0)
+        server.prefill(slot, rid, prompt, gen)
+        slot_rid[slot] = rid
+        tokens[rid].append(int(server.last_tok[slot, 0]))
+    completed, guard = 0, 0
+    while completed < len(requests):
+        nxt, done = server.decode_step()
+        for slot, rid in slot_rid.items():
+            if server.slot_req[slot] == rid:
+                tokens[rid].append(int(nxt[slot, 0]))
+        for slot in done:
+            completed += 1
+            server.slot_req[slot] = -1
+            if queue:
+                rid, prompt, gen = queue.pop(0)
+                server.prefill(slot, rid, prompt, gen)
+                slot_rid[slot] = rid
+                tokens[rid].append(int(server.last_tok[slot, 0]))
+        guard += 1
+        assert guard < 200, "serve loop failed to drain the queue"
+    return tokens
+
+
+def test_ragged_batch_with_refill_matches_single_sequence():
+    """The acceptance invariant: mixed prompt/gen lengths + a mid-run slot
+    refill, batched, reproduce each sequence served alone — token for
+    token."""
+    cfg = _cfg()
+    spec = [(5, 7), (9, 4), (3, 6)]      # 3 requests, 2 slots -> refill
+    reqs = _requests(cfg, spec)
+    max_len = max(p + g for p, g in spec) + 4
+    batched = _serve_all(cfg, 2, reqs, max_len)
+    for rid, prompt, gen in reqs:
+        solo = _serve_all(cfg, 1, [(rid, prompt, gen)], max_len)
+        assert batched[rid] == solo[rid], (
+            f"request {rid}: ragged batch diverged from solo decode")
+        # prefill next-token + gen decode steps, minus the final stop step
+        assert len(batched[rid]) == gen + 1
+
+
+def test_refilled_slot_reproduces_single_sequence_bitwise():
+    """Regression for the recycled-slot bug: `prefill` must clear the
+    slot's stale KV rows (and length), so the SECOND request through a
+    slot decodes exactly like a fresh single-sequence server."""
+    cfg = _cfg()
+    reqs = _requests(cfg, [(6, 5), (4, 8)])
+    max_len = 16
+    batched = _serve_all(cfg, 1, reqs, max_len)   # one slot, serial refill
+    for rid, prompt, gen in reqs:
+        solo = _serve_all(cfg, 1, [(rid, prompt, gen)], max_len)
+        assert batched[rid] == solo[rid]
+
+
+def test_masked_prefill_leaves_other_slots_untouched():
+    """The masked batched prefill writes ONLY the target slot's cache rows
+    and lengths — the other slots' KV entries and depths are bitwise
+    unchanged (the old loop advanced everyone)."""
+    cfg = _cfg()
+    server = Server(cfg, 2, 16, autotune_kernels=False)
+    (rid0, p0, g0), (rid1, p1, g1) = _requests(cfg, [(5, 4), (7, 4)])
+    server.prefill(0, rid0, p0, g0)
+    before = jax.tree.map(lambda a: np.asarray(a), server.cache)
+    server.prefill(1, rid1, p1, g1)
+    after = jax.tree.map(lambda a: np.asarray(a), server.cache)
+    assert int(after["lengths"][0]) == int(before["lengths"][0]) == len(p0)
+    assert int(after["lengths"][1]) == len(p1)
+    for b, a in zip(jax.tree.leaves(before["blocks"]),
+                    jax.tree.leaves(after["blocks"])):
+        np.testing.assert_array_equal(b[:, 0], a[:, 0])
+
+
+def test_ragged_batch_through_fused_kernel_matches_solo(monkeypatch,
+                                                        tmp_path):
+    """The same ragged invariant with the decode hot loop routed through
+    the fused decode-attention kernel (interpret mode): the per-slot
+    lengths ride the scalar-prefetch vector end to end."""
+    monkeypatch.setenv("REPRO_DECODE_KERNEL", "interpret")
+    monkeypatch.setenv("REPRO_AUTOTUNE_CACHE",
+                       str(tmp_path / "autotune.json"))
+    cfg = _cfg(num_layers=2)
+    spec = [(6, 4), (3, 5), (4, 3)]
+    reqs = _requests(cfg, spec)
+    max_len = 12
+    batched = _serve_all(cfg, 2, reqs, max_len)
+    for rid, prompt, gen in reqs:
+        solo = _serve_all(cfg, 1, [(rid, prompt, gen)], max_len)
+        assert batched[rid] == solo[rid]
+
+
+def test_cache_reset_slot_matches_fresh_init():
+    """A reset slot is indistinguishable from a freshly initialized one."""
+    cfg = _cfg()
+    cache = transformer.cache_init(cfg, 2, 8, dtype=jnp.float32)
+    params = transformer.init(cfg, KEY)
+    toks = jax.random.randint(KEY, (2, 3), 0, cfg.vocab_size)
+    _, cache, _ = transformer.forward(cfg, params, {"tokens": toks},
+                                      cache=cache,
+                                      compute_dtype=jnp.float32)
+    reset = transformer.cache_reset_slot(cache, 1)
+    fresh = transformer.cache_init(cfg, 2, 8, dtype=jnp.float32)
+    assert int(reset["lengths"][1]) == 0
+    assert int(reset["lengths"][0]) == 3        # slot 0 untouched
+    for r, f in zip(jax.tree.leaves(reset["blocks"]),
+                    jax.tree.leaves(fresh["blocks"])):
+        np.testing.assert_array_equal(np.asarray(r)[:, 1],
+                                      np.asarray(f)[:, 1])
+
+
+def test_ragged_sliding_window_batch_matches_solo():
+    """Per-slot ring buffers: ragged decode with a sliding-window config
+    (each slot's ring wraps at its own depth) still matches solo."""
+    cfg = _cfg(sliding_window=5)
+    spec = [(7, 5), (3, 4)]
+    reqs = _requests(cfg, spec)
+    batched = _serve_all(cfg, 2, reqs, 16)
+    for rid, prompt, gen in reqs:
+        solo = _serve_all(cfg, 1, [(rid, prompt, gen)], 16)
+        assert batched[rid] == solo[rid]
+
+
+def test_predicted_step_time_ragged_below_batch_max(tmp_path):
+    """The active-prefix cost accounting: a ragged length distribution
+    must price the decode step strictly below the batch-max broadcast."""
+    cache = autotune.TuneCache(tmp_path / "cache.json")
+    cfg = _cfg(num_layers=2, d_model=64, d_ff=128, vocab_size=256)
+    ragged = autotune.predict_decode_step_us(
+        cfg, 4, cache_len=512, lengths=[32, 64, 128, 512], cache=cache)
+    batch_max = autotune.predict_decode_step_us(
+        cfg, 4, cache_len=512, cache=cache)
+    assert ragged < batch_max
+    # the sweep records the quantile lengths it priced each candidate at
+    d = autotune.select_serving_batch(
+        cfg, cache_len=512, candidates=(1, 2, 4),
+        slot_lengths=[32, 64, 128, 512], cache=cache)
+    assert d["length_model"] == "active-prefix"
+    assert all("slot_lengths" in r and len(r["slot_lengths"]) == r["batch"]
+               for r in d["sweep"])
+    d_max = autotune.select_serving_batch(
+        cfg, cache_len=512, candidates=(1, 2, 4), cache=cache)
+    assert d_max["length_model"] == "batch-max"
+    by_batch = {r["batch"]: r["step_us"] for r in d["sweep"]}
+    by_batch_max = {r["batch"]: r["step_us"] for r in d_max["sweep"]}
+    assert all(by_batch[b] < by_batch_max[b] for b in (2, 4))
+
+
+def test_serve_step_active_none_advances_everyone():
+    """`active=None` stays the uniform-batch degenerate case: every slot
+    writes and advances (the pre-ragged contract, used by dryrun)."""
+    from repro.launch import steps
+    cfg = _cfg()
+    params = transformer.init(cfg, KEY)
+    serve = jax.jit(steps.make_serve_step(cfg))
+    cache = transformer.cache_init(cfg, 2, 8, dtype=jnp.float32)
+    tok = jnp.ones((2, 1), jnp.int32)
+    tok, cache = serve(params, cache, tok)
+    assert list(np.asarray(cache["lengths"])) == [1, 1]
+    assert int(cache["index"]) == 1

@@ -1,0 +1,179 @@
+"""Negative coverage for the CI gate scripts (tools/check_bench.py,
+tools/check_registry.py, tools/check_serve.py): a missing row, a schema
+regression, or a below-floor speedup must each exit non-zero — CI only
+ever ran their happy paths, so a gate that silently passed everything
+would rot unnoticed."""
+
+import json
+import pathlib
+import sys
+
+import pytest
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(REPO / "tools"))
+
+import check_bench  # noqa: E402
+import check_registry  # noqa: E402
+import check_serve  # noqa: E402
+
+
+@pytest.fixture
+def good_report():
+    """A minimal report that passes check_bench (schema + every required
+    row with every required field, floors satisfied)."""
+    report = {"schema": check_bench.SCHEMA}
+    for key, fields in check_bench.REQUIRED_LIST_KEYS.items():
+        report[key] = [{f: 1 for f in fields}]
+    for key, fields in check_bench.REQUIRED_DICT_KEYS.items():
+        report[key] = {f: 1 for f in fields}
+    report["attention_causal_skip"]["kstep_speedup"] = 2.0
+    report["decode_ragged"]["fetched_speedup"] = 1.6
+    return report
+
+
+def _write(tmp_path, report):
+    p = tmp_path / "BENCH.json"
+    p.write_text(json.dumps(report))
+    return p
+
+
+# ---------------------------------------------------------------------------
+# check_bench
+# ---------------------------------------------------------------------------
+
+def test_check_bench_happy_path(tmp_path, good_report):
+    path = _write(tmp_path, good_report)
+    assert check_bench.check(path) == []
+    assert check_bench.main(["check_bench.py", str(path)]) == 0
+
+
+def test_check_bench_repo_report_is_clean():
+    """The committed BENCH_kernels.json must satisfy the current gate."""
+    assert check_bench.check(REPO / "BENCH_kernels.json") == []
+
+
+@pytest.mark.parametrize("missing", ["decode_ragged", "attention_decode",
+                                     "matmul_tuned_vs_fixed"])
+def test_check_bench_missing_row_fails(tmp_path, good_report, missing):
+    del good_report[missing]
+    path = _write(tmp_path, good_report)
+    problems = check_bench.check(path)
+    assert any(missing in p for p in problems)
+    assert check_bench.main(["check_bench.py", str(path)]) == 1
+
+
+def test_check_bench_schema_regression_fails(tmp_path, good_report):
+    good_report["schema"] = check_bench.SCHEMA - 1
+    path = _write(tmp_path, good_report)
+    problems = check_bench.check(path)
+    assert any("schema" in p for p in problems)
+    assert check_bench.main(["check_bench.py", str(path)]) == 1
+
+
+def test_check_bench_missing_field_fails(tmp_path, good_report):
+    del good_report["decode_ragged"]["fetched_speedup"]
+    path = _write(tmp_path, good_report)
+    assert any("decode_ragged" in p for p in check_bench.check(path))
+
+
+def test_check_bench_below_floor_causal_fails(tmp_path, good_report):
+    good_report["attention_causal_skip"]["kstep_speedup"] = 1.2
+    path = _write(tmp_path, good_report)
+    problems = check_bench.check(path)
+    assert any("block skipping regressed" in p for p in problems)
+    assert check_bench.main(["check_bench.py", str(path)]) == 1
+
+
+def test_check_bench_below_floor_ragged_fails(tmp_path, good_report):
+    """The new gate: a ragged batch that no longer beats the shared-scalar
+    broadcast must fail CI."""
+    good_report["decode_ragged"]["fetched_speedup"] = 1.0
+    path = _write(tmp_path, good_report)
+    problems = check_bench.check(path)
+    assert any("shared-scalar broadcast" in p for p in problems)
+    assert check_bench.main(["check_bench.py", str(path)]) == 1
+
+
+def test_check_bench_unreadable_report_fails(tmp_path):
+    path = tmp_path / "nope.json"
+    assert check_bench.check(path) != []
+    path.write_text("{not json")
+    assert check_bench.main(["check_bench.py", str(path)]) == 1
+
+
+# ---------------------------------------------------------------------------
+# check_registry
+# ---------------------------------------------------------------------------
+
+def test_check_registry_missing_family_row_fails(tmp_path):
+    """Strip one registered family's bench row from an otherwise-good
+    report: the registry gate must name the family and exit non-zero."""
+    report = json.loads((REPO / "BENCH_kernels.json").read_text())
+    del report["attention_decode"]
+    path = tmp_path / "BENCH.json"
+    path.write_text(json.dumps(report))
+    problems = check_registry.check(path)
+    assert any("attention_decode" in p for p in problems)
+    assert check_registry.main(["check_registry.py", str(path)]) == 1
+
+
+def test_check_registry_empty_row_fails(tmp_path):
+    report = json.loads((REPO / "BENCH_kernels.json").read_text())
+    report["matmul_tuned_vs_fixed"] = []
+    path = tmp_path / "BENCH.json"
+    path.write_text(json.dumps(report))
+    assert any("matmul" in p for p in check_registry.check(path))
+
+
+def test_check_registry_unreadable_report_fails(tmp_path):
+    path = tmp_path / "nope.json"
+    problems = check_registry.check(path)
+    assert any("unreadable" in p for p in problems)
+    assert check_registry.main(["check_registry.py", str(path)]) == 1
+
+
+# ---------------------------------------------------------------------------
+# check_serve
+# ---------------------------------------------------------------------------
+
+GOOD_LOG = "\n".join([
+    json.dumps({"serving_plan": {
+        "batch": 4, "source": "autotune",
+        "predicted_tok_per_s": 1234.5, "sweep": []}}),
+    "some non-json noise",
+    json.dumps({"arch": "x", "requests": 6, "batch": 4,
+                "tokens_generated": 72, "tok_per_s": 10.0}),
+])
+
+
+def test_check_serve_happy_path(tmp_path):
+    log = tmp_path / "serve.log"
+    log.write_text(GOOD_LOG)
+    assert check_serve.check(GOOD_LOG) == []
+    assert check_serve.main(["check_serve.py", str(log),
+                             "--requests", "6", "--min-tokens", "72"]) == 0
+
+
+def test_check_serve_missing_plan_fails(tmp_path):
+    text = json.dumps({"arch": "x", "requests": 6, "tokens_generated": 72})
+    assert any("serving_plan" in p for p in check_serve.check(text))
+
+
+def test_check_serve_nonpositive_throughput_fails():
+    text = GOOD_LOG.replace("1234.5", "0")
+    assert any("predicted_tok_per_s" in p for p in check_serve.check(text))
+
+
+def test_check_serve_undrained_queue_fails(tmp_path):
+    log = tmp_path / "serve.log"
+    log.write_text(GOOD_LOG)
+    assert check_serve.main(["check_serve.py", str(log),
+                             "--requests", "7"]) == 1
+    assert check_serve.main(["check_serve.py", str(log),
+                             "--min-tokens", "100"]) == 1
+
+
+def test_check_serve_unreadable_log_fails(tmp_path):
+    assert check_serve.main(["check_serve.py",
+                             str(tmp_path / "nope.log")]) == 1

@@ -14,6 +14,11 @@ Validates a BENCH_kernels.json produced by `benchmarks/run.py` (typically
    than the dense grid (the deterministic form of the ~2x causal-prefill
    speedup; wall-clock is recorded alongside but interpret-mode grid
    overhead makes it advisory off-TPU).
+4. **The ragged-decode row exists and holds the continuous-batching
+   claim**: per-slot lengths must stream >= 1.3x fewer K/V blocks through
+   the fused decode kernel than the shared-scalar (batch-max) broadcast
+   at the staggered steady-state length mix (deterministic block
+   counting; wall-clock advisory off-TPU, as above).
 
 Usage: python tools/check_bench.py [BENCH_kernels.json]
 Exit code 0 = clean; 1 = problems (listed one per line).
@@ -39,8 +44,11 @@ REQUIRED_DICT_KEYS = {
                               "kstep_speedup", "wall_speedup", "block"),
     "attention_decode": ("tuned_block_k", "tuned_us", "fixed_us",
                          "speedup_vs_fixed", "model_time_us"),
+    "decode_ragged": ("lengths", "block_k", "fetched_speedup",
+                      "wall_speedup", "ragged_us", "broadcast_us"),
 }
 MIN_CAUSAL_KSTEP_SPEEDUP = 1.5
+MIN_RAGGED_FETCH_SPEEDUP = 1.3
 
 
 def check(path: pathlib.Path) -> list[str]:
@@ -79,6 +87,16 @@ def check(path: pathlib.Path) -> list[str]:
                 f"attention_causal_skip: kstep_speedup "
                 f"{skip['kstep_speedup']:.3f} < {MIN_CAUSAL_KSTEP_SPEEDUP} "
                 f"— block skipping regressed")
+
+    ragged = report.get("decode_ragged")
+    if isinstance(ragged, dict) and "fetched_speedup" in ragged:
+        if ragged["fetched_speedup"] < MIN_RAGGED_FETCH_SPEEDUP:
+            problems.append(
+                f"decode_ragged: fetched_speedup "
+                f"{ragged['fetched_speedup']:.3f} < "
+                f"{MIN_RAGGED_FETCH_SPEEDUP} — per-slot length skipping "
+                f"regressed (ragged batch must beat the shared-scalar "
+                f"broadcast)")
     return problems
 
 
@@ -89,7 +107,8 @@ def main(argv: list[str]) -> int:
         print(p)
     if not problems:
         print(f"ok: {path} (schema {SCHEMA}, causal kstep_speedup "
-              f">= {MIN_CAUSAL_KSTEP_SPEEDUP})")
+              f">= {MIN_CAUSAL_KSTEP_SPEEDUP}, ragged fetched_speedup "
+              f">= {MIN_RAGGED_FETCH_SPEEDUP})")
     return 1 if problems else 0
 
 

@@ -1,0 +1,107 @@
+#!/usr/bin/env python
+"""Serving-smoke log checker, run by the CI serve-smoke job.
+
+Validates the stdout of `python -m repro.launch.serve` (typically the
+`--smoke` run):
+
+1. **The `serving_plan` line parses** as JSON and reports a positive
+   predicted decode throughput with a batch >= 1 — the autotuner's batch
+   sweep actually produced a decision, not a crash or a degenerate plan.
+2. **The final summary line parses** and shows every queued request
+   completed with a positive generated-token count — the ragged
+   continuous-batching loop drained the queue.
+
+Optional flags pin the expected workload: ``--requests N`` asserts the
+summary served exactly N requests, ``--min-tokens T`` floors
+``tokens_generated``.
+
+Usage: python tools/check_serve.py serve.log [--requests N]
+       [--min-tokens T]
+Exit code 0 = clean; 1 = problems (listed one per line).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+
+
+def _json_lines(text: str) -> list[dict]:
+    out = []
+    for line in text.splitlines():
+        line = line.strip()
+        if not line.startswith("{"):
+            continue
+        try:
+            row = json.loads(line)
+        except ValueError:
+            continue
+        if isinstance(row, dict):
+            out.append(row)
+    return out
+
+
+def check(text: str, requests: int | None = None,
+          min_tokens: int = 1) -> list[str]:
+    problems: list[str] = []
+    rows = _json_lines(text)
+
+    plans = [r["serving_plan"] for r in rows if "serving_plan" in r]
+    if not plans:
+        problems.append("no parseable {\"serving_plan\": ...} JSON line")
+    else:
+        plan = plans[-1]
+        if not isinstance(plan, dict) or plan.get("batch", 0) < 1:
+            problems.append(f"serving_plan: batch must be >= 1, got "
+                            f"{plan.get('batch') if isinstance(plan, dict) else plan!r}")
+        if isinstance(plan, dict) and plan.get("source") == "autotune":
+            tok = plan.get("predicted_tok_per_s", 0)
+            if not (isinstance(tok, (int, float)) and tok > 0):
+                problems.append(
+                    f"serving_plan: predicted_tok_per_s must be positive, "
+                    f"got {tok!r}")
+
+    summaries = [r for r in rows if "tokens_generated" in r]
+    if not summaries:
+        problems.append("no parseable serve summary JSON line "
+                        "(tokens_generated)")
+    else:
+        s = summaries[-1]
+        if s.get("tokens_generated", 0) < min_tokens:
+            problems.append(f"summary: tokens_generated "
+                            f"{s.get('tokens_generated')} < {min_tokens}")
+        if requests is not None and s.get("requests") != requests:
+            problems.append(f"summary: served {s.get('requests')} requests, "
+                            f"expected {requests}")
+        elif requests is None and s.get("requests", 0) < 1:
+            problems.append("summary: no requests completed")
+    return problems
+
+
+def main(argv: list[str]) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("log", type=pathlib.Path,
+                    help="captured stdout of repro.launch.serve")
+    ap.add_argument("--requests", type=int, default=None)
+    ap.add_argument("--min-tokens", type=int, default=1)
+    args = ap.parse_args(argv[1:])
+
+    try:
+        text = args.log.read_text()
+    except OSError as e:
+        print(f"{args.log}: unreadable ({e!r})")
+        return 1
+    problems = check(text, requests=args.requests,
+                     min_tokens=args.min_tokens)
+    for p in problems:
+        print(p)
+    if not problems:
+        print(f"ok: {args.log} (serving_plan parsed, positive predicted "
+              f"throughput, queue drained)")
+    return 1 if problems else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv))
