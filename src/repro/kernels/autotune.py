@@ -30,6 +30,7 @@ import json
 import os
 import pathlib
 import time
+import warnings
 from typing import Callable, Sequence
 
 import jax
@@ -110,10 +111,20 @@ class TuneCache:
 
     def _load(self) -> dict:
         if self._data is None:
+            raw = None
             try:
-                raw = json.loads(self.path.read_text())
-            except (OSError, ValueError):
-                raw = None
+                text = self.path.read_text()
+            except OSError:
+                text = None          # no file yet: a fresh cache, silently
+            if text is not None:
+                try:
+                    raw = json.loads(text)
+                except ValueError:
+                    # Corrupt JSON (truncated write, disk fault, stray
+                    # edit): starting a fresh cache silently would destroy
+                    # the evidence AND any measured entries a human might
+                    # recover.  Quarantine the file instead and warn.
+                    self._quarantine_corrupt()
             if (isinstance(raw, dict) and raw.get("version") == 2
                     and isinstance(raw.get("entries"), dict)):
                 # v2 -> v3: same winners, new entry shape.  Measured TPU
@@ -131,6 +142,17 @@ class TuneCache:
                 raw = {"version": ENGINE_VERSION, "entries": {}}
             self._data = raw
         return self._data
+
+    def _quarantine_corrupt(self) -> None:
+        corrupt = self.path.with_name(self.path.name + ".corrupt")
+        try:
+            self.path.replace(corrupt)
+        except OSError:
+            return               # unrenamable (e.g. read-only fs): move on
+        warnings.warn(
+            f"autotune cache {self.path} held corrupt JSON; quarantined it "
+            f"to {corrupt} and starting a fresh cache", RuntimeWarning,
+            stacklevel=3)
 
     def get(self, key: str) -> dict | None:
         entry = self._load()["entries"].get(key)
@@ -226,6 +248,11 @@ def tune(
                        or spec.measure_elems(problem) <= max_measure_elems))
 
     hit = cache.get(key)
+    if hit is not None and hit.get("poisoned"):
+        # A kernel launch with this winner failed at dispatch
+        # (`mark_plan_poisoned`): never serve it again — re-run the DSE,
+        # and the fresh put below replaces the quarantined entry.
+        hit = None
     # An analytic-only entry (e.g. written by serve startup with
     # measure_k=0) is upgraded, not returned, once a measuring caller
     # shows up — otherwise the measure step would be skipped forever.
@@ -273,6 +300,28 @@ def tune(
                 chosen.score, measured_us, detail)
 
 
+# Chaos-injection hook consulted by `dispatch` just before a kernel launch
+# (`runtime.faults.FaultInjector.dispatch_hook` via `install_dispatch_hook`).
+# None in production: the hot path pays one None-check.
+_dispatch_fault_hook: Callable[[str], None] | None = None
+
+
+def install_dispatch_hook(hook: Callable[[str], None] | None) -> None:
+    """Install (or clear, with None) the kernel-dispatch fault hook."""
+    global _dispatch_fault_hook
+    _dispatch_fault_hook = hook
+
+
+def mark_plan_poisoned(key: str, cache: TuneCache | None = None) -> None:
+    """Quarantine a cached winner whose kernel launch failed: the entry is
+    kept (forensics) but flagged, so the next `tune` of its problem re-runs
+    the DSE instead of serving the known-bad knobs."""
+    cache = cache or get_cache()
+    entry = dict(cache._load()["entries"].get(key) or {})
+    entry["poisoned"] = True
+    cache.put(key, entry)
+
+
 def dispatch(family: str, *args, cache: TuneCache | None = None,
              interpret: bool = False, use_kernel: bool | None = None,
              measure_k: int | None = None, **kwargs):
@@ -285,6 +334,13 @@ def dispatch(family: str, *args, cache: TuneCache | None = None,
     dispatched inside a jit trace, where wall-clocking is impossible;
     measured winners then come from offline callers through the shared
     cache).
+
+    Graceful degradation: a kernel launch that raises (real Pallas
+    failure, or the chaos hook) falls back one-shot to the family's
+    pure-jnp reference path — numerically equivalent, just slower — and
+    the plan is marked poisoned in the cache so the next tune re-runs the
+    DSE instead of re-serving the knobs that just failed.  A serving
+    request must complete slowly, not die on a kernel.
     """
     spec = registry.get(family)
     if use_kernel is None:
@@ -296,7 +352,17 @@ def dispatch(family: str, *args, cache: TuneCache | None = None,
                 measure_k=spec.default_measure_k
                 if measure_k is None else measure_k,
                 cache=cache, interpret=interpret)
-    return spec.run_fn(plan, *args, interpret=interpret, **kwargs)
+    try:
+        if _dispatch_fault_hook is not None:
+            _dispatch_fault_hook(family)
+        return spec.run_fn(plan, *args, interpret=interpret, **kwargs)
+    except Exception as e:
+        mark_plan_poisoned(plan.key, cache=cache)
+        warnings.warn(
+            f"kernel dispatch for family '{family}' failed ({e!r}); "
+            f"falling back to the jnp reference path and poisoning plan "
+            f"{plan.key} for re-tune", RuntimeWarning, stacklevel=2)
+        return spec.reference_fn(*args, **kwargs)
 
 
 # ---------------------------------------------------------------------------

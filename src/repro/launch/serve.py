@@ -1,22 +1,40 @@
-"""Batched serving driver: ragged continuous batching end to end.
+"""Fault-tolerant batched serving driver: ragged continuous batching with a
+request lifecycle, graceful degradation, and a chaos mode.
 
-Requests queue up; the server packs up to ``--batch`` sequences, prefills
-each arriving request with a *masked batched prefill* (only the target
-slot's cache rows are written, from depth 0), then decodes with per-slot
-cache depths — every slot attends only over its own valid prefix, carried
-as the cache's ``lengths: (B,)`` vector all the way into the fused decode
-kernel's scalar-prefetch skip.  Finished slots are zeroed and refilled
-from the queue (continuous batching).  ``--batch 0`` (the default) asks
-the autotuner for the batch: `autotune.select_serving_batch` sweeps
-candidate batch sizes against the cached kernel plans' predicted step
-time — priced at quantiles of the workload's slot-depth distribution, the
-active-prefix accounting, not the batch max — and picks the batch
-maximizing predicted decode throughput under ``--latency-budget-ms`` —
-the DSE loop driving a serving decision instead of a kernel tile.  Runs
-on CPU with smoke configs:
+Requests enter a bounded admission queue (`runtime.lifecycle`) and move
+through an enforced state machine (QUEUED → PREFILLING → DECODING →
+{COMPLETED, TIMED_OUT, EVICTED, FAILED, REJECTED}); the server packs up to
+``--batch`` sequences, prefills each arriving request with a *masked
+batched prefill* (only the target slot's cache rows are written, from
+depth 0), then decodes with per-slot cache depths — every slot attends
+only over its own valid prefix, carried as the cache's ``lengths: (B,)``
+vector all the way into the fused decode kernel's scalar-prefetch skip.
+Finished slots are zeroed and refilled from the queue (continuous
+batching); ``--batch 0`` (the default) asks the autotuner for the batch
+(`autotune.select_serving_batch`, priced at quantiles of the workload's
+slot-depth distribution under ``--latency-budget-ms``).
+
+The robustness layer on top (see docs/ROBUSTNESS.md):
+
+* a per-slot NaN/Inf logits guard — a poisoned slot is quarantined alone
+  (reset + requeued with backoff) while its neighbours keep decoding
+  bitwise-identically;
+* kernel-dispatch failure falls back one-shot to the jnp reference step
+  with the plan marked poisoned for re-tune;
+* per-request deadlines (TTFT and total) and retry-with-backoff, with the
+  drain loop failing loudly (lifecycle table) instead of spinning when no
+  progress is possible;
+* a decode watchdog (`runtime.fault_tolerance.DecodeWatchdog`) comparing
+  measured step time against `predict_decode_step_us`;
+* ``--chaos --fault-seed N``: a deterministic fault schedule
+  (`runtime.faults`) injecting one fault of each class.
+
+The final summary line conserves every submitted request exactly once:
+``submitted == completed + timed_out + failed + rejected``.  Runs on CPU
+with smoke configs:
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3_14b --smoke \
-      --requests 6 --prompt-len 16 --gen 12
+      --requests 6 --prompt-len 16 --gen 12 [--chaos --fault-seed 0]
 """
 
 from __future__ import annotations
@@ -36,12 +54,14 @@ from repro.launch.mesh import make_host_mesh, set_mesh
 from repro.launch import specs
 from repro.models import transformer
 from repro.parallel import sharding as shd
+from repro.runtime import fault_tolerance, faults
+from repro.runtime.lifecycle import Lifecycle, State
 
 
 class Server:
     def __init__(self, cfg, batch: int, max_len: int,
                  prefill_len: int = 0, autotune_kernels: bool = True,
-                 slot_lengths=None):
+                 slot_lengths=None, injector=None):
         self.cfg = cfg
         self.batch = batch
         self.max_len = max_len
@@ -65,16 +85,22 @@ class Server:
                             if autotune_kernels else [])
         self.params = transformer.init(cfg, jax.random.PRNGKey(0),
                                        dtype=jnp.float32)
-        self.serve_step = jax.jit(steps.make_serve_step(cfg))
+        self.serve_step = jax.jit(steps.make_guarded_serve_step(cfg))
+        # The degradation step: same math forced onto the jnp reference
+        # path ($REPRO_DECODE_KERNEL=off at trace time) — built lazily on
+        # the first kernel-dispatch fault.
+        self._serve_step_ref = None
+        self.injector = injector
         self.cache = transformer.cache_init(cfg, batch, max_len,
                                             dtype=jnp.float32)
         self.slot_len = np.zeros(batch, np.int32)      # tokens generated
         self.slot_target = np.zeros(batch, np.int32)   # stop length
         self.slot_req = -np.ones(batch, np.int32)      # request id
         self.last_tok = jnp.zeros((batch, 1), jnp.int32)
+        self.poison = np.zeros(batch, bool)            # chaos logits-NaN arm
 
     def prefill(self, slot: int, req_id: int, prompt: np.ndarray,
-                gen_len: int):
+                gen_len: int) -> bool:
         """Masked batched prefill of one slot: the whole prompt in a single
         forward whose ``active`` mask is the slot's one-hot, so ONLY this
         slot's cache rows are written and only its per-slot length advances
@@ -82,7 +108,12 @@ class Server:
         cache with zero tokens for every other slot, silently polluting
         their KV entries and advancing their depths.)  The recycled slot's
         stale KV/state rows are zeroed first — a refilled slot must be
-        indistinguishable from a fresh one."""
+        indistinguishable from a fresh one.
+
+        Returns True iff the slot's first-token logits were finite (the
+        per-slot guard); may raise `faults.PrefillInterrupt` in chaos mode
+        *after* the slot reset — the interrupted slot is left zeroed, so a
+        caller can simply release it and requeue the request."""
         prompt = np.asarray(prompt, np.int32)
         if self.cfg.sliding_window:
             # The ring buffer keeps at most `window` keys; feeding more in
@@ -90,30 +121,186 @@ class Server:
             # ever attends the last `window` prompt tokens anyway.
             prompt = prompt[-self.cfg.sliding_window:]
         self.cache = transformer.cache_reset_slot(self.cache, slot)
+        if self.injector is not None:
+            self.injector.prefill_hook(slot, req_id)   # may raise
         toks = jnp.zeros((self.batch, prompt.size),
                          jnp.int32).at[slot].set(prompt)
         active = jnp.zeros((self.batch,), jnp.bool_).at[slot].set(True)
-        nxt, self.cache = self.serve_step(self.params, self.cache, toks,
-                                          active)
+        nxt, ok, self.cache = self.serve_step(self.params, self.cache, toks,
+                                              active)
         self.last_tok = self.last_tok.at[slot, 0].set(int(nxt[slot, 0]))
         self.slot_len[slot] = 0
         self.slot_target[slot] = gen_len
         self.slot_req[slot] = req_id
+        return bool(np.asarray(ok)[slot])
 
-    def decode_step(self):
+    def release_slot(self, slot: int) -> None:
+        """Free a slot and zero its cache rows — quarantine for a poisoned
+        slot, plain recycling for a completed one (the zeroing is also done
+        by the next prefill; doing it here means a NaN-corrupted slot never
+        sits armed in the cache)."""
+        self.slot_req[slot] = -1
+        self.cache = transformer.cache_reset_slot(self.cache, slot)
+
+    def corrupt_kv(self, slot: int) -> None:
+        """Chaos hook: NaN over one slot's KV/state cache rows."""
+        self.cache = transformer.cache_poison_slot(self.cache, slot)
+
+    def decode_step(self, step: int = 0, use_ref: bool = False):
         """One ragged decode step: every occupied slot attends over its own
         valid cache prefix (per-slot ``lengths`` threaded down to the fused
         decode kernel's scalar-prefetch vector); idle slots neither write
-        nor advance."""
+        nor advance.
+
+        Returns ``(next_tokens, done_slots, bad_slots)``: ``done`` slots
+        hit their stop length this step; ``bad`` slots produced non-finite
+        logits (per-slot guard) — their token is discarded, they did not
+        advance, and the caller must quarantine them.  ``use_ref=True``
+        runs the jnp-reference step (kernel-dispatch degradation path).
+        May raise `faults.KernelDispatchFault` in chaos mode."""
+        if self.injector is not None and not use_ref:
+            self.injector.apply_decode_faults(self, step)   # may raise
         active = jnp.asarray(self.slot_req >= 0)
-        nxt, self.cache = self.serve_step(self.params, self.cache,
-                                          self.last_tok, active)
-        self.last_tok = jnp.where(active[:, None], nxt, self.last_tok)
-        self.slot_len[self.slot_req >= 0] += 1
+        poison = jnp.asarray(self.poison)
+        step_fn = self._ref_step() if use_ref else self.serve_step
+        nxt, ok, self.cache = step_fn(self.params, self.cache,
+                                      self.last_tok, active, poison)
+        self.poison[:] = False
+        ok = np.asarray(ok)
+        adv = (self.slot_req >= 0) & ok
+        self.last_tok = jnp.where(jnp.asarray(adv)[:, None], nxt,
+                                  self.last_tok)
+        self.slot_len[adv] += 1
         done = [s for s in range(self.batch)
-                if self.slot_req[s] >= 0
-                and self.slot_len[s] >= self.slot_target[s]]
-        return nxt, done
+                if adv[s] and self.slot_len[s] >= self.slot_target[s]]
+        bad = [s for s in range(self.batch)
+               if self.slot_req[s] >= 0 and not ok[s]]
+        return nxt, done, bad
+
+    def _ref_step(self):
+        """The jnp-reference serve step, traced with the fused decode
+        kernel forced off (env read at trace time — the jitted trace is
+        cached, so the env flip is scoped to the first call)."""
+        if self._serve_step_ref is None:
+            import os
+            fn = jax.jit(steps.make_guarded_serve_step(self.cfg))
+            old = os.environ.get("REPRO_DECODE_KERNEL")
+            os.environ["REPRO_DECODE_KERNEL"] = "off"
+            try:
+                # trace now, under the env override
+                fn(self.params, self.cache,
+                   self.last_tok, jnp.asarray(self.slot_req >= 0),
+                   jnp.asarray(self.poison))
+            finally:
+                if old is None:
+                    os.environ.pop("REPRO_DECODE_KERNEL", None)
+                else:
+                    os.environ["REPRO_DECODE_KERNEL"] = old
+            self._serve_step_ref = fn
+        return self._serve_step_ref
+
+
+def serve_loop(server: Server, lc: Lifecycle, *, watchdog=None,
+               max_steps: int = 100_000) -> dict:
+    """Drain every admitted request to a terminal state.
+
+    The loop invariant replacing the old ``while completed < requests``
+    spin: it runs while *any* request is non-terminal, and every iteration
+    either fills a slot, decodes, jumps the virtual clock to the next
+    retry-backoff eligibility, or raises with the lifecycle table — no
+    silent no-progress spinning.  Returns loop-level stats for the summary
+    (generated token count, steps, kernel fallbacks).
+    """
+    step = 0
+    generated = 0
+    kernel_fallbacks = 0
+    while lc.open_count() > 0:
+        if step > max_steps:
+            raise RuntimeError(
+                f"serve loop exceeded {max_steps} steps without draining; "
+                f"lifecycle table:\n{lc.table()}")
+        # -- fill idle slots from the admission queue -----------------------
+        for slot in range(server.batch):
+            if server.slot_req[slot] >= 0:
+                continue
+            req = lc.pop_ready(step)
+            if req is None:
+                break
+            lc.transition(req, State.PREFILLING, step)
+            try:
+                ok = server.prefill(slot, req.rid, req.prompt, req.gen_len)
+            except faults.PrefillInterrupt:
+                # the slot was reset before the interrupt: just release it
+                server.release_slot(slot)
+                lc.evict(req, step, reason="prefill_interrupt")
+                continue
+            if not ok:
+                server.release_slot(slot)
+                lc.evict(req, step, reason="nan_prefill")
+                continue
+            req.tokens.append(int(server.last_tok[slot, 0]))
+            lc.record_first_token(req)
+            lc.transition(req, State.DECODING, step)
+        # -- deadline sweep -------------------------------------------------
+        for req in lc.check_deadlines(step):
+            tslot = np.nonzero(server.slot_req == req.rid)[0]
+            if tslot.size:
+                server.release_slot(int(tslot[0]))
+        if lc.open_count() == 0:
+            break
+        # -- progress check -------------------------------------------------
+        occupied = server.slot_req >= 0
+        if not occupied.any():
+            nxt_step = lc.next_eligible_step()
+            if nxt_step is None:
+                raise RuntimeError(
+                    "serve loop stalled: no occupied slots, empty queue, "
+                    f"but {lc.open_count()} request(s) not in a terminal "
+                    f"state — a request leaked.  Lifecycle table:\n"
+                    f"{lc.table()}")
+            # every queued request is in retry backoff: jump the virtual
+            # clock to the earliest eligibility instead of spinning
+            step = max(step + 1, nxt_step)
+            continue
+        # -- one ragged decode step -----------------------------------------
+        t0 = time.monotonic()
+        try:
+            nxt, done, bad = server.decode_step(step)
+        except faults.KernelDispatchFault:
+            # graceful degradation: finish the step on the jnp reference
+            # path and quarantine the tuned decode plan for re-tune
+            kernel_fallbacks += 1
+            dp = next((p for p in server.kernel_plan
+                       if p.op == "attn_decode"), None)
+            if dp is not None:
+                autotune.mark_plan_poisoned(dp.plan.key)
+            nxt, done, bad = server.decode_step(step, use_ref=True)
+        if watchdog is not None:
+            watchdog.observe(step, time.monotonic() - t0)
+        # tokens for every slot that advanced this step
+        for slot in range(server.batch):
+            rid = int(server.slot_req[slot])
+            if rid >= 0 and slot not in bad:
+                lc.requests[rid].tokens.append(int(nxt[slot, 0]))
+                generated += 1
+        for slot in bad:
+            # quarantine exactly the poisoned slot: reset + requeue; the
+            # neighbours' rows were never touched (per-slot masked writes)
+            req = lc.requests[int(server.slot_req[slot])]
+            server.release_slot(slot)
+            lc.evict(req, step, reason="nan_decode")
+        for slot in done:
+            req = lc.requests[int(server.slot_req[slot])]
+            lc.transition(req, State.COMPLETED, step)
+            server.release_slot(slot)
+        step += 1
+    if not lc.conserved():
+        raise RuntimeError(
+            "request conservation violated after drain: "
+            f"{lc.counters()} vs submitted={lc.submitted}.  Lifecycle "
+            f"table:\n{lc.table()}")
+    return {"generated": generated, "steps": step,
+            "kernel_fallbacks": kernel_fallbacks}
 
 
 def main(argv=None):
@@ -132,6 +319,20 @@ def main(argv=None):
                          "sweep (None = pure throughput)")
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--gen", type=int, default=12)
+    ap.add_argument("--queue-limit", type=int, default=0,
+                    help="admission-queue bound; submits past it are "
+                         "REJECTED (0 = unbounded)")
+    ap.add_argument("--max-retries", type=int, default=2,
+                    help="retry budget for evicted/faulted requests")
+    ap.add_argument("--ttft-ms", type=float, default=None,
+                    help="time-to-first-token deadline per request")
+    ap.add_argument("--deadline-ms", type=float, default=None,
+                    help="total deadline per request")
+    ap.add_argument("--chaos", action="store_true",
+                    help="inject the deterministic smoke fault schedule "
+                         "(one fault of each class)")
+    ap.add_argument("--fault-seed", type=int, default=0,
+                    help="seed for the --chaos fault schedule")
     args = ap.parse_args(argv)
 
     cfg = configs.get_smoke(args.arch) if args.smoke else configs.get(args.arch)
@@ -172,38 +373,65 @@ def main(argv=None):
         batch = decision["batch"]
     print(json.dumps({"serving_plan": decision}))
 
+    injector = None
+    if args.chaos:
+        plan = faults.FaultPlan.smoke(args.fault_seed)
+        injector = faults.FaultInjector(plan)
+        autotune.install_dispatch_hook(injector.dispatch_hook)
+        print(json.dumps({"fault_plan": {"seed": args.fault_seed,
+                                         "schedule": plan.record()}}))
+
     rng = np.random.default_rng(0)
-    queue = [(i, rng.integers(0, cfg.vocab_size, size=args.prompt_len),
-              args.gen) for i in range(args.requests)]
+    reqs = [(i, rng.integers(0, cfg.vocab_size, size=args.prompt_len),
+             args.gen) for i in range(args.requests)]
 
-    with set_mesh(mesh), shd.use_rules(rules):
-        server = Server(cfg, batch, max_len, prefill_len=args.prompt_len,
-                        slot_lengths=dist)
-        t0 = time.time()
-        completed, generated = 0, 0
-        # initial fill
-        for slot in range(min(batch, len(queue))):
-            rid, prompt, gen = queue.pop(0)
-            server.prefill(slot, rid, prompt, gen)
-        while completed < args.requests:
-            _, done = server.decode_step()
-            generated += int((server.slot_req >= 0).sum())
-            for slot in done:
-                completed += 1
-                server.slot_req[slot] = -1
-                if queue:  # continuous batching: refill immediately
-                    rid, prompt, gen = queue.pop(0)
-                    server.prefill(slot, rid, prompt, gen)
-        wall = time.time() - t0
+    lc = Lifecycle(queue_limit=args.queue_limit,
+                   max_retries=args.max_retries)
+    for rid, prompt, gen in reqs:
+        lc.submit(rid, prompt, gen,
+                  ttft_deadline_s=(args.ttft_ms / 1e3
+                                   if args.ttft_ms else None),
+                  deadline_s=(args.deadline_ms / 1e3
+                              if args.deadline_ms else None))
 
-    print(json.dumps({
-        "arch": cfg.name, "requests": completed,
+    try:
+        with set_mesh(mesh), shd.use_rules(rules):
+            server = Server(cfg, batch, max_len,
+                            prefill_len=args.prompt_len,
+                            slot_lengths=dist, injector=injector)
+            predicted_us = (autotune.predict_decode_step_us(
+                cfg, batch, cache_len=max_len, kv_dtype=jnp.float32,
+                lengths=autotune._quantile_lengths(batch, dist, max_len),
+                plans=server.kernel_plan)
+                if server.kernel_plan else None)
+            watchdog = fault_tolerance.DecodeWatchdog(predicted_us)
+            t0 = time.time()
+            stats = serve_loop(server, lc, watchdog=watchdog)
+            wall = time.time() - t0
+    finally:
+        autotune.install_dispatch_hook(None)
+
+    outcomes = lc.counters()
+    summary = {
+        "arch": cfg.name,
+        "requests": outcomes["completed"],      # back-compat: served count
+        "submitted": lc.submitted,
         "batch": batch, "batch_source": decision["source"],
-        "tokens_generated": generated,
+        "tokens_generated": stats["generated"],
+        "decode_steps": stats["steps"],
         "wall_s": round(wall, 2),
-        "tok_per_s": round(generated / wall, 1),
+        "tok_per_s": round(stats["generated"] / max(wall, 1e-9), 1),
+        "outcomes": outcomes,
+        "retries_total": lc.retried_events,
+        "kernel_fallbacks": stats["kernel_fallbacks"],
+        "ttft_ms": lc.ttft_percentiles(),
+        "request_outcomes": lc.outcome_trace(),
+        "watchdog": watchdog.summary(),
         "kernel_plan": [p.record() for p in server.kernel_plan],
-    }))
+    }
+    if injector is not None:
+        summary["faults"] = injector.record()
+    print(json.dumps(summary))
     return 0
 
 

@@ -84,3 +84,30 @@ def make_serve_step(cfg: ModelConfig):
         return nxt[:, None], new_cache
 
     return serve_step
+
+
+def make_guarded_serve_step(cfg: ModelConfig):
+    """`make_serve_step` plus the per-slot NaN/Inf logits guard (and the
+    chaos logits-poison hook) — the step the fault-tolerant server runs.
+
+    Returns ``(next_token, ok, cache)`` where ``ok`` is a (B,) bool: True
+    iff the slot's final-position logits are entirely finite.  A False
+    slot's token is garbage and its cache may be poisoned — the serve loop
+    quarantines exactly that slot (reset + requeue) while its neighbours,
+    whose rows are untouched (per-slot masked writes), keep decoding
+    bitwise-identically to a fault-free run.  ``poison`` ((B,) bool,
+    chaos-injection only) overwrites a slot's logits with NaN *after* the
+    forward, so the guard is exercised without corrupting model state.
+    """
+
+    def serve_step(params, cache, tokens, active=None, poison=None):
+        logits, new_cache, _ = transformer.forward(
+            cfg, params, {"tokens": tokens}, cache=cache, active=active)
+        last = logits[:, -1]
+        if poison is not None:
+            last = jnp.where(poison[:, None], jnp.nan, last)
+        ok = jnp.all(jnp.isfinite(last), axis=-1)
+        nxt = jnp.argmax(last, axis=-1).astype(jnp.int32)
+        return nxt[:, None], ok, new_cache
+
+    return serve_step

@@ -261,6 +261,25 @@ def cache_reset_slot(cache: Params, slot: int) -> Params:
             "lengths": cache["lengths"].at[slot].set(0)}
 
 
+def cache_poison_slot(cache: Params, slot: int) -> Params:
+    """Overwrite one slot's float cache rows with NaN (fault injection:
+    a corrupted KV block / recurrent state).
+
+    The chaos harness's `kv_corrupt` fault class: NaN lands in every float
+    leaf of the slot's per-layer cache (KV rows, SSM conv/state, RWKV
+    shifts) so the next decode step's logits for that slot go non-finite
+    and the per-slot guard must quarantine it.  Integer leaves and the
+    shared index/lengths bookkeeping are untouched — the fault corrupts
+    *data*, not control state, exactly like a flipped HBM block would.
+    """
+    def poison(a):
+        if not jnp.issubdtype(a.dtype, jnp.floating):
+            return a
+        return a.at[:, slot].set(jnp.nan)
+    return {"blocks": jax.tree.map(poison, cache["blocks"]),
+            "index": cache["index"], "lengths": cache["lengths"]}
+
+
 # ---------------------------------------------------------------------------
 # Forward
 # ---------------------------------------------------------------------------

@@ -1,1 +1,1 @@
-from repro.runtime import elastic, fault_tolerance  # noqa: F401
+from repro.runtime import elastic, fault_tolerance, faults, lifecycle  # noqa: F401

@@ -56,6 +56,45 @@ class StragglerMonitor:
         return None
 
 
+class DecodeWatchdog:
+    """Serving-side watchdog: the StragglerMonitor wired to the autotuner's
+    predicted decode-step time.
+
+    The coarse-grain estimator line of work (PAPERS.md) uses a
+    predicted-vs-measured performance model as the natural misbehaving-
+    execution signal; here the prediction is `autotune.predict_decode_step_us`
+    (the same analytic machine model the kernel tuner ranks with) and the
+    measurement is the serve loop's per-step wall clock.  Two signals come
+    out: *stragglers* (a step way off the rolling median — transient) and
+    *divergence* (the run's median vs the model — systematic), both
+    reported in the serving summary rather than gated: on CPU
+    interpret-mode the model predicts TPU time, so divergence is
+    informational there and a gate only on real hardware.
+    """
+
+    def __init__(self, predicted_us: float | None,
+                 threshold: float = 2.0):
+        self.predicted_us = predicted_us
+        self.monitor = StragglerMonitor(threshold=threshold)
+
+    def observe(self, step: int, step_time_s: float) -> StragglerReport | None:
+        return self.monitor.observe(step, step_time_s)
+
+    def summary(self) -> dict:
+        times = list(self.monitor.times)
+        measured_us = float(np.median(times)) * 1e6 if times else None
+        divergence = None
+        if measured_us is not None and self.predicted_us:
+            divergence = measured_us / self.predicted_us
+        return {
+            "predicted_step_us": self.predicted_us,
+            "measured_step_us_p50": measured_us,
+            "divergence": divergence,
+            "stragglers": [dataclasses.asdict(r)
+                           for r in self.monitor.reports],
+        }
+
+
 class Heartbeat:
     """Per-host liveness: hosts `beat()`; the coordinator calls `dead()`."""
 

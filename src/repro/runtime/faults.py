@@ -1,0 +1,195 @@
+"""Deterministic fault injection for the serving loop (chaos harness).
+
+The source paper's position is that failure is a *system-level* design
+concern: you do not build exotic per-core hardware to avoid faults, you
+build software that detects and absorbs them.  Absorption you cannot
+rehearse is absorption you do not have — so this module turns faults into
+a seeded, replayable schedule: a :class:`FaultPlan` is a list of
+:class:`FaultEvent`\\ s keyed on the serve loop's *virtual clock* (decode
+step index; prefill ordinal for prefill interrupts), generated from an
+integer seed.  The same ``--fault-seed`` therefore produces the same
+faults at the same points of the same execution — and must produce the
+same outcome trace (per-request final states and retry counts), which the
+chaos tests assert.
+
+Fault classes (one of each in the smoke schedule):
+
+``nan_logits``        NaN into a chosen slot's logits for one decode step
+                      (the slot's next sampled token is garbage; nothing
+                      else is touched) — exercises the per-slot guard.
+``kv_corrupt``        NaN over a chosen slot's KV/state cache rows —
+                      poisoned *state*, not just one step's output; the
+                      guard must quarantine exactly that slot.
+``kernel_dispatch``   raise :class:`KernelDispatchFault` from the decode
+                      dispatch — exercises the one-shot jnp-reference
+                      fallback + plan poisoning.
+``straggler``         stall one decode step by ``stall_s`` — exercises the
+                      measured-vs-predicted decode watchdog.
+``prefill_interrupt`` raise :class:`PrefillInterrupt` mid-prefill (after
+                      the slot reset, before the forward) — exercises
+                      evict + retry from a half-initialized slot.
+
+Injection points are explicit hooks: ``Server.prefill`` calls
+``prefill_hook``, ``Server.decode_step`` calls ``apply_decode_faults``,
+and ``kernels.autotune.dispatch`` consults the hook installed by
+:func:`install_dispatch_hook` (unit-level: a kernel launch that raises).
+This module is numpy+stdlib only — it manipulates the server through its
+public surface (``poison`` mask, ``corrupt_kv``) and never imports jax.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+class InjectedFault(Exception):
+    """Base class for every injected failure."""
+
+
+class KernelDispatchFault(InjectedFault):
+    """Injected kernel-dispatch failure (stands in for a Pallas launch
+    error / VMEM overflow the plan missed)."""
+
+
+class PrefillInterrupt(InjectedFault):
+    """Injected mid-prefill interruption (stands in for preemption or a
+    host fault between slot reset and cache write)."""
+
+
+FAULT_CLASSES = ("nan_logits", "kv_corrupt", "kernel_dispatch",
+                 "straggler", "prefill_interrupt")
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultEvent:
+    kind: str          # one of FAULT_CLASSES
+    step: int          # decode step index; prefill ordinal for interrupts
+    slot: int          # target slot hint (resolved modulo batch, occupied)
+    stall_s: float = 0.0
+
+    def record(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+class FaultPlan:
+    """An ordered, seeded fault schedule."""
+
+    def __init__(self, events):
+        self.events = sorted(events, key=lambda e: (e.step, e.kind, e.slot))
+
+    @classmethod
+    def smoke(cls, seed: int, *, max_step: int = 14,
+              stall_s: float = 0.25) -> "FaultPlan":
+        """One fault of every class at seeded-random steps/slots — the
+        ``serve --chaos`` schedule the chaos-smoke CI job runs.  Steps are
+        drawn from [2, max_step] so the batch is warm when faults land;
+        the straggler lands late enough (>= 8 observations) for the
+        rolling-median watchdog to have a baseline."""
+        rng = np.random.default_rng(seed)
+        events = []
+        for kind in ("nan_logits", "kv_corrupt", "kernel_dispatch"):
+            events.append(FaultEvent(kind, int(rng.integers(2, max_step + 1)),
+                                     int(rng.integers(0, 64))))
+        events.append(FaultEvent("straggler",
+                                 int(rng.integers(9, max_step + 3)),
+                                 0, stall_s=stall_s))
+        # prefill ordinal 1 = the second prefill of the run: slot 0's very
+        # first fill stays clean so the loop always gets off the ground.
+        events.append(FaultEvent("prefill_interrupt",
+                                 int(rng.integers(1, 3)),
+                                 int(rng.integers(0, 64))))
+        return cls(events)
+
+    def record(self) -> list[dict]:
+        return [e.record() for e in self.events]
+
+
+class FaultInjector:
+    """Executes a FaultPlan against a live server via the explicit hooks.
+
+    Events whose virtual-clock point has arrived are *consumed* (each
+    fires at most once), and everything that fired lands in ``self.fired``
+    for the serving summary.  Slot hints resolve deterministically onto an
+    occupied slot; an event with no occupied slot to hit is consumed and
+    recorded as skipped.
+    """
+
+    def __init__(self, plan: FaultPlan, *, sleep=None):
+        import time
+        self.plan = plan
+        self.pending = list(plan.events)
+        self.fired: list[dict] = []
+        self.prefill_count = 0
+        self._sleep = sleep if sleep is not None else time.sleep
+
+    # -- hooks --------------------------------------------------------------
+
+    def prefill_hook(self, slot: int, rid: int) -> None:
+        """Called by Server.prefill after the slot reset, before the
+        forward; may raise PrefillInterrupt."""
+        ordinal = self.prefill_count
+        self.prefill_count += 1
+        for ev in list(self.pending):
+            if ev.kind == "prefill_interrupt" and ev.step == ordinal:
+                self.pending.remove(ev)
+                self.fired.append({**ev.record(), "slot": slot, "rid": rid})
+                raise PrefillInterrupt(
+                    f"injected prefill interrupt (request {rid}, "
+                    f"slot {slot}, prefill #{ordinal})")
+
+    def apply_decode_faults(self, server, step: int) -> None:
+        """Called by Server.decode_step before the forward.  Applies every
+        event scheduled at ``step``: corrupts KV, arms the logits-poison
+        mask, stalls, and — last, so same-step state faults still land —
+        raises KernelDispatchFault."""
+        due = [ev for ev in self.pending if ev.kind != "prefill_interrupt"
+               and ev.step <= step]
+        raise_dispatch = None
+        for ev in due:
+            self.pending.remove(ev)
+            slot = self._resolve_slot(server, ev.slot)
+            if slot is None:
+                self.fired.append({**ev.record(), "skipped": True})
+                continue
+            rec = {**ev.record(), "slot": slot, "fired_step": step}
+            if ev.kind == "nan_logits":
+                server.poison[slot] = True
+            elif ev.kind == "kv_corrupt":
+                server.corrupt_kv(slot)
+            elif ev.kind == "straggler":
+                self._sleep(ev.stall_s)
+            elif ev.kind == "kernel_dispatch":
+                raise_dispatch = ev
+            self.fired.append(rec)
+        if raise_dispatch is not None:
+            raise KernelDispatchFault(
+                f"injected kernel-dispatch failure at step {step}")
+
+    def dispatch_hook(self, family: str) -> None:
+        """autotune.dispatch-level hook: fail the next kernel launch of a
+        family with a pending kernel_dispatch event at step <= 0 (the
+        unit-level injection point; the serve loop handles step-scheduled
+        dispatch faults itself because the jitted step traces dispatch
+        only once)."""
+        for ev in list(self.pending):
+            if ev.kind == "kernel_dispatch" and ev.step < 0:
+                self.pending.remove(ev)
+                self.fired.append({**ev.record(), "family": family})
+                raise KernelDispatchFault(
+                    f"injected dispatch failure for family '{family}'")
+
+    # -- helpers ------------------------------------------------------------
+
+    @staticmethod
+    def _resolve_slot(server, hint: int) -> int | None:
+        """Deterministically aim a slot hint at an occupied slot."""
+        occupied = [s for s in range(server.batch) if server.slot_req[s] >= 0]
+        if not occupied:
+            return None
+        return occupied[hint % len(occupied)]
+
+    def record(self) -> dict:
+        return {"schedule": self.plan.record(), "fired": list(self.fired),
+                "pending": [e.record() for e in self.pending]}

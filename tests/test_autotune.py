@@ -134,6 +134,74 @@ def test_corrupt_cache_file_is_ignored(cache):
     assert p.source == "model"
 
 
+def test_corrupt_cache_file_is_quarantined_with_warning(cache):
+    """A corrupt cache file must be renamed to *.corrupt (evidence kept for
+    forensics) with a warning — not silently overwritten — and the fresh
+    cache must work end to end."""
+    cache.path.write_text('{"version": 3, "entries": {truncated')
+    fresh = autotune.TuneCache(cache.path)
+    with pytest.warns(RuntimeWarning, match="quarantined"):
+        p = autotune.tune_matmul(128, 128, 128, cache=fresh, measure_k=0)
+    assert p.source == "model"
+    corrupt = cache.path.with_name(cache.path.name + ".corrupt")
+    assert corrupt.exists()
+    assert corrupt.read_text().startswith('{"version": 3')
+    # the rewritten cache file is valid and serves hits again
+    p2 = autotune.tune_matmul(128, 128, 128,
+                              cache=autotune.TuneCache(cache.path),
+                              measure_k=0)
+    assert p2.source == "cache"
+
+
+def test_poisoned_plan_is_retuned_not_served(cache):
+    """mark_plan_poisoned quarantines a cached winner whose launch failed:
+    the next tune re-runs the DSE (source == "model", not "cache") and the
+    fresh put clears the flag."""
+    p1 = autotune.tune_matmul(192, 128, 160, cache=cache, measure_k=0)
+    autotune.mark_plan_poisoned(p1.key, cache=cache)
+    assert cache._load()["entries"][p1.key]["poisoned"] is True
+    p2 = autotune.tune_matmul(192, 128, 160, cache=cache, measure_k=0)
+    assert p2.source == "model"           # re-tuned, not the poisoned hit
+    assert not cache._load()["entries"][p1.key].get("poisoned")
+    p3 = autotune.tune_matmul(192, 128, 160, cache=cache, measure_k=0)
+    assert p3.source == "cache"           # fresh entry serves again
+
+
+def test_dispatch_fault_falls_back_to_reference_and_poisons_plan(cache):
+    """A kernel launch that raises (here: the chaos hook) must fall back
+    one-shot to the jnp reference — numerically identical result — and
+    poison the plan so the next tune re-runs the DSE."""
+    a = jax.random.normal(KEY, (96, 64), jnp.float32)
+    b = jax.random.normal(jax.random.PRNGKey(1), (64, 80), jnp.float32)
+    calls = []
+
+    def hook(family):
+        calls.append(family)
+        raise RuntimeError("injected kernel-dispatch fault")
+
+    autotune.install_dispatch_hook(hook)
+    try:
+        with pytest.warns(RuntimeWarning, match="falling back"):
+            out = autotune.dispatch("matmul", a, b, interpret=True,
+                                    cache=cache)
+    finally:
+        autotune.install_dispatch_hook(None)
+    assert calls == ["matmul"]
+    np.testing.assert_allclose(np.asarray(out),
+                               np.asarray(matmul_ref(a, b)),
+                               rtol=5e-4, atol=5e-4)
+    poisoned = [k for k, e in cache._load()["entries"].items()
+                if e.get("poisoned")]
+    assert len(poisoned) == 1 and poisoned[0].startswith("matmul:")
+    # with the hook cleared, the same dispatch re-tunes and runs the kernel
+    out2 = autotune.dispatch("matmul", a, b, interpret=True, cache=cache)
+    np.testing.assert_allclose(np.asarray(out2),
+                               np.asarray(matmul_ref(a, b)),
+                               rtol=5e-4, atol=5e-4)
+    assert not any(e.get("poisoned")
+                   for e in cache._load()["entries"].values())
+
+
 def test_stale_version_entries_ignored_not_misapplied(cache):
     """Block skipping changed what a cached (block_q, block_k) means for
     causal=True, so v1 entries must be dropped wholesale (re-tuned), never

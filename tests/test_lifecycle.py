@@ -1,0 +1,257 @@
+"""Request lifecycle state machine: legal/illegal edges, bounded
+admission backpressure, retry-with-backoff on the step virtual clock,
+deadline sweeps on an injectable wall clock, and the conservation
+invariant (every submitted request ends in exactly one terminal state).
+Pure-python — no jax, no server."""
+
+import numpy as np
+import pytest
+
+from repro.runtime.lifecycle import (Lifecycle, State, TransitionError,
+                                     submit_all)
+
+
+def _lc(**kw):
+    kw.setdefault("clock", lambda: 0.0)
+    return Lifecycle(**kw)
+
+
+def _reqs(n, gen=4):
+    return [(rid, np.arange(3, dtype=np.int32), gen) for rid in range(n)]
+
+
+# ---------------------------------------------------------------------------
+# transitions
+# ---------------------------------------------------------------------------
+
+def test_happy_path_transitions():
+    lc = _lc()
+    req = lc.submit(0, [1, 2], 4)
+    assert req.state is State.QUEUED
+    assert lc.pop_ready(0) is req
+    lc.transition(req, State.PREFILLING, 0)
+    lc.transition(req, State.DECODING, 0)
+    lc.transition(req, State.COMPLETED, 3)
+    assert [s for s, _ in req.history] == [
+        State.QUEUED, State.PREFILLING, State.DECODING, State.COMPLETED]
+    assert lc.conserved() and lc.counters()["completed"] == 1
+
+
+@pytest.mark.parametrize("start,bad", [
+    (State.QUEUED, State.COMPLETED),       # must prefill first
+    (State.QUEUED, State.DECODING),
+    (State.PREFILLING, State.COMPLETED),   # must decode first
+    (State.DECODING, State.PREFILLING),    # no going back
+    (State.COMPLETED, State.DECODING),     # terminal states have no exits
+    (State.REJECTED, State.QUEUED),
+    (State.FAILED, State.QUEUED),
+])
+def test_illegal_edges_raise(start, bad):
+    lc = _lc()
+    req = lc.submit(0, [1], 1)
+    req.state = start
+    with pytest.raises(TransitionError, match="illegal transition"):
+        lc.transition(req, bad, 0)
+
+
+def test_duplicate_rid_rejected():
+    lc = _lc()
+    lc.submit(0, [1], 1)
+    with pytest.raises(ValueError, match="duplicate"):
+        lc.submit(0, [1], 1)
+
+
+# ---------------------------------------------------------------------------
+# bounded admission
+# ---------------------------------------------------------------------------
+
+def test_queue_limit_rejects_overflow():
+    lc = _lc(queue_limit=2)
+    submit_all(lc, _reqs(5))
+    states = [lc.requests[r].state for r in range(5)]
+    assert states[:2] == [State.QUEUED, State.QUEUED]
+    assert states[2:] == [State.REJECTED] * 3
+    assert lc.counters()["rejected"] == 3
+    # a rejected request is terminal immediately: it never enters the queue
+    assert lc.pop_ready(0).rid == 0 and lc.pop_ready(0).rid == 1
+    assert lc.pop_ready(0) is None
+
+
+def test_retries_bypass_the_admission_bound():
+    """An admitted request is owed a terminal answer: eviction must requeue
+    it even when the queue sits at its limit."""
+    lc = _lc(queue_limit=1, max_retries=1)
+    req = lc.submit(0, [1], 1)
+    lc.pop_ready(0)
+    lc.transition(req, State.PREFILLING, 0)
+    lc.submit(1, [1], 1)            # fills the bound again
+    assert lc.submit(2, [1], 1).state is State.REJECTED
+    assert lc.evict(req, 0) is True
+    assert req.state is State.QUEUED and len(lc._queue) == 2
+
+
+def test_zero_limit_is_unbounded():
+    lc = _lc(queue_limit=0)
+    submit_all(lc, _reqs(50))
+    assert lc.counters()["rejected"] == 0
+
+
+# ---------------------------------------------------------------------------
+# retry with backoff
+# ---------------------------------------------------------------------------
+
+def test_evict_requeues_with_exponential_step_backoff():
+    lc = _lc(max_retries=3, backoff_steps=4)
+    req = lc.submit(0, [1], 4)
+    for retry, expected_wait in enumerate([4, 8, 16], start=1):
+        lc.pop_ready(req.not_before_step)
+        lc.transition(req, State.PREFILLING, 10)
+        assert lc.evict(req, 10) is True
+        assert req.retries == retry
+        assert req.not_before_step == 10 + expected_wait
+        # not eligible before the backoff elapses, eligible exactly at it
+        assert lc.pop_ready(req.not_before_step - 1) is None
+        assert lc.next_eligible_step() == req.not_before_step
+    # retry budget spent: the fourth eviction is FAILED, not requeued
+    lc.pop_ready(req.not_before_step)
+    lc.transition(req, State.PREFILLING, 40)
+    assert lc.evict(req, 40) is False
+    assert req.state is State.FAILED
+    assert lc.conserved()
+    assert lc.counters() == {"completed": 0, "timed_out": 0, "failed": 1,
+                             "rejected": 0, "evicted": 4, "retried": 3}
+
+
+def test_evict_discards_partial_tokens():
+    """A retried request starts over — stale tokens would break the
+    retry-reproduces-solo-decode guarantee."""
+    lc = _lc()
+    req = lc.submit(0, [1], 4)
+    lc.pop_ready(0)
+    lc.transition(req, State.PREFILLING, 0)
+    lc.transition(req, State.DECODING, 0)
+    req.tokens = [5, 6, 7]
+    lc.evict(req, 3)
+    assert req.tokens == []
+
+
+def test_pop_ready_fcfs_among_eligible():
+    """Backoff must not starve: an in-backoff head of queue is skipped,
+    but order is preserved among the eligible."""
+    lc = _lc()
+    a = lc.submit(0, [1], 1)
+    b = lc.submit(1, [1], 1)
+    a.not_before_step = 10
+    assert lc.pop_ready(5) is b      # a is in backoff, b is eligible
+    assert lc.pop_ready(5) is None
+    assert lc.pop_ready(10) is a
+
+
+# ---------------------------------------------------------------------------
+# deadlines (injectable wall clock)
+# ---------------------------------------------------------------------------
+
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+def test_total_deadline_times_out_open_request():
+    clock = FakeClock()
+    lc = _lc(clock=clock)
+    req = lc.submit(0, [1], 4, deadline_s=1.0)
+    lc.pop_ready(0)
+    lc.transition(req, State.PREFILLING, 0)
+    lc.transition(req, State.DECODING, 0)
+    clock.t = 0.5
+    assert lc.check_deadlines(1) == []
+    clock.t = 1.5
+    assert lc.check_deadlines(2) == [req]
+    assert req.state is State.TIMED_OUT
+    assert lc.check_deadlines(3) == []       # terminal: swept once only
+    assert lc.conserved()
+
+
+def test_ttft_deadline_only_until_first_token():
+    clock = FakeClock()
+    lc = _lc(clock=clock)
+    fast = lc.submit(0, [1], 4, ttft_deadline_s=1.0)
+    slow = lc.submit(1, [1], 4, ttft_deadline_s=1.0)
+    for req in (fast, slow):
+        lc.pop_ready(0)
+        lc.transition(req, State.PREFILLING, 0)
+    clock.t = 0.4
+    lc.record_first_token(fast)              # fast met its TTFT
+    lc.transition(fast, State.DECODING, 0)
+    clock.t = 2.0
+    assert lc.check_deadlines(1) == [slow]   # fast keeps decoding
+    assert fast.state is State.DECODING
+    assert fast.ttft_ms == pytest.approx(400.0)
+
+
+def test_deadline_sweep_drops_queued_request_from_queue():
+    clock = FakeClock()
+    lc = _lc(clock=clock)
+    lc.submit(0, [1], 4, deadline_s=1.0)
+    clock.t = 2.0
+    assert len(lc.check_deadlines(0)) == 1
+    assert lc.pop_ready(0) is None and lc.conserved()
+
+
+# ---------------------------------------------------------------------------
+# accounting
+# ---------------------------------------------------------------------------
+
+def test_conservation_detects_leaked_request():
+    lc = _lc()
+    submit_all(lc, _reqs(3))
+    for rid in range(2):
+        req = lc.pop_ready(0)
+        lc.transition(req, State.PREFILLING, 0)
+        lc.transition(req, State.DECODING, 0)
+        lc.transition(req, State.COMPLETED, 1)
+    assert not lc.conserved()               # rid 2 still open
+    assert lc.open_count() == 1
+    req = lc.pop_ready(0)
+    lc.transition(req, State.PREFILLING, 2)
+    lc.transition(req, State.DECODING, 2)
+    lc.transition(req, State.COMPLETED, 3)
+    assert lc.conserved() and lc.open_count() == 0
+
+
+def test_ttft_percentiles():
+    clock = FakeClock()
+    lc = _lc(clock=clock)
+    for rid in range(4):
+        req = lc.submit(rid, [1], 1)
+        clock.t = 0.01 * (rid + 1)
+        lc.record_first_token(req)
+        clock.t = 0.0
+    p = lc.ttft_percentiles()
+    assert p["n"] == 4 and p["p50"] == pytest.approx(25.0)
+    assert p["p99"] <= 40.0
+    assert _lc().ttft_percentiles() == {"p50": None, "p99": None, "n": 0}
+
+
+def test_outcome_trace_is_rid_ordered_and_json_shaped():
+    import json
+    lc = _lc(queue_limit=1)
+    submit_all(lc, _reqs(2))
+    trace = lc.outcome_trace()
+    assert [row["rid"] for row in trace] == [0, 1]
+    assert trace[1]["state"] == "rejected"
+    json.dumps(trace)
+
+
+def test_table_names_every_request_and_history():
+    lc = _lc(max_retries=0)
+    req = lc.submit(7, [1], 1)
+    lc.pop_ready(0)
+    lc.transition(req, State.PREFILLING, 2)
+    lc.evict(req, 3)
+    table = lc.table()
+    assert "7" in table and "failed" in table
+    assert "prefilling@2" in table and "evicted@3" in table

@@ -58,7 +58,7 @@ def _serve_all(cfg, batch, requests, max_len):
         tokens[rid].append(int(server.last_tok[slot, 0]))
     completed, guard = 0, 0
     while completed < len(requests):
-        nxt, done = server.decode_step()
+        nxt, done, _ = server.decode_step()
         for slot, rid in slot_rid.items():
             if server.slot_req[slot] == rid:
                 tokens[rid].append(int(nxt[slot, 0]))

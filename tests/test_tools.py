@@ -137,14 +137,27 @@ def test_check_registry_unreadable_report_fails(tmp_path):
 # check_serve
 # ---------------------------------------------------------------------------
 
-GOOD_LOG = "\n".join([
-    json.dumps({"serving_plan": {
+def _good_summary(**overrides):
+    s = {"arch": "x", "requests": 6, "submitted": 6, "batch": 4,
+         "tokens_generated": 72, "tok_per_s": 10.0,
+         "outcomes": {"completed": 6, "timed_out": 0, "failed": 0,
+                      "rejected": 0, "evicted": 1, "retried": 1},
+         "ttft_ms": {"p50": 12.0, "p99": 30.0, "n": 6}}
+    s.update(overrides)
+    return s
+
+
+def _log(summary=None, extra_rows=()):
+    rows = [json.dumps({"serving_plan": {
         "batch": 4, "source": "autotune",
         "predicted_tok_per_s": 1234.5, "sweep": []}}),
-    "some non-json noise",
-    json.dumps({"arch": "x", "requests": 6, "batch": 4,
-                "tokens_generated": 72, "tok_per_s": 10.0}),
-])
+        "some non-json noise",
+        *extra_rows,
+        json.dumps(summary if summary is not None else _good_summary())]
+    return "\n".join(rows)
+
+
+GOOD_LOG = _log()
 
 
 def test_check_serve_happy_path(tmp_path):
@@ -156,7 +169,7 @@ def test_check_serve_happy_path(tmp_path):
 
 
 def test_check_serve_missing_plan_fails(tmp_path):
-    text = json.dumps({"arch": "x", "requests": 6, "tokens_generated": 72})
+    text = json.dumps(_good_summary())
     assert any("serving_plan" in p for p in check_serve.check(text))
 
 
@@ -172,6 +185,73 @@ def test_check_serve_undrained_queue_fails(tmp_path):
                              "--requests", "7"]) == 1
     assert check_serve.main(["check_serve.py", str(log),
                              "--min-tokens", "100"]) == 1
+
+
+@pytest.mark.parametrize("counter", check_serve.OUTCOME_KEYS)
+def test_check_serve_missing_counter_fails(tmp_path, counter):
+    """Each outcome counter is individually required — a summary that
+    drops one must exit non-zero."""
+    summary = _good_summary()
+    del summary["outcomes"][counter]
+    log = tmp_path / "serve.log"
+    log.write_text(_log(summary))
+    problems = check_serve.check(_log(summary))
+    assert any(counter in p for p in problems)
+    assert check_serve.main(["check_serve.py", str(log)]) == 1
+
+
+def test_check_serve_missing_outcomes_block_fails(tmp_path):
+    summary = _good_summary()
+    del summary["outcomes"]
+    assert any("outcome counters" in p for p in
+               check_serve.check(_log(summary)))
+
+
+def test_check_serve_nonconserving_summary_fails(tmp_path):
+    """submitted != completed+timed_out+failed+rejected — a lost request —
+    must exit non-zero even though every counter is present."""
+    summary = _good_summary(submitted=7)    # one request unaccounted for
+    log = tmp_path / "serve.log"
+    log.write_text(_log(summary))
+    problems = check_serve.check(_log(summary))
+    assert any("conservation" in p for p in problems)
+    assert check_serve.main(["check_serve.py", str(log)]) == 1
+
+
+def test_check_serve_missing_ttft_fails(tmp_path):
+    summary = _good_summary()
+    del summary["ttft_ms"]
+    assert any("TTFT" in p for p in check_serve.check(_log(summary)))
+
+
+def test_check_serve_chaos_requires_fired_schedule(tmp_path):
+    """--chaos: every scheduled fault class must actually have fired."""
+    faults = {"schedule": [{"kind": "nan_logits", "step": 3, "slot": 0,
+                            "stall_s": 0.0}],
+              "fired": [], "pending": []}
+    summary = _good_summary(faults=faults)
+    fault_line = json.dumps({"fault_plan": {"seed": 0,
+                                            "schedule": faults["schedule"]}})
+    text = _log(summary, extra_rows=[fault_line])
+    problems = check_serve.check(text, chaos=True)
+    assert any("never fired" in p for p in problems)
+    # same log with the fault fired is clean under --chaos
+    faults_ok = dict(faults, fired=[{"kind": "nan_logits", "step": 3,
+                                     "slot": 0, "stall_s": 0.0}])
+    text_ok = _log(_good_summary(faults=faults_ok),
+                   extra_rows=[fault_line])
+    assert check_serve.check(text_ok, chaos=True) == []
+
+
+def test_check_serve_chaos_failed_requests_fail(tmp_path):
+    faults = {"schedule": [], "fired": [], "pending": []}
+    outcomes = {"completed": 5, "timed_out": 0, "failed": 1,
+                "rejected": 0, "evicted": 1, "retried": 0}
+    summary = _good_summary(requests=5, faults=faults, outcomes=outcomes)
+    fault_line = json.dumps({"fault_plan": {"seed": 0, "schedule": []}})
+    problems = check_serve.check(_log(summary, extra_rows=[fault_line]),
+                                 chaos=True)
+    assert any("FAILED" in p for p in problems)
 
 
 def test_check_serve_unreadable_log_fails(tmp_path):

@@ -1,5 +1,5 @@
 #!/usr/bin/env python
-"""Serving-smoke log checker, run by the CI serve-smoke job.
+"""Serving-smoke log checker, run by the CI serve-smoke and chaos-smoke jobs.
 
 Validates the stdout of `python -m repro.launch.serve` (typically the
 `--smoke` run):
@@ -10,13 +10,22 @@ Validates the stdout of `python -m repro.launch.serve` (typically the
 2. **The final summary line parses** and shows every queued request
    completed with a positive generated-token count — the ragged
    continuous-batching loop drained the queue.
+3. **Request conservation**: the summary's outcome counters are present
+   and account for every submitted request exactly once
+   (``submitted == completed + timed_out + failed + rejected``) — the
+   fault-tolerance layer's core invariant: a request may be slow, evicted,
+   or refused, but never silently lost.
+4. **TTFT percentiles are present** (``ttft_ms.p50``/``p99``) whenever
+   anything completed.
 
 Optional flags pin the expected workload: ``--requests N`` asserts the
-summary served exactly N requests, ``--min-tokens T`` floors
-``tokens_generated``.
+summary completed exactly N requests, ``--min-tokens T`` floors
+``tokens_generated``, and ``--chaos`` additionally requires the fault
+schedule to have fired (at least one injected fault of each scheduled
+class reached the server) with zero failed requests.
 
 Usage: python tools/check_serve.py serve.log [--requests N]
-       [--min-tokens T]
+       [--min-tokens T] [--chaos]
 Exit code 0 = clean; 1 = problems (listed one per line).
 """
 
@@ -26,6 +35,9 @@ import argparse
 import json
 import pathlib
 import sys
+
+OUTCOME_KEYS = ("completed", "timed_out", "failed", "rejected",
+                "evicted", "retried")
 
 
 def _json_lines(text: str) -> list[dict]:
@@ -43,8 +55,68 @@ def _json_lines(text: str) -> list[dict]:
     return out
 
 
+def _check_outcomes(s: dict, problems: list[str]) -> None:
+    outcomes = s.get("outcomes")
+    if not isinstance(outcomes, dict):
+        problems.append("summary: missing outcome counters "
+                        "(\"outcomes\": {...})")
+        return
+    for key in OUTCOME_KEYS:
+        if not isinstance(outcomes.get(key), int):
+            problems.append(f"summary: outcome counter {key!r} missing or "
+                            f"non-integer, got {outcomes.get(key)!r}")
+    submitted = s.get("submitted")
+    if not isinstance(submitted, int):
+        problems.append(f"summary: missing integer \"submitted\" count, "
+                        f"got {submitted!r}")
+        return
+    terminal = sum(outcomes.get(k) or 0 for k in
+                   ("completed", "timed_out", "failed", "rejected"))
+    if terminal != submitted:
+        problems.append(
+            f"summary: request conservation violated — submitted="
+            f"{submitted} but completed+timed_out+failed+rejected="
+            f"{terminal} (a request was lost or double-counted)")
+
+
+def _check_ttft(s: dict, problems: list[str]) -> None:
+    ttft = s.get("ttft_ms")
+    if not isinstance(ttft, dict):
+        problems.append("summary: missing TTFT percentiles "
+                        "(\"ttft_ms\": {\"p50\": ..., \"p99\": ...})")
+        return
+    completed = (s.get("outcomes") or {}).get("completed", 0)
+    for key in ("p50", "p99"):
+        v = ttft.get(key)
+        if completed and not isinstance(v, (int, float)):
+            problems.append(f"summary: ttft_ms.{key} must be numeric when "
+                            f"requests completed, got {v!r}")
+
+
+def _check_chaos(rows: list[dict], s: dict, problems: list[str]) -> None:
+    plans = [r["fault_plan"] for r in rows if "fault_plan" in r]
+    if not plans:
+        problems.append("chaos: no parseable {\"fault_plan\": ...} line "
+                        "(was --chaos passed to serve?)")
+    faults = s.get("faults")
+    if not isinstance(faults, dict):
+        problems.append("chaos: summary has no \"faults\" record")
+        return
+    scheduled = {e.get("kind") for e in faults.get("schedule", [])}
+    fired = {e.get("kind") for e in faults.get("fired", [])
+             if not e.get("skipped")}
+    missing = scheduled - fired
+    if missing:
+        problems.append(f"chaos: scheduled fault class(es) never fired: "
+                        f"{sorted(missing)}")
+    failed = (s.get("outcomes") or {}).get("failed", 0)
+    if failed:
+        problems.append(f"chaos: {failed} request(s) FAILED under the "
+                        f"smoke schedule (retry budget should absorb it)")
+
+
 def check(text: str, requests: int | None = None,
-          min_tokens: int = 1) -> list[str]:
+          min_tokens: int = 1, chaos: bool = False) -> list[str]:
     problems: list[str] = []
     rows = _json_lines(text)
 
@@ -67,16 +139,20 @@ def check(text: str, requests: int | None = None,
     if not summaries:
         problems.append("no parseable serve summary JSON line "
                         "(tokens_generated)")
-    else:
-        s = summaries[-1]
-        if s.get("tokens_generated", 0) < min_tokens:
-            problems.append(f"summary: tokens_generated "
-                            f"{s.get('tokens_generated')} < {min_tokens}")
-        if requests is not None and s.get("requests") != requests:
-            problems.append(f"summary: served {s.get('requests')} requests, "
-                            f"expected {requests}")
-        elif requests is None and s.get("requests", 0) < 1:
-            problems.append("summary: no requests completed")
+        return problems
+    s = summaries[-1]
+    if s.get("tokens_generated", 0) < min_tokens:
+        problems.append(f"summary: tokens_generated "
+                        f"{s.get('tokens_generated')} < {min_tokens}")
+    if requests is not None and s.get("requests") != requests:
+        problems.append(f"summary: served {s.get('requests')} requests, "
+                        f"expected {requests}")
+    elif requests is None and s.get("requests", 0) < 1:
+        problems.append("summary: no requests completed")
+    _check_outcomes(s, problems)
+    _check_ttft(s, problems)
+    if chaos:
+        _check_chaos(rows, s, problems)
     return problems
 
 
@@ -86,6 +162,9 @@ def main(argv: list[str]) -> int:
                     help="captured stdout of repro.launch.serve")
     ap.add_argument("--requests", type=int, default=None)
     ap.add_argument("--min-tokens", type=int, default=1)
+    ap.add_argument("--chaos", action="store_true",
+                    help="require the fault schedule to have fired with "
+                         "zero FAILED requests")
     args = ap.parse_args(argv[1:])
 
     try:
@@ -94,12 +173,13 @@ def main(argv: list[str]) -> int:
         print(f"{args.log}: unreadable ({e!r})")
         return 1
     problems = check(text, requests=args.requests,
-                     min_tokens=args.min_tokens)
+                     min_tokens=args.min_tokens, chaos=args.chaos)
     for p in problems:
         print(p)
     if not problems:
         print(f"ok: {args.log} (serving_plan parsed, positive predicted "
-              f"throughput, queue drained)")
+              f"throughput, queue drained, outcomes conserve the "
+              f"submitted count{', chaos schedule fired' if args.chaos else ''})")
     return 1 if problems else 0
 
 
