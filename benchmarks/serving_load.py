@@ -1,0 +1,337 @@
+"""Traffic-shaped serving benchmark: drive `serve_loop` with seeded load
+mixes and emit ``BENCH_serving.json``, the end-to-end analogue of
+``BENCH_kernels.json``.
+
+The paper's methodology validates a design by *measured* performance on
+the target workload, not per-kernel numbers; this harness is that
+measurement for the serving stack.  Each mix in :data:`MIXES` is a
+seeded workload shape (`runtime.loadgen`):
+
+* ``steady``      — open-loop Poisson arrivals at ~half the predicted
+  capacity: the regime `select_serving_batch` prices, staggered prompt
+  lengths matching the sweep's slot-depth model.
+* ``bursty``      — open-loop arrivals at ~3x predicted capacity: an
+  overload burst that builds a queue, the regime TTFT SLOs exist for.
+* ``interactive`` — closed-loop think-time sessions: each user submits
+  the next request only after the previous answer, so a slow server
+  sheds its own offered load.
+
+Every mix runs on the **virtual clock** (one predicted decode-step of
+time per loop step), so TTFT / per-token percentiles and tokens/sec are
+deterministic "model-milliseconds": same seeds, same numbers, on any
+machine.  Wall-clock measurements ride along in each mix's ``wall``
+block (a VOLATILE field, see `loadgen.strip_volatile`) — the
+predicted-vs-measured step-time loop of the coarse-grain estimator.
+
+SLO budgets are priced in *steps* (``ttft_p99_steps`` etc.) and
+converted to ms at the mix's predicted step time, so a cost-model change
+rescales the budget and the measurement together; the gate
+(`tools/check_load.py`) only breaks when *scheduling* regresses — queue
+growth, slot starvation, lost requests — not when the analytic model is
+retuned.
+
+Always runs the smoke (CPU-sized) model config; ``--smoke`` shrinks the
+request counts for CI.  See docs/SERVING_BENCH.md.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import pathlib
+import platform
+import tempfile
+import time
+
+import numpy as np
+
+SERVING_SCHEMA = 1
+
+# One entry per workload shape.  `requests` is the full-run count,
+# `smoke_requests` the CI count; slo budgets are denominated in decode
+# steps of the mix's predicted step time (see module docstring).
+MIXES: dict[str, dict] = {
+    "steady": {
+        "kind": "open",
+        "seed": 11,
+        "requests": 24,
+        "smoke_requests": 10,
+        "rate_factor": 0.5,            # x predicted capacity
+        "prompt_dist": {"kind": "staggered", "base": 8, "spread": 8},
+        "gen_dist": {"kind": "fixed", "value": 8},
+        "queue_limit": 0,
+        "slo": {"ttft_p99_steps": 30, "per_token_p99_steps": 3,
+                "min_tok_per_step_frac": 0.15},
+    },
+    "bursty": {
+        "kind": "open",
+        "seed": 13,
+        "requests": 28,
+        "smoke_requests": 12,
+        "rate_factor": 3.0,            # overload: arrivals outrun capacity
+        "prompt_dist": {"kind": "uniform", "lo": 6, "hi": 14},
+        "gen_dist": {"kind": "choice", "values": [4, 8, 16],
+                     "weights": [0.5, 0.375, 0.125]},
+        # cap the sweep so the burst actually outruns the server and the
+        # queue (and TTFT tail) is exercised, not absorbed by slots
+        "batch_candidates": [1, 2, 4],
+        "queue_limit": 0,
+        "slo": {"ttft_p99_steps": 90, "per_token_p99_steps": 3,
+                "min_tok_per_step_frac": 0.3},
+    },
+    "interactive": {
+        "kind": "closed",
+        "seed": 17,
+        "sessions": 4,
+        "requests": 24,
+        "smoke_requests": 12,
+        "think_steps": {"kind": "exponential", "mean": 5.0},
+        "prompt_dist": {"kind": "uniform", "lo": 8, "hi": 12},
+        "gen_dist": {"kind": "fixed", "value": 6},
+        "queue_limit": 0,
+        "slo": {"ttft_p99_steps": 30, "per_token_p99_steps": 3,
+                "min_tok_per_step_frac": 0.05},
+    },
+}
+
+
+def build_trace(spec: dict, n: int, step_s: float, batch: int):
+    """The mix's seeded trace.  Lengths are drawn *before* arrivals (the
+    batch sweep needs the slot-depth distribution, the arrival rate needs
+    the chosen batch's step time), from independent seeded streams so the
+    two-phase construction stays deterministic."""
+    seed = spec["seed"]
+    len_rng = np.random.default_rng(seed)
+    from repro.runtime import loadgen
+    prompts = [max(1, p) for p in
+               loadgen.sample_lengths(len_rng, n, spec["prompt_dist"])]
+    gens = [max(1, g) for g in
+            loadgen.sample_lengths(len_rng, n, spec["gen_dist"])]
+
+    if spec["kind"] == "open":
+        mean_gen = sum(gens) / n
+        # capacity ~= batch slots finishing every (gen+1) steps
+        rate_rps = spec["rate_factor"] * batch / ((mean_gen + 1.0) * step_s)
+        gaps = np.random.default_rng(seed + 1).exponential(
+            1.0 / rate_rps, size=n)
+        arrivals = np.cumsum(gaps)
+        thinks = [0.0] * n
+    else:
+        n_sessions = spec["sessions"]
+        # sessions_from_trace round-robins rids: session si starts with
+        # rid si — stagger those first arrivals one step apart.
+        arrivals = np.array([(i % n_sessions) * step_s for i in range(n)])
+        think_steps = loadgen.sample_times(
+            np.random.default_rng(seed + 2), n, spec["think_steps"])
+        thinks = [t * step_s for t in think_steps]
+        rate_rps = None
+
+    trace = [loadgen.TraceRequest(
+        rid=i, arrival_s=float(arrivals[i]), prompt_len=prompts[i],
+        gen_len=gens[i], think_s=thinks[i]) for i in range(n)]
+    return trace, rate_rps
+
+
+def run_mix(cfg, name: str, spec: dict, *, smoke: bool = False,
+            batch: int = 0, batch_candidates=(1, 2, 4, 8),
+            emit_dir=None) -> dict:
+    """Run one load mix end-to-end and return its report row.  ``batch``
+    forces the decode batch (0 = `select_serving_batch` picks); tests use
+    the override to replay the same trace at two batch sizes."""
+    import jax.numpy as jnp
+
+    from repro.kernels import autotune
+    from repro.launch import serve, specs
+    from repro.launch.mesh import make_host_mesh, set_mesh
+    from repro.parallel import sharding as shd
+    from repro.runtime import fault_tolerance, loadgen
+    from repro.runtime.lifecycle import Lifecycle
+
+    n = spec["smoke_requests"] if smoke else spec["requests"]
+    seed = spec["seed"]
+
+    # Phase 1: lengths only — the workload's slot-depth distribution the
+    # batch sweep prices (same midpoint model as launch/serve.py).
+    len_rng = np.random.default_rng(seed)
+    prompts = [max(1, p) for p in
+               loadgen.sample_lengths(len_rng, n, spec["prompt_dist"])]
+    gens = [max(1, g) for g in
+            loadgen.sample_lengths(len_rng, n, spec["gen_dist"])]
+    prefill_len = max(prompts)
+    max_len = max(p + g for p, g in zip(prompts, gens)) + 8
+    dist = sorted(p + g // 2 for p, g in zip(prompts, gens))
+
+    if batch > 0:
+        step_us = autotune.predict_decode_step_us(
+            cfg, batch, cache_len=max_len, kv_dtype=jnp.float32,
+            lengths=autotune._quantile_lengths(batch, dist, max_len))
+        decision = {"batch": batch, "source": "flag",
+                    "predicted_step_us": round(step_us, 3)}
+    else:
+        batch_candidates = spec.get("batch_candidates", batch_candidates)
+        cands = [c for c in batch_candidates if c <= n] \
+            or [min(batch_candidates)]
+        decision = autotune.select_serving_batch(
+            cfg, cache_len=max_len, prefill_len=prefill_len,
+            kv_dtype=jnp.float32, candidates=tuple(cands),
+            slot_lengths=dist)
+        decision["source"] = "autotune"
+        batch = decision["batch"]
+        step_us = decision["predicted_step_us"]
+    # The virtual clock runs at the predicted step time floored to one
+    # model-ms (loadgen.MIN_VIRTUAL_STEP_US); predicted-vs-measured keeps
+    # the raw prediction.
+    clock_us = loadgen.virtual_step_us(step_us)
+    step_s = clock_us * 1e-6
+
+    # Phase 2: arrivals at a rate derived from the chosen batch's
+    # predicted capacity, then the virtual-clock run itself.
+    trace, rate_rps = build_trace(spec, n, step_s, batch)
+    if emit_dir is not None:
+        loadgen.save_trace(pathlib.Path(emit_dir) / f"{name}.jsonl", trace)
+
+    clock = loadgen.VirtualClock(step_s)
+    lc = Lifecycle(queue_limit=spec.get("queue_limit", 0), clock=clock)
+    if spec["kind"] == "closed":
+        source = loadgen.SessionSource(
+            loadgen.sessions_from_trace(trace, spec["sessions"]),
+            cfg.vocab_size, seed=seed)
+    else:
+        source = loadgen.TraceSource(trace, cfg.vocab_size, seed=seed)
+
+    mesh = make_host_mesh(data=1, model=1)
+    with set_mesh(mesh), shd.use_rules(specs.rules_for(mesh)):
+        server = serve.Server(cfg, batch, max_len, prefill_len=prefill_len,
+                              slot_lengths=dist)
+        recorder = loadgen.StepTimeRecorder(
+            fault_tolerance.DecodeWatchdog(step_us))
+        t0 = time.time()
+        stats = serve.serve_loop(server, lc, watchdog=recorder,
+                                 source=source)
+        wall = time.time() - t0
+
+    metrics = loadgen.collect_metrics(lc, predicted_step_us=step_us,
+                                      step_times=recorder.times,
+                                      queue_depth=source.queue_depth)
+
+    # SLO evaluation: budgets priced in steps, converted at this mix's
+    # predicted step time (see module docstring).
+    budgets = spec["slo"]
+    step_ms = clock_us * 1e-3
+    slo = {
+        "ttft_p99_ms": round(budgets["ttft_p99_steps"] * step_ms, 3),
+        "per_token_p99_ms": round(
+            budgets["per_token_p99_steps"] * step_ms, 3),
+        "min_tok_per_s": round(
+            budgets["min_tok_per_step_frac"] * batch / step_s, 3),
+        "budget_steps": dict(budgets),
+    }
+    violations = []
+    ttft_p99 = metrics["ttft_ms"]["p99"]
+    if ttft_p99 is None or ttft_p99 > slo["ttft_p99_ms"]:
+        violations.append(
+            f"ttft p99 {ttft_p99} ms > budget {slo['ttft_p99_ms']} ms")
+    ptok_p99 = metrics["per_token_ms"]["p99"]
+    if ptok_p99 is None or ptok_p99 > slo["per_token_p99_ms"]:
+        violations.append(
+            f"per-token p99 {ptok_p99} ms > budget "
+            f"{slo['per_token_p99_ms']} ms")
+    tok_per_s = metrics["tok_per_s"]
+    if tok_per_s is None or tok_per_s < slo["min_tok_per_s"]:
+        violations.append(
+            f"sustained {tok_per_s} tok/s < floor {slo['min_tok_per_s']}")
+
+    row = {
+        "name": name,
+        "kind": spec["kind"],
+        "seed": seed,
+        "batch": batch,
+        "batch_source": decision["source"],
+        "serving_plan": {k: decision[k] for k in
+                         ("batch", "predicted_step_us",
+                          "predicted_tok_per_s", "latency_budget_ms")
+                         if k in decision},
+        "step_time_us": round(clock_us, 3),
+        "rate_rps": None if rate_rps is None else round(rate_rps, 3),
+        "trace": [t.record() for t in trace],
+        "decode_steps": stats["steps"],
+        "generated": stats["generated"],
+        **metrics,
+        "slo": slo,
+        "slo_ok": not violations,
+        "slo_violations": violations,
+        "wall": {"wall_s": round(wall, 3),
+                 "wall_tok_per_s": round(stats["generated"]
+                                         / max(wall, 1e-9), 1),
+                 **recorder.summary()},
+    }
+    return row
+
+
+def build_report(arch: str = "qwen3_14b", mixes=None, smoke: bool = False,
+                 emit_dir=None) -> dict:
+    """The full BENCH_serving.json payload.  Always measures the smoke
+    (CPU-sized) model config — the harness gates *scheduling*, which is
+    model-size-independent on the virtual clock; non-smoke mode only
+    scales the request counts."""
+    import jax
+
+    import repro.configs as configs
+
+    cfg = configs.get_smoke(arch)
+    names = list(mixes) if mixes else list(MIXES)
+    rows = {}
+    for name in names:
+        rows[name] = run_mix(cfg, name, MIXES[name], smoke=smoke,
+                             emit_dir=emit_dir)
+        r = rows[name]
+        print(json.dumps({"mix": name, "batch": r["batch"],
+                          "ttft_ms": r["ttft_ms"],
+                          "per_token_ms": r["per_token_ms"],
+                          "tok_per_s": r["tok_per_s"],
+                          "queue_depth_max": r["queue_depth_max"],
+                          "slo_ok": r["slo_ok"],
+                          "slo_violations": r["slo_violations"]}))
+    return {
+        "schema": SERVING_SCHEMA,
+        "arch": cfg.name,
+        "backend": jax.default_backend(),
+        "host": platform.machine(),
+        "smoke": bool(smoke),
+        "mixes": rows,
+        "slo_ok": all(r["slo_ok"] for r in rows.values()),
+    }
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="BENCH_serving.json")
+    ap.add_argument("--arch", default="qwen3_14b")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI request counts (same mixes, same schema)")
+    ap.add_argument("--mixes", nargs="+", default=None,
+                    choices=sorted(MIXES))
+    ap.add_argument("--emit-traces", default=None, metavar="DIR",
+                    help="also write each mix's trace as DIR/<mix>.jsonl "
+                         "(replayable via launch.serve --load-trace)")
+    args = ap.parse_args(argv)
+
+    # Tune fresh in a throwaway cache unless the caller pinned one — the
+    # report must reflect the code under benchmark (same rule as run.py).
+    if "REPRO_AUTOTUNE_CACHE" not in os.environ:
+        os.environ["REPRO_AUTOTUNE_CACHE"] = os.path.join(
+            tempfile.mkdtemp(prefix="repro-serving-"), "autotune.json")
+    if args.emit_traces:
+        pathlib.Path(args.emit_traces).mkdir(parents=True, exist_ok=True)
+
+    report = build_report(args.arch, mixes=args.mixes, smoke=args.smoke,
+                          emit_dir=args.emit_traces)
+    with open(args.out, "w") as f:
+        json.dump(report, f, indent=1, sort_keys=True)
+    print(f"# wrote {args.out}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

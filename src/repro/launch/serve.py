@@ -27,7 +27,12 @@ The robustness layer on top (see docs/ROBUSTNESS.md):
 * a decode watchdog (`runtime.fault_tolerance.DecodeWatchdog`) comparing
   measured step time against `predict_decode_step_us`;
 * ``--chaos --fault-seed N``: a deterministic fault schedule
-  (`runtime.faults`) injecting one fault of each class.
+  (`runtime.faults`) injecting one fault of each class;
+* ``--load-trace trace.jsonl``: replay a seeded `runtime.loadgen` trace —
+  arrivals fire on a deterministic virtual clock (one predicted
+  decode-step of time per loop step), the replay path behind the
+  traffic-shaped benchmark `benchmarks/serving_load.py`
+  (docs/SERVING_BENCH.md).
 
 The final summary line conserves every submitted request exactly once:
 ``submitted == completed + timed_out + failed + rejected``.  Runs on CPU
@@ -54,7 +59,7 @@ from repro.launch.mesh import make_host_mesh, set_mesh
 from repro.launch import specs
 from repro.models import transformer
 from repro.parallel import sharding as shd
-from repro.runtime import fault_tolerance, faults
+from repro.runtime import fault_tolerance, faults, loadgen
 from repro.runtime.lifecycle import Lifecycle, State
 
 
@@ -201,20 +206,41 @@ class Server:
 
 
 def serve_loop(server: Server, lc: Lifecycle, *, watchdog=None,
-               max_steps: int = 100_000) -> dict:
+               max_steps: int = 100_000, source=None) -> dict:
     """Drain every admitted request to a terminal state.
 
     The loop invariant replacing the old ``while completed < requests``
-    spin: it runs while *any* request is non-terminal, and every iteration
-    either fills a slot, decodes, jumps the virtual clock to the next
-    retry-backoff eligibility, or raises with the lifecycle table — no
-    silent no-progress spinning.  Returns loop-level stats for the summary
-    (generated token count, steps, kernel fallbacks).
+    spin: it runs while *any* request is non-terminal (or an arrival
+    ``source`` still has requests to submit), and every iteration either
+    fills a slot, decodes, jumps the virtual clock to the next
+    retry-backoff eligibility or arrival, or raises with the lifecycle
+    table — no silent no-progress spinning.  Returns loop-level stats for
+    the summary (generated token count, steps, kernel fallbacks).
+
+    ``source`` (optional, see `runtime.loadgen`) is pumped every
+    iteration: it submits trace requests whose arrival time has been
+    reached on the lifecycle clock.  The loop drives any injected clock
+    exposing ``on_step`` with its step counter *before* pumping, filling
+    slots, or sweeping deadlines — so a virtual clock (one predicted
+    decode-step per loop step) makes arrivals, deadlines, TTFT, and
+    per-token latencies fully deterministic.  (Previously an injected
+    clock was only ever *read*, never advanced, so chaos/load runs got
+    wall-clock — i.e. non-reproducible — TTFT percentiles.)
     """
     step = 0
     generated = 0
     kernel_fallbacks = 0
-    while lc.open_count() > 0:
+    tick = getattr(lc.clock, "on_step", None)
+
+    def pending() -> bool:
+        return (lc.open_count() > 0
+                or (source is not None and not source.exhausted()))
+
+    while pending():
+        if tick is not None:
+            tick(step)
+        if source is not None:
+            source.pump(lc, step)
         if step > max_steps:
             raise RuntimeError(
                 f"serve loop exceeded {max_steps} steps without draining; "
@@ -246,21 +272,25 @@ def serve_loop(server: Server, lc: Lifecycle, *, watchdog=None,
             tslot = np.nonzero(server.slot_req == req.rid)[0]
             if tslot.size:
                 server.release_slot(int(tslot[0]))
-        if lc.open_count() == 0:
+        if not pending():
             break
         # -- progress check -------------------------------------------------
         occupied = server.slot_req >= 0
         if not occupied.any():
-            nxt_step = lc.next_eligible_step()
-            if nxt_step is None:
+            jumps = [s for s in (
+                lc.next_eligible_step(),
+                source.next_arrival_step(lc, step)
+                if source is not None else None) if s is not None]
+            if not jumps:
                 raise RuntimeError(
                     "serve loop stalled: no occupied slots, empty queue, "
                     f"but {lc.open_count()} request(s) not in a terminal "
                     f"state — a request leaked.  Lifecycle table:\n"
                     f"{lc.table()}")
-            # every queued request is in retry backoff: jump the virtual
-            # clock to the earliest eligibility instead of spinning
-            step = max(step + 1, nxt_step)
+            # every queued request is in retry backoff (or the next trace
+            # arrival is in the future): jump the virtual clock to the
+            # earliest eligibility instead of spinning
+            step = max(step + 1, min(jumps))
             continue
         # -- one ragged decode step -----------------------------------------
         t0 = time.monotonic()
@@ -333,6 +363,14 @@ def main(argv=None):
                          "(one fault of each class)")
     ap.add_argument("--fault-seed", type=int, default=0,
                     help="seed for the --chaos fault schedule")
+    ap.add_argument("--load-trace", default=None,
+                    help="replay a runtime.loadgen JSONL trace: arrivals "
+                         "fire on a deterministic virtual clock (one "
+                         "predicted decode-step per loop step) instead of "
+                         "submitting --requests synthetic prompts at t0")
+    ap.add_argument("--step-time-us", type=float, default=0.0,
+                    help="virtual decode-step time for --load-trace "
+                         "replay; 0 = the tuner's predicted step time")
     args = ap.parse_args(argv)
 
     cfg = configs.get_smoke(args.arch) if args.smoke else configs.get(args.arch)
@@ -341,14 +379,28 @@ def main(argv=None):
         return 0
     mesh = make_host_mesh(data=1, model=1)
     rules = specs.rules_for(mesh)
-    max_len = args.prompt_len + args.gen + 8
 
-    # Steady-state slot-depth distribution: continuous batching staggers
-    # occupied slots roughly uniformly across [prompt, prompt + gen] — the
-    # length model the batch sweep and the decode-plan tuning both price.
-    n_dist = max(args.batch_candidates + [args.batch, 1])
-    dist = [args.prompt_len + ((2 * i + 1) * args.gen) // (2 * n_dist)
-            for i in range(n_dist)]
+    trace = None
+    if args.load_trace:
+        # Replay mode: the workload comes from the trace file, so the
+        # slot-depth distribution and cache allocation are derived from
+        # its actual lengths (midpoint depth per request = a slot serving
+        # it spends its steady state there).
+        trace = loadgen.load_trace(args.load_trace)
+        args.requests = len(trace)
+        prefill_len = max(t.prompt_len for t in trace)
+        max_len = max(t.prompt_len + t.gen_len for t in trace) + 8
+        dist = sorted(t.prompt_len + t.gen_len // 2 for t in trace)
+    else:
+        prefill_len = args.prompt_len
+        max_len = args.prompt_len + args.gen + 8
+        # Steady-state slot-depth distribution: continuous batching
+        # staggers occupied slots roughly uniformly across
+        # [prompt, prompt + gen] — the length model the batch sweep and
+        # the decode-plan tuning both price.
+        n_dist = max(args.batch_candidates + [args.batch, 1])
+        dist = [args.prompt_len + ((2 * i + 1) * args.gen) // (2 * n_dist)
+                for i in range(n_dist)]
 
     if args.batch > 0:
         batch = args.batch
@@ -364,7 +416,7 @@ def main(argv=None):
         # distribution — the ragged batch the kernel actually skips on,
         # not the batch-max broadcast that over-charges every short slot.
         decision = autotune.select_serving_batch(
-            cfg, cache_len=max_len, prefill_len=args.prompt_len,
+            cfg, cache_len=max_len, prefill_len=prefill_len,
             kv_dtype=jnp.float32,          # the Server's cache dtype
             candidates=tuple(cands),
             slot_lengths=dist,
@@ -381,23 +433,38 @@ def main(argv=None):
         print(json.dumps({"fault_plan": {"seed": args.fault_seed,
                                          "schedule": plan.record()}}))
 
-    rng = np.random.default_rng(0)
-    reqs = [(i, rng.integers(0, cfg.vocab_size, size=args.prompt_len),
-             args.gen) for i in range(args.requests)]
-
-    lc = Lifecycle(queue_limit=args.queue_limit,
-                   max_retries=args.max_retries)
-    for rid, prompt, gen in reqs:
-        lc.submit(rid, prompt, gen,
-                  ttft_deadline_s=(args.ttft_ms / 1e3
-                                   if args.ttft_ms else None),
-                  deadline_s=(args.deadline_ms / 1e3
-                              if args.deadline_ms else None))
+    source = None
+    step_us = None
+    if trace is not None:
+        # Virtual clock: one predicted decode-step of wall time per loop
+        # step, so TTFT / per-token percentiles are deterministic and
+        # denominated in model-milliseconds.
+        step_us = args.step_time_us or loadgen.virtual_step_us(
+            decision.get("predicted_step_us")
+            or autotune.predict_decode_step_us(
+                cfg, batch, cache_len=max_len, kv_dtype=jnp.float32,
+                lengths=autotune._quantile_lengths(batch, dist, max_len)))
+        clock = loadgen.VirtualClock(step_us * 1e-6)
+        source = loadgen.TraceSource(trace, cfg.vocab_size)
+        lc = Lifecycle(queue_limit=args.queue_limit,
+                       max_retries=args.max_retries, clock=clock)
+    else:
+        rng = np.random.default_rng(0)
+        reqs = [(i, rng.integers(0, cfg.vocab_size, size=args.prompt_len),
+                 args.gen) for i in range(args.requests)]
+        lc = Lifecycle(queue_limit=args.queue_limit,
+                       max_retries=args.max_retries)
+        for rid, prompt, gen in reqs:
+            lc.submit(rid, prompt, gen,
+                      ttft_deadline_s=(args.ttft_ms / 1e3
+                                       if args.ttft_ms else None),
+                      deadline_s=(args.deadline_ms / 1e3
+                                  if args.deadline_ms else None))
 
     try:
         with set_mesh(mesh), shd.use_rules(rules):
             server = Server(cfg, batch, max_len,
-                            prefill_len=args.prompt_len,
+                            prefill_len=prefill_len,
                             slot_lengths=dist, injector=injector)
             predicted_us = (autotune.predict_decode_step_us(
                 cfg, batch, cache_len=max_len, kv_dtype=jnp.float32,
@@ -406,7 +473,7 @@ def main(argv=None):
                 if server.kernel_plan else None)
             watchdog = fault_tolerance.DecodeWatchdog(predicted_us)
             t0 = time.time()
-            stats = serve_loop(server, lc, watchdog=watchdog)
+            stats = serve_loop(server, lc, watchdog=watchdog, source=source)
             wall = time.time() - t0
     finally:
         autotune.install_dispatch_hook(None)
@@ -425,12 +492,21 @@ def main(argv=None):
         "retries_total": lc.retried_events,
         "kernel_fallbacks": stats["kernel_fallbacks"],
         "ttft_ms": lc.ttft_percentiles(),
+        "per_token_ms": lc.per_token_percentiles(),
         "request_outcomes": lc.outcome_trace(),
         "watchdog": watchdog.summary(),
         "kernel_plan": [p.record() for p in server.kernel_plan],
     }
     if injector is not None:
         summary["faults"] = injector.record()
+    if source is not None:
+        summary["load"] = {
+            "trace": args.load_trace,
+            "arrivals": len(trace),
+            "step_time_us": round(step_us, 3),
+            "queue_depth_max": max((q[1] for q in source.queue_depth),
+                                   default=0),
+        }
     print(json.dumps(summary))
     return 0
 

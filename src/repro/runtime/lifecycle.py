@@ -85,6 +85,7 @@ class Request:
     retries: int = 0
     not_before_step: int = 0                 # retry-backoff eligibility
     first_token_t: float | None = None
+    finish_t: float | None = None            # clock time of terminal entry
     tokens: list = dataclasses.field(default_factory=list)
     history: list = dataclasses.field(default_factory=list)  # (state, step)
 
@@ -93,6 +94,17 @@ class Request:
         if self.first_token_t is None:
             return None
         return (self.first_token_t - self.submit_t) * 1e3
+
+    @property
+    def per_token_ms(self) -> float | None:
+        """Mean decode latency per post-first token, on the lifecycle
+        clock (virtual-deterministic when a virtual clock is injected)."""
+        if self.first_token_t is None or self.finish_t is None:
+            return None
+        extra = len(self.tokens) - 1
+        if extra < 1:
+            return None
+        return (self.finish_t - self.first_token_t) * 1e3 / extra
 
     def outcome(self) -> dict:
         """The JSON-able per-request row of the serving summary (and the
@@ -138,6 +150,7 @@ class Lifecycle:
                       deadline_s=deadline_s)
         if self.queue_limit and len(self._queue) >= self.queue_limit:
             req.state = State.REJECTED
+            req.finish_t = req.submit_t
             req.history.append((State.REJECTED, -1))
         else:
             req.history.append((State.QUEUED, -1))
@@ -170,6 +183,8 @@ class Lifecycle:
                 f"request {req.rid}: illegal transition "
                 f"{req.state.value} -> {new.value} at step {step}")
         req.state = new
+        if new in TERMINAL:
+            req.finish_t = self.clock()
         req.history.append((new, step))
 
     def record_first_token(self, req: Request) -> None:
@@ -249,13 +264,12 @@ class Lifecycle:
         return terminal == self.submitted
 
     def ttft_percentiles(self) -> dict:
-        vals = [r.ttft_ms for r in self.requests.values()
-                if r.ttft_ms is not None]
-        if not vals:
-            return {"p50": None, "p99": None, "n": 0}
-        p50, p99 = np.percentile(vals, [50, 99])
-        return {"p50": round(float(p50), 3), "p99": round(float(p99), 3),
-                "n": len(vals)}
+        return _percentiles([r.ttft_ms for r in self.requests.values()
+                             if r.ttft_ms is not None])
+
+    def per_token_percentiles(self) -> dict:
+        return _percentiles([r.per_token_ms for r in self.requests.values()
+                             if r.per_token_ms is not None])
 
     def outcome_trace(self) -> list[dict]:
         """Per-request final states + retry counts, rid-ordered — the
@@ -274,6 +288,14 @@ class Lifecycle:
             lines.append(f"{rid:>5}  {r.state.value:<11} {r.retries:>7}  "
                          f"{len(r.tokens):>6}  {hist}")
         return "\n".join(lines)
+
+
+def _percentiles(vals: list) -> dict:
+    if not vals:
+        return {"p50": None, "p99": None, "n": 0}
+    p50, p99 = np.percentile(vals, [50, 99])
+    return {"p50": round(float(p50), 3), "p99": round(float(p99), 3),
+            "n": len(vals)}
 
 
 def submit_all(lc: Lifecycle, requests: Sequence[tuple], *,

@@ -6,9 +6,13 @@ Pure-python — no jax, no server."""
 
 import numpy as np
 import pytest
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # minimal env: property tests skip, rest run
+    from _hypothesis_stub import given, settings, st
 
-from repro.runtime.lifecycle import (Lifecycle, State, TransitionError,
-                                     submit_all)
+from repro.runtime.lifecycle import (_ALLOWED, Lifecycle, State,
+                                     TransitionError, submit_all)
 
 
 def _lc(**kw):
@@ -246,6 +250,27 @@ def test_outcome_trace_is_rid_ordered_and_json_shaped():
     json.dumps(trace)
 
 
+def test_finish_t_set_on_every_terminal_entry():
+    clock = FakeClock()
+    lc = _lc(clock=clock, queue_limit=1)
+    done = lc.submit(0, [1], 2)
+    rejected = lc.submit(1, [1], 2)          # over the bound: terminal now
+    assert rejected.finish_t == rejected.submit_t
+    lc.pop_ready(0)
+    lc.transition(done, State.PREFILLING, 0)
+    clock.t = 0.1
+    lc.record_first_token(done)
+    lc.transition(done, State.DECODING, 0)
+    done.tokens = [1, 2, 3]
+    clock.t = 0.3
+    lc.transition(done, State.COMPLETED, 2)
+    assert done.finish_t == pytest.approx(0.3)
+    # mean decode latency per post-first token: (0.3 - 0.1) s / 2 tokens
+    assert done.per_token_ms == pytest.approx(100.0)
+    p = lc.per_token_percentiles()
+    assert p["n"] == 1 and p["p50"] == pytest.approx(100.0)
+
+
 def test_table_names_every_request_and_history():
     lc = _lc(max_retries=0)
     req = lc.submit(7, [1], 1)
@@ -255,3 +280,102 @@ def test_table_names_every_request_and_history():
     table = lc.table()
     assert "7" in table and "failed" in table
     assert "prefilling@2" in table and "evicted@3" in table
+
+# ---------------------------------------------------------------------------
+# property-based: conservation under randomized schedules
+# ---------------------------------------------------------------------------
+
+def _random_drive(seed: int, n: int, queue_limit: int,
+                  max_retries: int) -> Lifecycle:
+    """A seeded adversarial serve loop over the lifecycle's public
+    surface: random arrival steps, random TTFT/total deadlines, random
+    prefill/decode faults (evictions), two decode slots.  Pure python —
+    the property tests assert the *tracker's* invariants, not the
+    server's."""
+    rng = np.random.default_rng(seed)
+    clock = FakeClock()
+    lc = Lifecycle(queue_limit=queue_limit, max_retries=max_retries,
+                   backoff_steps=2, clock=clock)
+    arrivals = sorted(int(a) for a in rng.integers(0, 30, size=n))
+    slots: dict[int, int] = {}               # rid -> tokens remaining
+    next_rid = 0
+    for step in range(500):
+        clock.t = step * 0.1
+        while next_rid < n and arrivals[next_rid] <= step:
+            kw = {}
+            if rng.random() < 0.3:
+                kw["ttft_deadline_s"] = float(rng.uniform(0.1, 2.0))
+            if rng.random() < 0.3:
+                kw["deadline_s"] = float(rng.uniform(0.5, 4.0))
+            lc.submit(next_rid, [1, 2], int(rng.integers(1, 6)), **kw)
+            next_rid += 1
+        while len(slots) < 2:                # fill
+            req = lc.pop_ready(step)
+            if req is None:
+                break
+            lc.transition(req, State.PREFILLING, step)
+            if rng.random() < 0.15:          # prefill fault
+                lc.evict(req, step)
+                continue
+            req.tokens.append(0)
+            lc.record_first_token(req)
+            lc.transition(req, State.DECODING, step)
+            slots[req.rid] = req.gen_len
+        for req in lc.check_deadlines(step):
+            slots.pop(req.rid, None)
+        for rid in list(slots):              # decode
+            req = lc.requests[rid]
+            if rng.random() < 0.05:          # decode fault
+                del slots[rid]
+                lc.evict(req, step)
+                continue
+            req.tokens.append(0)
+            slots[rid] -= 1
+            if slots[rid] <= 0:
+                del slots[rid]
+                lc.transition(req, State.COMPLETED, step)
+        if next_rid >= n and lc.open_count() == 0:
+            break
+    return lc
+
+
+def _assert_invariants(lc: Lifecycle, n: int) -> None:
+    assert lc.submitted == n
+    assert lc.open_count() == 0, lc.table()  # the schedule always drains
+    assert lc.conserved(), lc.table()
+    c = lc.counters()
+    assert (c["completed"] + c["timed_out"] + c["failed"]
+            + c["rejected"]) == n
+    for req in lc.requests.values():
+        states = [s for s, _ in req.history]
+        # no request skips a state: the recorded history starts at an
+        # initial state and walks only legal machine edges
+        assert states[0] in (State.QUEUED, State.REJECTED)
+        for a, b in zip(states, states[1:]):
+            assert b in _ALLOWED.get(a, frozenset()), (
+                f"rid {req.rid}: illegal recorded edge "
+                f"{a.value} -> {b.value}")
+        assert req.state is states[-1] and req.state in (
+            State.COMPLETED, State.TIMED_OUT, State.FAILED, State.REJECTED)
+        assert req.finish_t is not None      # terminal => finish stamped
+        if req.state is State.COMPLETED:
+            assert len(req.tokens) == req.gen_len + 1
+            assert req.first_token_t is not None
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 2**32 - 1), n=st.integers(1, 12),
+       queue_limit=st.integers(0, 3), max_retries=st.integers(0, 3))
+def test_property_conservation_under_random_schedules(seed, n, queue_limit,
+                                                      max_retries):
+    """For any seeded arrival/deadline/fault schedule: every submitted
+    request drains to exactly one terminal state through legal edges."""
+    _assert_invariants(_random_drive(seed, n, queue_limit, max_retries), n)
+
+
+@pytest.mark.parametrize("seed", range(10))
+def test_conservation_under_random_schedules_seeded(seed):
+    """Pinned-seed slice of the property above, so the invariant stays
+    covered in environments without hypothesis."""
+    _assert_invariants(_random_drive(seed, n=10, queue_limit=2,
+                                     max_retries=2), 10)

@@ -257,3 +257,148 @@ def test_check_serve_chaos_failed_requests_fail(tmp_path):
 def test_check_serve_unreadable_log_fails(tmp_path):
     assert check_serve.main(["check_serve.py",
                              str(tmp_path / "nope.log")]) == 1
+
+
+# ---------------------------------------------------------------------------
+# check_load
+# ---------------------------------------------------------------------------
+
+import check_load  # noqa: E402
+
+
+def _good_mix(name="steady", kind="open"):
+    """A minimal mix row that passes check_load: conservation holds and
+    every measured number sits inside its recorded SLO budget."""
+    return {
+        "name": name, "kind": kind, "seed": 11, "batch": 2,
+        "step_time_us": 1000.0,
+        "trace": [{"rid": i, "arrival_s": 0.0, "prompt_len": 4,
+                   "gen_len": 2, "think_s": 0.0} for i in range(4)],
+        "submitted": 4,
+        "outcomes": {"completed": 3, "timed_out": 0, "failed": 0,
+                     "rejected": 1, "evicted": 0, "retried": 0},
+        "conserved": True,
+        "tokens_total": 9,
+        "ttft_ms": {"p50": 1.0, "p99": 4.0, "n": 3},
+        "per_token_ms": {"p50": 1.0, "p99": 1.0, "n": 3},
+        "tok_per_s": 900.0,
+        "queue_depth": [[0, 2, 4]], "queue_depth_max": 2,
+        "predicted_vs_measured": {"predicted_step_us": 1000.0},
+        "requests": [{"rid": i, "state": ("rejected" if i == 3
+                                          else "completed"),
+                      "retries": 0, "tokens": 0 if i == 3 else 3,
+                      "ttft_ms": None if i == 3 else 1.0,
+                      "per_token_ms": None if i == 3 else 1.0}
+                     for i in range(4)],
+        "slo": {"ttft_p99_ms": 30.0, "per_token_p99_ms": 3.0,
+                "min_tok_per_s": 300.0,
+                "budget_steps": {"ttft_p99_steps": 30,
+                                 "per_token_p99_steps": 3,
+                                 "min_tok_per_step_frac": 0.15}},
+        "slo_ok": True, "slo_violations": [],
+        "wall": {"wall_s": 0.5},
+    }
+
+
+@pytest.fixture
+def good_serving_report():
+    return {"schema": check_load.SCHEMA, "arch": "x", "backend": "cpu",
+            "host": "x", "smoke": True,
+            "mixes": {"steady": _good_mix("steady"),
+                      "interactive": _good_mix("interactive", "closed")},
+            "slo_ok": True}
+
+
+def _write_serving(tmp_path, report):
+    p = tmp_path / "BENCH_serving.json"
+    p.write_text(json.dumps(report))
+    return p
+
+
+def test_check_load_happy_path(tmp_path, good_serving_report):
+    path = _write_serving(tmp_path, good_serving_report)
+    assert check_load.check(path) == []
+    assert check_load.main(["check_load.py", str(path)]) == 0
+
+
+def test_check_load_repo_report_is_clean():
+    """The committed BENCH_serving.json must satisfy the current gate."""
+    assert check_load.check(REPO / "BENCH_serving.json") == []
+
+
+def test_check_load_schema_regression_fails(tmp_path, good_serving_report):
+    good_serving_report["schema"] = check_load.SCHEMA + 1
+    path = _write_serving(tmp_path, good_serving_report)
+    assert any("schema" in p for p in check_load.check(path))
+    assert check_load.main(["check_load.py", str(path)]) == 1
+
+
+def test_check_load_too_few_mixes_fails(tmp_path, good_serving_report):
+    del good_serving_report["mixes"]["interactive"]
+    path = _write_serving(tmp_path, good_serving_report)
+    assert any("mixes" in p for p in check_load.check(path))
+    assert check_load.main(["check_load.py", str(path)]) == 1
+
+
+@pytest.mark.parametrize("missing", ["ttft_ms", "tok_per_s", "queue_depth",
+                                     "predicted_vs_measured", "slo"])
+def test_check_load_missing_mix_field_fails(tmp_path, good_serving_report,
+                                            missing):
+    del good_serving_report["mixes"]["steady"][missing]
+    path = _write_serving(tmp_path, good_serving_report)
+    problems = check_load.check(path)
+    assert any(missing in p for p in problems)
+    assert check_load.main(["check_load.py", str(path)]) == 1
+
+
+def test_check_load_slo_violation_fails(tmp_path, good_serving_report):
+    """A fabricated TTFT blowout must fail even though the report still
+    *claims* slo_ok — the gate recomputes the budget comparisons."""
+    good_serving_report["mixes"]["steady"]["ttft_ms"]["p99"] = 1e9
+    path = _write_serving(tmp_path, good_serving_report)
+    problems = check_load.check(path)
+    assert any("SLO violated" in p for p in problems)
+    assert any("inconsistent" in p for p in problems)
+    assert check_load.main(["check_load.py", str(path)]) == 1
+
+
+def test_check_load_throughput_floor_fails(tmp_path, good_serving_report):
+    good_serving_report["mixes"]["steady"]["tok_per_s"] = 1.0
+    path = _write_serving(tmp_path, good_serving_report)
+    assert any("tok/s" in p for p in check_load.check(path))
+
+
+def test_check_load_reported_violation_fails(tmp_path, good_serving_report):
+    """slo_ok false in the report fails the gate even when the recomputed
+    budgets look fine — the harness saw something at run time."""
+    good_serving_report["mixes"]["steady"]["slo_ok"] = False
+    good_serving_report["mixes"]["steady"]["slo_violations"] = ["x"]
+    path = _write_serving(tmp_path, good_serving_report)
+    assert any("slo_ok false" in p for p in check_load.check(path))
+    assert check_load.main(["check_load.py", str(path)]) == 1
+
+
+def test_check_load_conservation_violation_fails(tmp_path,
+                                                 good_serving_report):
+    mix = good_serving_report["mixes"]["steady"]
+    mix["conserved"] = False
+    mix["outcomes"]["completed"] = 2      # one request lost
+    path = _write_serving(tmp_path, good_serving_report)
+    problems = check_load.check(path)
+    assert any("conservation" in p for p in problems)
+    assert any("terminal outcomes" in p for p in problems)
+    assert check_load.main(["check_load.py", str(path)]) == 1
+
+
+def test_check_load_no_open_loop_mix_fails(tmp_path, good_serving_report):
+    good_serving_report["mixes"] = {
+        "a": _good_mix("a", "closed"), "b": _good_mix("b", "closed")}
+    path = _write_serving(tmp_path, good_serving_report)
+    assert any("open-loop" in p for p in check_load.check(path))
+
+
+def test_check_load_unreadable_report_fails(tmp_path):
+    path = tmp_path / "nope.json"
+    assert any("unreadable" in p for p in check_load.check(path))
+    path.write_text("{not json")
+    assert check_load.main(["check_load.py", str(path)]) == 1

@@ -1,0 +1,146 @@
+#!/usr/bin/env python
+"""Serving-load report gate, run by the CI load-smoke job.
+
+Validates a BENCH_serving.json produced by `benchmarks/serving_load.py`
+(typically `--smoke`) the way `check_bench.py` gates the kernel report:
+
+1. **Schema version** matches what the harness writes — a renamed or
+   dropped metric fails loudly instead of silently truncating the
+   serving-perf trajectory.
+2. **At least two mixes**, each with the full metric block: TTFT and
+   per-token p50/p99, sustained tokens/sec, queue-depth timeline, and
+   the predicted-vs-measured step-time row.
+3. **Conservation**: every mix drained with
+   ``submitted == completed + timed_out + failed + rejected`` and a
+   consistent per-request row count.
+4. **SLOs hold**: every mix's ``slo_ok`` is true and its measured
+   latencies/throughput actually satisfy the recorded budgets (recomputed
+   here, so a report that *claims* slo_ok with violating numbers fails
+   too).
+
+Usage: python tools/check_load.py [BENCH_serving.json]
+Exit code 0 = clean; 1 = problems (listed one per line).
+"""
+
+from __future__ import annotations
+
+import json
+import pathlib
+import sys
+
+SCHEMA = 1
+MIN_MIXES = 2
+
+# Per-mix blocks the serving trajectory diffs rely on.
+REQUIRED_MIX_FIELDS = (
+    "name", "kind", "seed", "batch", "step_time_us",
+    "trace", "submitted", "outcomes", "conserved", "tokens_total",
+    "ttft_ms", "per_token_ms", "tok_per_s", "queue_depth",
+    "queue_depth_max", "predicted_vs_measured", "requests",
+    "slo", "slo_ok", "slo_violations",
+)
+PERCENTILE_FIELDS = ("p50", "p99", "n")
+
+
+def _check_mix(name: str, mix: dict) -> list[str]:
+    problems: list[str] = []
+    for f in REQUIRED_MIX_FIELDS:
+        if f not in mix:
+            problems.append(f"mix {name}: missing field {f!r}")
+    if problems:
+        return problems
+
+    for key in ("ttft_ms", "per_token_ms"):
+        block = mix[key]
+        if not isinstance(block, dict) or \
+                any(f not in block for f in PERCENTILE_FIELDS):
+            problems.append(f"mix {name}: {key} is not a p50/p99/n block")
+
+    if not mix["conserved"]:
+        problems.append(f"mix {name}: request conservation violated "
+                        f"({mix['outcomes']} vs submitted="
+                        f"{mix['submitted']})")
+    out = mix["outcomes"]
+    terminal = sum(out.get(k, 0) for k in
+                   ("completed", "timed_out", "failed", "rejected"))
+    if terminal != mix["submitted"]:
+        problems.append(f"mix {name}: terminal outcomes {terminal} != "
+                        f"submitted {mix['submitted']}")
+    rows = mix.get("requests")
+    if not isinstance(rows, list) or len(rows) != mix["submitted"]:
+        problems.append(f"mix {name}: per-request rows missing or "
+                        f"count != submitted")
+
+    # SLOs: trust nothing — recompute each budget comparison from the
+    # recorded numbers, and require the mix's own verdict to agree.
+    slo = mix["slo"]
+    ttft_p99 = (mix["ttft_ms"] or {}).get("p99")
+    ptok_p99 = (mix["per_token_ms"] or {}).get("p99")
+    tok_per_s = mix["tok_per_s"]
+    violations = []
+    if ttft_p99 is None or ttft_p99 > slo["ttft_p99_ms"]:
+        violations.append(f"ttft p99 {ttft_p99} > {slo['ttft_p99_ms']} ms")
+    if ptok_p99 is None or ptok_p99 > slo["per_token_p99_ms"]:
+        violations.append(f"per-token p99 {ptok_p99} > "
+                          f"{slo['per_token_p99_ms']} ms")
+    if tok_per_s is None or tok_per_s < slo["min_tok_per_s"]:
+        violations.append(f"tok/s {tok_per_s} < {slo['min_tok_per_s']}")
+    for v in violations:
+        problems.append(f"mix {name}: SLO violated: {v}")
+    if not mix["slo_ok"] and not violations:
+        # report says violated but numbers look fine — still a failure:
+        # the harness saw something this checker must not paper over
+        problems.append(f"mix {name}: slo_ok false "
+                        f"({mix['slo_violations']})")
+    if mix["slo_ok"] and violations:
+        problems.append(f"mix {name}: slo_ok true but budgets violated "
+                        f"— report inconsistent")
+    return problems
+
+
+def check(path: pathlib.Path) -> list[str]:
+    problems: list[str] = []
+    try:
+        report = json.loads(path.read_text())
+    except (OSError, ValueError) as e:
+        return [f"{path}: unreadable report ({e!r})"]
+
+    if report.get("schema") != SCHEMA:
+        problems.append(f"schema regressed: {report.get('schema')!r} "
+                        f"!= {SCHEMA}")
+
+    mixes = report.get("mixes")
+    if not isinstance(mixes, dict) or len(mixes) < MIN_MIXES:
+        problems.append(f"mixes: need >= {MIN_MIXES} trace mixes, got "
+                        f"{0 if not isinstance(mixes, dict) else len(mixes)}")
+        return problems
+
+    kinds = set()
+    for name in sorted(mixes):
+        mix = mixes[name]
+        if not isinstance(mix, dict):
+            problems.append(f"mix {name}: not a report row")
+            continue
+        kinds.add(mix.get("kind"))
+        problems.extend(_check_mix(name, mix))
+    if "open" not in kinds:
+        problems.append("mixes: no open-loop (Poisson trace) mix present")
+
+    if not report.get("slo_ok") and not any("SLO" in p for p in problems):
+        problems.append("report slo_ok false")
+    return problems
+
+
+def main(argv: list[str]) -> int:
+    path = pathlib.Path(argv[1] if len(argv) > 1 else "BENCH_serving.json")
+    problems = check(path)
+    for p in problems:
+        print(p)
+    if not problems:
+        print(f"ok: {path} (schema {SCHEMA}, >= {MIN_MIXES} mixes, "
+              f"conservation + SLO budgets hold)")
+    return 1 if problems else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv))
