@@ -115,8 +115,10 @@ def main(argv=None) -> None:
     if not args.skip_json:
         report = kernel_report(tuned_recs, attn_recs, attn_measured,
                                attn_skip, attn_decode, attn_ragged)
-        with open(args.out, "w") as f:
-            json.dump(report, f, indent=1, sort_keys=True)
+        # Atomic temp+fsync+rename: a run killed mid-save leaves the
+        # previous committed report, never a torn BENCH_kernels.json.
+        from repro.core.ioutil import atomic_write_json
+        atomic_write_json(args.out, report)
         print(f"# wrote {args.out}")
 
 

@@ -46,7 +46,7 @@ import time
 
 import numpy as np
 
-SERVING_SCHEMA = 1
+SERVING_SCHEMA = 2
 
 # One entry per workload shape.  `requests` is the full-run count,
 # `smoke_requests` the CI count; slo budgets are denominated in decode
@@ -269,6 +269,78 @@ def run_mix(cfg, name: str, spec: dict, *, smoke: bool = False,
     return row
 
 
+def measure_recovery(arch: str = "qwen3_14b", *, smoke: bool = False) -> dict:
+    """The crash-recovery row of BENCH_serving.json: run the serving CLI
+    end-to-end with a pinned injected crash (`serve --crash --crash-step`)
+    and then `serve --resume`, measuring how much the journal bounded the
+    replay (``replayed_steps``, must be <= the snapshot interval) and the
+    recovery latency (``--resume`` start to the first *newly generated*
+    token — the wall block; volatile).  Exactly-once accounting across the
+    two process lifetimes rides in ``outcomes``/``conserved``."""
+    import contextlib
+    import io
+
+    from repro.launch import serve
+
+    n = 6 if smoke else 10
+    gen = 12
+    crash_step = 9
+    snapshot_every = 4
+    state_dir = tempfile.mkdtemp(prefix="repro-recovery-")
+    base = ["--arch", arch, "--smoke", "--requests", str(n),
+            "--prompt-len", "12", "--gen", str(gen),
+            "--state-dir", state_dir,
+            "--snapshot-every", str(snapshot_every)]
+
+    crash_buf = io.StringIO()
+    with contextlib.redirect_stdout(crash_buf):
+        crash_rc = serve.main(base + ["--crash", "--crash-step",
+                                      str(crash_step)])
+
+    resume_buf = io.StringIO()
+    t0 = time.time()
+    with contextlib.redirect_stdout(resume_buf):
+        resume_rc = serve.main(["--resume", "--state-dir", state_dir])
+    resume_wall = time.time() - t0
+
+    summary = {}
+    for line in resume_buf.getvalue().splitlines():
+        line = line.strip()
+        if line.startswith("{"):
+            try:
+                row = json.loads(line)
+            except ValueError:
+                continue
+            if "tokens_generated" in row:
+                summary = row
+    rec = summary.get("recovery", {})
+    outcomes = summary.get("outcomes", {})
+    submitted = summary.get("submitted", 0)
+    terminal = sum(outcomes.get(k, 0) for k in
+                   ("completed", "timed_out", "failed", "rejected"))
+    return {
+        "requests": n,
+        "gen": gen,
+        "crash_step": crash_step,
+        "snapshot_every": snapshot_every,
+        "crash_exit_ok": crash_rc == serve.CRASH_EXIT,
+        "resume_exit_ok": resume_rc == 0,
+        "snapshot_step": rec.get("snapshot_step"),
+        "resume_step": rec.get("resume_step"),
+        "replayed_steps": rec.get("replayed_steps"),
+        "replayed_records": rec.get("replayed_records"),
+        "reprefilled_slots": rec.get("reprefilled_slots"),
+        "submitted": submitted,
+        "outcomes": outcomes,
+        "conserved": bool(submitted) and terminal == submitted,
+        "wall": {
+            "resume_wall_s": round(resume_wall, 3),
+            "prepare_s": rec.get("prepare_s"),
+            "first_new_token_s": rec.get("first_new_token_s"),
+        },
+    }
+
+
 def build_report(arch: str = "qwen3_14b", mixes=None, smoke: bool = False,
                  emit_dir=None) -> dict:
     """The full BENCH_serving.json payload.  Always measures the smoke
@@ -293,6 +365,11 @@ def build_report(arch: str = "qwen3_14b", mixes=None, smoke: bool = False,
                           "queue_depth_max": r["queue_depth_max"],
                           "slo_ok": r["slo_ok"],
                           "slo_violations": r["slo_violations"]}))
+    recovery = measure_recovery(arch, smoke=smoke)
+    print(json.dumps({"recovery": {
+        k: recovery[k] for k in ("crash_step", "snapshot_every",
+                                 "replayed_steps", "conserved",
+                                 "crash_exit_ok", "resume_exit_ok")}}))
     return {
         "schema": SERVING_SCHEMA,
         "arch": cfg.name,
@@ -300,6 +377,7 @@ def build_report(arch: str = "qwen3_14b", mixes=None, smoke: bool = False,
         "host": platform.machine(),
         "smoke": bool(smoke),
         "mixes": rows,
+        "recovery": recovery,
         "slo_ok": all(r["slo_ok"] for r in rows.values()),
     }
 
@@ -327,8 +405,10 @@ def main(argv=None) -> int:
 
     report = build_report(args.arch, mixes=args.mixes, smoke=args.smoke,
                           emit_dir=args.emit_traces)
-    with open(args.out, "w") as f:
-        json.dump(report, f, indent=1, sort_keys=True)
+    # Atomic: a benchmark run killed mid-save must leave the previous
+    # committed report, not a torn one for check_load.py to choke on.
+    from repro.core.ioutil import atomic_write_json
+    atomic_write_json(args.out, report)
     print(f"# wrote {args.out}")
     return 0
 

@@ -7,6 +7,7 @@
 - `hlo_stats` — compiled-HLO parser (FLOPs / bytes / per-collective bytes)
 - `dse`       — automated design-space exploration over the parameter set
 - `loadbalance` — round-robin / LPT nnz balancing (SpMV rows, MoE experts)
+- `ioutil`    — atomic file writes (the repo-wide torn-write guard)
 """
 
 from repro.core import (  # noqa: F401
@@ -14,6 +15,7 @@ from repro.core import (  # noqa: F401
     dse,
     hardware,
     hlo_stats,
+    ioutil,
     loadbalance,
     manycore,
     tiling,

@@ -1,0 +1,52 @@
+"""Atomic file-write primitives — the repo-wide torn-write guard.
+
+The paper's embedded hosts treat power loss and watchdog resets as
+routine, so *every* durable artifact of this repo — the autotune cache
+(`kernels.autotune.TuneCache`), every ``BENCH_*.json`` report, the
+serving-state snapshots and manifests (`runtime.snapshot`) — must be
+written such that a crash at any instant leaves either the old file or
+the new one, never a torn hybrid.  The recipe is the classic one: write
+to a temp file in the *same directory* (``os.replace`` must not cross
+filesystems), ``fsync`` the payload so it is on disk before the name is,
+then rename over the target in one atomic step.
+
+Lives in ``core`` because it is stdlib-only and every layer above
+(kernels, runtime, benchmarks) writes through it.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import pathlib
+import tempfile
+
+
+def atomic_write_bytes(path, data: bytes) -> None:
+    """Write ``data`` to ``path`` such that a crash at any instant leaves
+    either the old contents or the new — never a torn file."""
+    path = pathlib.Path(path)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    fd, tmp = tempfile.mkstemp(dir=path.parent,
+                               prefix=path.name + ".", suffix=".tmp")
+    try:
+        with os.fdopen(fd, "wb") as f:
+            f.write(data)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, path)
+    except BaseException:
+        try:
+            os.unlink(tmp)
+        except OSError:
+            pass
+        raise
+
+
+def atomic_write_json(path, obj, *, indent: int = 1,
+                      sort_keys: bool = True) -> None:
+    """`json.dumps` through :func:`atomic_write_bytes` — the only way any
+    module of this repo is allowed to write a JSON report or cache."""
+    atomic_write_bytes(path, (json.dumps(obj, indent=indent,
+                                         sort_keys=sort_keys) + "\n")
+                       .encode())

@@ -36,7 +36,7 @@ from typing import Callable, Sequence
 import jax
 import jax.numpy as jnp
 
-from repro.core import hardware, tiling
+from repro.core import hardware, ioutil, tiling
 from repro.kernels import registry
 from repro.kernels.registry import KernelSpec, Plan
 
@@ -166,10 +166,10 @@ class TuneCache:
         data = self._load()
         data["entries"][key] = value
         try:
-            self.path.parent.mkdir(parents=True, exist_ok=True)
-            tmp = self.path.with_suffix(".tmp")
-            tmp.write_text(json.dumps(data, indent=1, sort_keys=True))
-            tmp.replace(self.path)
+            # Atomic temp+fsync+rename (core.ioutil): a process killed
+            # mid-save leaves the previous cache intact instead of a torn
+            # file for the next run to quarantine.
+            ioutil.atomic_write_json(self.path, data)
         except OSError:
             # An unwritable cache must never take down the compute path;
             # the in-memory entry above still serves this process.

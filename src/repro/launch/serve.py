@@ -46,6 +46,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import pathlib
 import time
 
 import jax
@@ -60,7 +61,14 @@ from repro.launch import specs
 from repro.models import transformer
 from repro.parallel import sharding as shd
 from repro.runtime import fault_tolerance, faults, loadgen
-from repro.runtime.lifecycle import Lifecycle, State
+from repro.runtime import journal as journal_mod
+from repro.runtime import snapshot as snapshot_mod
+from repro.runtime.lifecycle import (Lifecycle, Request, State, TERMINAL)
+
+# Exit code of a run killed by an injected crash fault: distinct from both
+# success and ordinary failure so the crash-smoke CI job can assert the
+# process really died mid-serve before it attempts `serve --resume`.
+CRASH_EXIT = 17
 
 
 class Server:
@@ -139,6 +147,86 @@ class Server:
         self.slot_req[slot] = req_id
         return bool(np.asarray(ok)[slot])
 
+    def restore_slot(self, slot: int, rid: int, prompt, tokens,
+                     gen_len: int) -> None:
+        """Re-prefill an in-flight request to its exact crash-point state
+        (crash recovery, docs/ROBUSTNESS.md).
+
+        ``tokens`` is the request's journaled output (first token +
+        decode tokens).  After emitting token m-1 the live server held
+        cache = prompt ++ tokens[:-1] with ``last_tok`` = tokens[-1] —
+        so one masked batched prefill over that prefix (through the same
+        `cache_reset_slot` + one-hot-active path a retry uses) rebuilds
+        the KV state, and because decode is teacher-forcing-equivalent,
+        its next-token prediction must equal the journaled tokens[-1].
+        A mismatch means recovery is NOT deterministic (changed params,
+        config drift, a corrupted journal) and raises rather than
+        silently serving a diverged continuation."""
+        tokens = [int(t) for t in tokens]
+        if not tokens:
+            raise ValueError(f"restore_slot needs >= 1 journaled token "
+                             f"for request {rid}")
+        prefix = np.concatenate([np.asarray(prompt, np.int32),
+                                 np.asarray(tokens[:-1], np.int32)])
+        # Injector hooks stay out of the restore path: a prefill fault
+        # schedule is keyed on live prefill ordinals, not recovery work.
+        inj, self.injector = self.injector, None
+        try:
+            ok = self.prefill(slot, rid, prefix, gen_len)
+        finally:
+            self.injector = inj
+        predicted = int(self.last_tok[slot, 0])
+        if not ok or predicted != tokens[-1]:
+            raise RuntimeError(
+                f"deterministic recovery violated for request {rid}: "
+                f"re-prefill of {prefix.size} tokens predicted "
+                f"{predicted} (finite={ok}) but the journal recorded "
+                f"{tokens[-1]} — params/config drift or a corrupt "
+                f"journal; refusing to serve a diverged continuation")
+        self.slot_len[slot] = len(tokens) - 1
+
+    # -- crash-tolerance: full-state export / restore -----------------------
+
+    def export_state(self) -> dict:
+        """The server's complete mutable state as flat numpy arrays — the
+        payload `runtime.snapshot` persists: every cache leaf (KV blocks,
+        SSM conv/state, RWKV shifts, per-slot ``lengths``, the legacy
+        ``index``) plus the slot bookkeeping vectors."""
+        leaves, _ = jax.tree_util.tree_flatten_with_path(self.cache)
+        arrays = {"cache" + jax.tree_util.keystr(path): np.asarray(leaf)
+                  for path, leaf in leaves}
+        arrays["slot_len"] = self.slot_len.copy()
+        arrays["slot_target"] = self.slot_target.copy()
+        arrays["slot_req"] = self.slot_req.copy()
+        arrays["last_tok"] = np.asarray(self.last_tok)
+        return arrays
+
+    def restore_state(self, arrays: dict) -> None:
+        """Inverse of :meth:`export_state`: load a snapshot's arrays into
+        this (same-config, same-batch) server, bitwise.  Shape/dtype
+        mismatches mean the snapshot belongs to a different serving
+        configuration and raise."""
+        leaves, treedef = jax.tree_util.tree_flatten_with_path(self.cache)
+        new_leaves = []
+        for path, leaf in leaves:
+            name = "cache" + jax.tree_util.keystr(path)
+            if name not in arrays:
+                raise ValueError(f"snapshot missing cache leaf {name!r}")
+            a = arrays[name]
+            if tuple(a.shape) != tuple(leaf.shape) or a.dtype != leaf.dtype:
+                raise ValueError(
+                    f"snapshot leaf {name!r} is {a.dtype}{a.shape}, server "
+                    f"expects {leaf.dtype}{tuple(leaf.shape)} — snapshot "
+                    f"from a different serving configuration")
+            new_leaves.append(jnp.asarray(a))
+        self.cache = jax.tree_util.tree_unflatten(treedef, new_leaves)
+        self.slot_len = np.asarray(arrays["slot_len"], np.int32).copy()
+        self.slot_target = np.asarray(arrays["slot_target"], np.int32).copy()
+        self.slot_req = np.asarray(arrays["slot_req"], np.int32).copy()
+        self.last_tok = jnp.asarray(np.asarray(arrays["last_tok"],
+                                               np.int32))
+        self.poison[:] = False
+
     def release_slot(self, slot: int) -> None:
         """Free a slot and zero its cache rows — quarantine for a poisoned
         slot, plain recycling for a completed one (the zeroing is also done
@@ -206,7 +294,8 @@ class Server:
 
 
 def serve_loop(server: Server, lc: Lifecycle, *, watchdog=None,
-               max_steps: int = 100_000, source=None) -> dict:
+               max_steps: int = 100_000, source=None, journal=None,
+               snapshots=None, start_step: int = 0) -> dict:
     """Drain every admitted request to a terminal state.
 
     The loop invariant replacing the old ``while completed < requests``
@@ -226,11 +315,51 @@ def serve_loop(server: Server, lc: Lifecycle, *, watchdog=None,
     per-token latencies fully deterministic.  (Previously an injected
     clock was only ever *read*, never advanced, so chaos/load runs got
     wall-clock — i.e. non-reproducible — TTFT percentiles.)
+
+    Crash tolerance (docs/ROBUSTNESS.md, "Crash recovery"): with a
+    ``journal`` (`runtime.journal.Journal`, shared with ``lc.journal``)
+    every emitted token is logged write-ahead — durably on disk *before*
+    it is appended to the request record — and with ``snapshots``
+    (`runtime.snapshot.SnapshotStore`) the full server + lifecycle +
+    injector state is checkpointed atomically every ``snapshots.every``
+    decode steps, bounding the journal tail a `serve --resume` replays.
+    ``start_step`` is the resumed run's virtual-clock origin.  An
+    injected `faults.CrashFault` deliberately propagates out of this
+    loop: a crash is the one fault the process must NOT absorb.
     """
-    step = 0
+    step = start_step
+    last_snap = start_step
     generated = 0
     kernel_fallbacks = 0
+    t_start = time.monotonic()
+    first_new_token_s = None
     tick = getattr(lc.clock, "on_step", None)
+
+    def emit(req, tok: int) -> None:
+        """Write-ahead token emission: journal first, then append (the
+        externally visible effect)."""
+        nonlocal first_new_token_s
+        if journal is not None:
+            journal.token(req.rid, len(req.tokens), tok, step)
+        req.tokens.append(tok)
+        if first_new_token_s is None:
+            first_new_token_s = time.monotonic() - t_start
+
+    def take_snapshot() -> None:
+        nonlocal last_snap
+        arrays = server.export_state()
+        meta = {
+            "step": step,
+            "lifecycle": snapshot_mod.lifecycle_state(lc),
+            "injector": (server.injector.state()
+                         if server.injector is not None else None),
+        }
+        path = snapshots.save(step=step, arrays=arrays, meta=meta,
+                              journal_seq=(journal.seq if journal is not None
+                                           else 0))
+        if journal is not None:
+            journal.snapshot(step, path.name)
+        last_snap = step
 
     def pending() -> bool:
         return (lc.open_count() > 0
@@ -245,6 +374,9 @@ def serve_loop(server: Server, lc: Lifecycle, *, watchdog=None,
             raise RuntimeError(
                 f"serve loop exceeded {max_steps} steps without draining; "
                 f"lifecycle table:\n{lc.table()}")
+        # -- periodic snapshot (crash-tolerance checkpoint) -----------------
+        if snapshots is not None and snapshots.due(step, last_snap):
+            take_snapshot()
         # -- fill idle slots from the admission queue -----------------------
         for slot in range(server.batch):
             if server.slot_req[slot] >= 0:
@@ -264,7 +396,7 @@ def serve_loop(server: Server, lc: Lifecycle, *, watchdog=None,
                 server.release_slot(slot)
                 lc.evict(req, step, reason="nan_prefill")
                 continue
-            req.tokens.append(int(server.last_tok[slot, 0]))
+            emit(req, int(server.last_tok[slot, 0]))
             lc.record_first_token(req)
             lc.transition(req, State.DECODING, step)
         # -- deadline sweep -------------------------------------------------
@@ -311,7 +443,7 @@ def serve_loop(server: Server, lc: Lifecycle, *, watchdog=None,
         for slot in range(server.batch):
             rid = int(server.slot_req[slot])
             if rid >= 0 and slot not in bad:
-                lc.requests[rid].tokens.append(int(nxt[slot, 0]))
+                emit(lc.requests[rid], int(nxt[slot, 0]))
                 generated += 1
         for slot in bad:
             # quarantine exactly the poisoned slot: reset + requeue; the
@@ -330,7 +462,355 @@ def serve_loop(server: Server, lc: Lifecycle, *, watchdog=None,
             f"{lc.counters()} vs submitted={lc.submitted}.  Lifecycle "
             f"table:\n{lc.table()}")
     return {"generated": generated, "steps": step,
-            "kernel_fallbacks": kernel_fallbacks}
+            "kernel_fallbacks": kernel_fallbacks,
+            "first_new_token_s": first_new_token_s,
+            "snapshots_saved": 0 if snapshots is None else snapshots.saved}
+
+
+def build_fault_plan(*, chaos: bool, fault_seed: int, crash: bool,
+                     crash_step: int | None = None):
+    """The run's fault schedule: the smoke plan (--chaos), a seeded crash
+    (--crash [--crash-step]), or their merge.  None = no injection."""
+    plan = faults.FaultPlan.smoke(fault_seed) if chaos else None
+    if crash:
+        cp = faults.FaultPlan.crash(fault_seed, step=crash_step)
+        plan = cp if plan is None else plan.merge(cp)
+    return plan
+
+
+def prepare_resume(state_dir, cfg=None) -> dict:
+    """Rebuild the complete serving state of a crashed run from its
+    ``--state-dir`` (docs/ROBUSTNESS.md, "Crash recovery").
+
+    Three durable artifacts drive the reconstruction:
+
+    * ``serving.json`` — the static serving context (arch, batch, cache
+      geometry, fault schedule, clock rate), written atomically at run
+      start so even a crash *before the first snapshot* is resumable;
+    * the newest committed snapshot (``snaps/``) — lifecycle table +
+      server arrays + injector state at some step S;
+    * the journal tail — every record with ``seq`` past the snapshot's
+      covered prefix, folded on top to bring the lifecycle to the crash
+      point (bounded by the snapshot interval).
+
+    In-flight requests are re-placed onto slots: a slot whose snapshot
+    cache already matches the journal (same token count, same last token)
+    is kept bitwise; one that advanced past the snapshot — or never made
+    it into one — is rebuilt by `Server.restore_slot`'s deterministic
+    re-prefill, which *verifies* the journaled continuation.  Requests
+    the crash caught mid-transition (PREFILLING, EVICTED, token-less
+    DECODING) are demoted to QUEUED and start over, exactly like a fault
+    retry.  Must be called inside the mesh/sharding-rules context.
+
+    Returns a dict: cfg, serving, server, lc, journal, snapshots,
+    injector, source, step_us, start_step, recovery (the summary block).
+    """
+    import collections
+
+    sd = pathlib.Path(state_dir)
+    serving_path = sd / "serving.json"
+    if not serving_path.exists():
+        raise FileNotFoundError(
+            f"{serving_path}: no serving.json — --resume needs the "
+            f"--state-dir of a previous journaled run")
+    serving = json.loads(serving_path.read_text())
+    if cfg is None:
+        cfg = (configs.get_smoke(serving["arch"]) if serving["smoke"]
+               else configs.get(serving["arch"]))
+
+    records = journal_mod.read_journal(sd / "journal.jsonl")
+    snap = snapshot_mod.latest_snapshot(sd / "snaps")
+    step_us = serving.get("step_time_us")
+    clock = loadgen.VirtualClock(step_us * 1e-6) if step_us else None
+
+    if snap is not None:
+        manifest, arrays = snap
+        snap_step = int(manifest["step"])
+        start_seq = int(manifest["journal_seq"])
+        lc = snapshot_mod.restore_lifecycle(manifest["meta"]["lifecycle"],
+                                            clock=clock)
+        inj_state = manifest["meta"].get("injector")
+    else:
+        manifest, arrays = None, None
+        snap_step, start_seq = 0, 0
+        lc = Lifecycle(queue_limit=serving["queue_limit"],
+                       max_retries=serving["max_retries"],
+                       **({} if clock is None else {"clock": clock}))
+        inj_state = None
+
+    # -- fold the journal tail onto the snapshot ----------------------------
+    # Direct field mutation, not transition(): we are replaying a history
+    # the state machine already validated, and the admission queue is
+    # rebuilt wholesale below (tail records change its membership).
+    queued_order = [r.rid for r in lc._queue]
+
+    def queue_drop(rid: int) -> None:
+        if rid in queued_order:
+            queued_order.remove(rid)
+
+    tail = [r for r in records if r["seq"] >= start_seq]
+    last_step = snap_step
+    for rec in tail:
+        step = int(rec.get("step", -1))
+        last_step = max(last_step, step)
+        if clock is not None:
+            # virtual time is a pure function of the step, so replayed
+            # submit/finish stamps land exactly where the live run put them
+            clock.on_step(max(step, snap_step))
+        kind = rec["kind"]
+        if kind == "submit":
+            if rec["rid"] in lc.requests:
+                continue
+            req = Request(rid=rec["rid"],
+                          prompt=np.asarray(rec["prompt"], np.int32),
+                          gen_len=int(rec["gen_len"]), submit_t=lc.clock(),
+                          ttft_deadline_s=rec.get("ttft_deadline_s"),
+                          deadline_s=rec.get("deadline_s"))
+            lc.requests[req.rid] = req
+        elif kind == "state":
+            req = lc.requests[rec["rid"]]
+            new = State(rec["state"])
+            req.retries = int(rec.get("retries", req.retries))
+            if new is State.EVICTED:
+                lc.evicted_events += 1
+            if new is State.QUEUED:
+                req.not_before_step = int(rec.get("not_before_step", 0))
+                if req.tokens:
+                    req.tokens = []       # eviction requeue discards output
+                if step >= 0:             # retry requeue, not admission
+                    lc.retried_events += 1
+                queue_drop(req.rid)
+                queued_order.append(req.rid)
+            else:
+                queue_drop(req.rid)
+            if new in TERMINAL and req.finish_t is None:
+                req.finish_t = lc.clock()
+            req.state = new
+            req.history.append((new, step))
+        elif kind == "token":
+            req = lc.requests[rec["rid"]]
+            del req.tokens[int(rec["i"]):]
+            req.tokens.append(int(rec["tok"]))
+            if req.first_token_t is None:
+                req.first_token_t = lc.clock()
+
+    resume_step = last_step + 1
+
+    # -- demote requests the crash caught mid-transition --------------------
+    demoted = []
+
+    def demote(req) -> None:
+        req.state = State.QUEUED
+        req.tokens = []
+        req.not_before_step = resume_step
+        req.history.append((State.QUEUED, resume_step))
+        queue_drop(req.rid)
+        queued_order.append(req.rid)
+        demoted.append(req.rid)
+
+    for rid in sorted(lc.requests):
+        req = lc.requests[rid]
+        if req.state in (State.PREFILLING, State.EVICTED) or (
+                req.state is State.DECODING and not req.tokens):
+            demote(req)
+
+    lc._queue = collections.deque(
+        lc.requests[rid] for rid in queued_order
+        if lc.requests[rid].state is State.QUEUED)
+
+    if clock is not None:
+        clock.on_step(resume_step)
+    else:
+        # Wall-clock runs: rebase the restored stamps onto this process's
+        # monotonic clock so deadlines don't charge the downtime (or a
+        # clock discontinuity) to requests that were making progress.
+        times = [t for r in lc.requests.values()
+                 for t in (r.submit_t, r.first_token_t, r.finish_t)
+                 if t is not None]
+        if times:
+            offset = time.monotonic() - max(times)
+            for r in lc.requests.values():
+                r.submit_t += offset
+                if r.first_token_t is not None:
+                    r.first_token_t += offset
+                if r.finish_t is not None:
+                    r.finish_t += offset
+
+    # -- injector: same seeded schedule, minus the crash that fired ---------
+    plan = build_fault_plan(chaos=serving.get("chaos", False),
+                            fault_seed=serving.get("fault_seed", 0),
+                            crash=serving.get("crash", False),
+                            crash_step=serving.get("crash_step"))
+    injector = None
+    if plan is not None:
+        if inj_state is None:
+            # crash before the first snapshot: the full plan is pending;
+            # prefill ordinals are recovered by counting journaled prefills
+            inj_state = {"pending": plan.record(), "fired": [],
+                         "prefill_count": sum(
+                             1 for r in records if r["kind"] == "state"
+                             and r["state"] == State.PREFILLING.value)}
+        injector = faults.FaultInjector.restore(plan, inj_state,
+                                                resume_step=resume_step)
+
+    # -- server: snapshot arrays + deterministic re-prefill -----------------
+    server = Server(cfg, int(serving["batch"]), int(serving["max_len"]),
+                    prefill_len=int(serving["prefill_len"]),
+                    slot_lengths=serving["dist"], injector=injector)
+    if arrays is not None:
+        server.restore_state(arrays)
+
+    reprefilled, placed = [], set()
+    for slot in range(server.batch):
+        rid = int(server.slot_req[slot])
+        if rid < 0:
+            continue
+        req = lc.requests.get(rid)
+        if req is None or req.state is not State.DECODING:
+            server.release_slot(slot)     # finished/demoted in the tail
+            continue
+        if (len(req.tokens) == int(server.slot_len[slot]) + 1
+                and int(np.asarray(server.last_tok)[slot, 0])
+                == req.tokens[-1]):
+            placed.add(rid)               # snapshot already at crash point
+            continue
+        server.restore_slot(slot, rid, req.prompt, req.tokens, req.gen_len)
+        placed.add(rid)
+        reprefilled.append(rid)
+    for rid in sorted(lc.requests):       # in-flight but not on any slot
+        req = lc.requests[rid]
+        if req.state is not State.DECODING or rid in placed:
+            continue
+        free = [s for s in range(server.batch)
+                if int(server.slot_req[s]) < 0]
+        if not free:
+            demote(req)
+            lc._queue.append(req)
+            continue
+        server.restore_slot(free[0], rid, req.prompt, req.tokens,
+                            req.gen_len)
+        placed.add(rid)
+        reprefilled.append(rid)
+
+    # -- arrival source: re-cursor past the journaled prefix ----------------
+    source = None
+    if serving.get("load_trace"):
+        trace = loadgen.load_trace(serving["load_trace"])
+        source = loadgen.TraceSource(trace, cfg.vocab_size)
+        source.skip_submitted(lc)
+
+    # -- reattach durability (Journal.__init__ truncates a torn tail) -------
+    journal = journal_mod.Journal(sd / "journal.jsonl")
+    lc.journal = journal
+    snapshots = snapshot_mod.SnapshotStore(
+        sd / "snaps", every=serving.get("snapshot_every", 8),
+        keep=serving.get("snapshot_keep", 3))
+
+    recovery = {
+        "resumed": True,
+        "snapshot_step": None if manifest is None else snap_step,
+        "resume_step": resume_step,
+        "replayed_steps": resume_step - snap_step,
+        "replayed_records": len(tail),
+        "reprefilled_slots": len(reprefilled),
+        "restored_requests": len(lc.requests),
+        "demoted": demoted,
+    }
+    return {"cfg": cfg, "serving": serving, "server": server, "lc": lc,
+            "journal": journal, "snapshots": snapshots,
+            "injector": injector, "source": source, "step_us": step_us,
+            "start_step": resume_step, "recovery": recovery}
+
+
+def _summary(server, lc, stats, wall, *, batch, batch_source,
+             watchdog) -> dict:
+    """The final conservation-bearing summary line (shared between a
+    fresh run and `serve --resume`)."""
+    outcomes = lc.counters()
+    return {
+        "arch": server.cfg.name,
+        "requests": outcomes["completed"],      # back-compat: served count
+        "submitted": lc.submitted,
+        "batch": batch, "batch_source": batch_source,
+        "tokens_generated": stats["generated"],
+        "decode_steps": stats["steps"],
+        "wall_s": round(wall, 2),
+        "tok_per_s": round(stats["generated"] / max(wall, 1e-9), 1),
+        "outcomes": outcomes,
+        "retries_total": lc.retried_events,
+        "kernel_fallbacks": stats["kernel_fallbacks"],
+        "snapshots_saved": stats.get("snapshots_saved", 0),
+        "ttft_ms": lc.ttft_percentiles(),
+        "per_token_ms": lc.per_token_percentiles(),
+        "request_outcomes": lc.outcome_trace(),
+        "watchdog": watchdog.summary(),
+        "kernel_plan": [p.record() for p in server.kernel_plan],
+    }
+
+
+def _run_resume(args) -> int:
+    """`serve --resume`: rebuild from --state-dir and drain to a summary
+    whose completions are token-for-token those of the uninterrupted
+    run."""
+    mesh = make_host_mesh(data=1, model=1)
+    rules = specs.rules_for(mesh)
+    t0 = time.time()
+    try:
+        with set_mesh(mesh), shd.use_rules(rules):
+            R = prepare_resume(args.state_dir)
+            server, lc, serving = R["server"], R["lc"], R["serving"]
+            if R["injector"] is not None:
+                autotune.install_dispatch_hook(R["injector"].dispatch_hook)
+            predicted_us = (autotune.predict_decode_step_us(
+                server.cfg, server.batch, cache_len=server.max_len,
+                kv_dtype=jnp.float32,
+                lengths=autotune._quantile_lengths(
+                    server.batch, serving["dist"], server.max_len),
+                plans=server.kernel_plan) if server.kernel_plan else None)
+            watchdog = fault_tolerance.DecodeWatchdog(predicted_us)
+            prep_s = time.time() - t0
+            print(json.dumps({"recovery": {**R["recovery"],
+                                           "prepare_s": round(prep_s, 3)}}))
+            try:
+                stats = serve_loop(server, lc, watchdog=watchdog,
+                                   source=R["source"], journal=R["journal"],
+                                   snapshots=R["snapshots"],
+                                   start_step=R["start_step"])
+            except faults.CrashFault as cf:
+                print(json.dumps({"crash": {"step": cf.step,
+                                            "msg": str(cf),
+                                            "state_dir": args.state_dir}}))
+                R["journal"].close()
+                return CRASH_EXIT
+            wall = time.time() - t0
+            R["journal"].close()
+    finally:
+        autotune.install_dispatch_hook(None)
+
+    summary = _summary(server, lc, stats, wall, batch=server.batch,
+                       batch_source="resume", watchdog=watchdog)
+    summary["recovery"] = {
+        **R["recovery"],
+        "prepare_s": round(prep_s, 3),
+        # --resume start -> first newly generated token: the recovery-
+        # latency number the serving benchmark's `recovery` row reports
+        "first_new_token_s": (
+            None if stats["first_new_token_s"] is None
+            else round(prep_s + stats["first_new_token_s"], 3)),
+    }
+    if R["injector"] is not None:
+        summary["faults"] = R["injector"].record()
+    if R["source"] is not None:
+        summary["load"] = {
+            "trace": serving.get("load_trace"),
+            "arrivals": len(R["source"].trace),
+            "step_time_us": (None if R["step_us"] is None
+                             else round(R["step_us"], 3)),
+            "queue_depth_max": max((q[1] for q in R["source"].queue_depth),
+                                   default=0),
+        }
+    print(json.dumps(summary))
+    return 0
 
 
 def main(argv=None):
@@ -371,7 +851,30 @@ def main(argv=None):
     ap.add_argument("--step-time-us", type=float, default=0.0,
                     help="virtual decode-step time for --load-trace "
                          "replay; 0 = the tuner's predicted step time")
+    ap.add_argument("--state-dir", default=None,
+                    help="directory for the request journal + state "
+                         "snapshots (enables crash tolerance and "
+                         "--resume)")
+    ap.add_argument("--snapshot-every", type=int, default=8,
+                    help="decode steps between state snapshots")
+    ap.add_argument("--snapshot-keep", type=int, default=3,
+                    help="committed snapshots retained after pruning")
+    ap.add_argument("--crash", action="store_true",
+                    help="inject a seeded crash fault: the process dies "
+                         f"mid-serve (exit {CRASH_EXIT}) leaving only "
+                         "the journal + snapshots; combine with "
+                         "--state-dir, then `serve --resume`")
+    ap.add_argument("--crash-step", type=int, default=None,
+                    help="pin the --crash decode step (default: seeded)")
+    ap.add_argument("--resume", action="store_true",
+                    help="resume a crashed run from --state-dir instead "
+                         "of starting fresh")
     args = ap.parse_args(argv)
+
+    if args.resume:
+        if not args.state_dir:
+            ap.error("--resume requires --state-dir")
+        return _run_resume(args)
 
     cfg = configs.get_smoke(args.arch) if args.smoke else configs.get(args.arch)
     if cfg.family == "encoder":
@@ -426,12 +929,28 @@ def main(argv=None):
     print(json.dumps({"serving_plan": decision}))
 
     injector = None
-    if args.chaos:
-        plan = faults.FaultPlan.smoke(args.fault_seed)
+    plan = build_fault_plan(chaos=args.chaos, fault_seed=args.fault_seed,
+                            crash=args.crash, crash_step=args.crash_step)
+    if plan is not None:
         injector = faults.FaultInjector(plan)
         autotune.install_dispatch_hook(injector.dispatch_hook)
         print(json.dumps({"fault_plan": {"seed": args.fault_seed,
                                          "schedule": plan.record()}}))
+
+    journal = None
+    snapshots = None
+    state_dir = pathlib.Path(args.state_dir) if args.state_dir else None
+    if state_dir is not None:
+        # A fresh run owns its state dir: stale journal/snapshot artifacts
+        # from a previous run would corrupt recovery accounting.
+        state_dir.mkdir(parents=True, exist_ok=True)
+        (state_dir / "journal.jsonl").unlink(missing_ok=True)
+        for p in (state_dir / "snaps").glob("snap-*"):
+            p.unlink()
+        journal = journal_mod.Journal(state_dir / "journal.jsonl")
+        snapshots = snapshot_mod.SnapshotStore(state_dir / "snaps",
+                                               every=args.snapshot_every,
+                                               keep=args.snapshot_keep)
 
     source = None
     step_us = None
@@ -447,19 +966,43 @@ def main(argv=None):
         clock = loadgen.VirtualClock(step_us * 1e-6)
         source = loadgen.TraceSource(trace, cfg.vocab_size)
         lc = Lifecycle(queue_limit=args.queue_limit,
-                       max_retries=args.max_retries, clock=clock)
+                       max_retries=args.max_retries, clock=clock,
+                       journal=journal)
     else:
         rng = np.random.default_rng(0)
         reqs = [(i, rng.integers(0, cfg.vocab_size, size=args.prompt_len),
                  args.gen) for i in range(args.requests)]
         lc = Lifecycle(queue_limit=args.queue_limit,
-                       max_retries=args.max_retries)
+                       max_retries=args.max_retries, journal=journal)
         for rid, prompt, gen in reqs:
             lc.submit(rid, prompt, gen,
                       ttft_deadline_s=(args.ttft_ms / 1e3
                                        if args.ttft_ms else None),
                       deadline_s=(args.deadline_ms / 1e3
                                   if args.deadline_ms else None))
+
+    if state_dir is not None:
+        # The static serving context, durable before any decode step can
+        # crash: `serve --resume` derives the server geometry, clock rate
+        # and fault schedule from this even when the crash predates the
+        # first snapshot.
+        snapshot_mod.atomic_write_json(state_dir / "serving.json", {
+            "arch": args.arch, "smoke": bool(args.smoke),
+            "batch": batch, "max_len": max_len,
+            "prefill_len": prefill_len, "dist": [int(d) for d in dist],
+            "decision": decision,
+            "queue_limit": args.queue_limit,
+            "max_retries": args.max_retries,
+            "snapshot_every": args.snapshot_every,
+            "snapshot_keep": args.snapshot_keep,
+            "step_time_us": step_us,
+            "load_trace": args.load_trace,
+            "chaos": bool(args.chaos), "fault_seed": args.fault_seed,
+            "crash": bool(args.crash), "crash_step": args.crash_step,
+            "requests": args.requests, "prompt_len": args.prompt_len,
+            "gen": args.gen,
+            "ttft_ms": args.ttft_ms, "deadline_ms": args.deadline_ms,
+        })
 
     try:
         with set_mesh(mesh), shd.use_rules(rules):
@@ -473,30 +1016,29 @@ def main(argv=None):
                 if server.kernel_plan else None)
             watchdog = fault_tolerance.DecodeWatchdog(predicted_us)
             t0 = time.time()
-            stats = serve_loop(server, lc, watchdog=watchdog, source=source)
+            try:
+                stats = serve_loop(server, lc, watchdog=watchdog,
+                                   source=source, journal=journal,
+                                   snapshots=snapshots)
+            except faults.CrashFault as cf:
+                # The one fault class the process must NOT absorb: die
+                # with no summary (the conservation line never prints) and
+                # a distinct exit code.  Only the journal + snapshots
+                # survive, for `serve --resume`.
+                print(json.dumps({"crash": {"step": cf.step,
+                                            "msg": str(cf),
+                                            "state_dir": args.state_dir}}))
+                if journal is not None:
+                    journal.close()
+                return CRASH_EXIT
             wall = time.time() - t0
+            if journal is not None:
+                journal.close()
     finally:
         autotune.install_dispatch_hook(None)
 
-    outcomes = lc.counters()
-    summary = {
-        "arch": cfg.name,
-        "requests": outcomes["completed"],      # back-compat: served count
-        "submitted": lc.submitted,
-        "batch": batch, "batch_source": decision["source"],
-        "tokens_generated": stats["generated"],
-        "decode_steps": stats["steps"],
-        "wall_s": round(wall, 2),
-        "tok_per_s": round(stats["generated"] / max(wall, 1e-9), 1),
-        "outcomes": outcomes,
-        "retries_total": lc.retried_events,
-        "kernel_fallbacks": stats["kernel_fallbacks"],
-        "ttft_ms": lc.ttft_percentiles(),
-        "per_token_ms": lc.per_token_percentiles(),
-        "request_outcomes": lc.outcome_trace(),
-        "watchdog": watchdog.summary(),
-        "kernel_plan": [p.record() for p in server.kernel_plan],
-    }
+    summary = _summary(server, lc, stats, wall, batch=batch,
+                       batch_source=decision["source"], watchdog=watchdog)
     if injector is not None:
         summary["faults"] = injector.record()
     if source is not None:

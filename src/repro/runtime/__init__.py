@@ -1,1 +1,2 @@
-from repro.runtime import elastic, fault_tolerance, faults, lifecycle  # noqa: F401
+from repro.runtime import (elastic, fault_tolerance, faults, journal,  # noqa: F401
+                           lifecycle, snapshot)

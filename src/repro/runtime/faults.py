@@ -58,8 +58,26 @@ class PrefillInterrupt(InjectedFault):
     host fault between slot reset and cache write)."""
 
 
-FAULT_CLASSES = ("nan_logits", "kv_corrupt", "kernel_dispatch",
-                 "straggler", "prefill_interrupt")
+class CrashFault(InjectedFault):
+    """Injected process death at a decode step (stands in for power loss,
+    a watchdog reboot, or an OOM kill — the paper's embedded operating
+    conditions).  Unlike every other fault class this one is NOT absorbed
+    by the serve loop: it propagates out, the process exits without a
+    summary, and only the journal + snapshots survive.  `serve --resume`
+    must then reproduce the uninterrupted run token-for-token
+    (docs/ROBUSTNESS.md, "Crash recovery")."""
+
+    def __init__(self, msg: str, step: int = -1):
+        super().__init__(msg)
+        self.step = step
+
+
+# Classes the --chaos smoke schedule absorbs in-process.  "crash" is the
+# sixth class (FaultPlan.crash / serve --crash): it kills the loop instead
+# of being absorbed, so it is scheduled explicitly, never by smoke().
+SMOKE_FAULT_CLASSES = ("nan_logits", "kv_corrupt", "kernel_dispatch",
+                       "straggler", "prefill_interrupt")
+FAULT_CLASSES = SMOKE_FAULT_CLASSES + ("crash",)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -102,8 +120,29 @@ class FaultPlan:
                                  int(rng.integers(0, 64))))
         return cls(events)
 
+    @classmethod
+    def crash(cls, seed: int, *, step: int | None = None,
+              max_step: int = 14) -> "FaultPlan":
+        """A single seeded crash fault: the serve loop dies at an
+        arbitrary decode step in [4, max_step] (or exactly ``step`` when
+        pinned).  Combine with the smoke schedule via
+        :meth:`FaultPlan.merge`."""
+        return cls([crash_event(seed, step=step, max_step=max_step)])
+
+    def merge(self, other: "FaultPlan") -> "FaultPlan":
+        return FaultPlan(self.events + other.events)
+
     def record(self) -> list[dict]:
         return [e.record() for e in self.events]
+
+
+def crash_event(seed: int, *, step: int | None = None,
+                max_step: int = 14) -> FaultEvent:
+    if step is None:
+        step = int(np.random.default_rng(
+            np.random.SeedSequence([seed, 0xC4A54])).integers(4,
+                                                              max_step + 1))
+    return FaultEvent("crash", int(step), 0)
 
 
 class FaultInjector:
@@ -143,7 +182,20 @@ class FaultInjector:
         """Called by Server.decode_step before the forward.  Applies every
         event scheduled at ``step``: corrupts KV, arms the logits-poison
         mask, stalls, and — last, so same-step state faults still land —
-        raises KernelDispatchFault."""
+        raises KernelDispatchFault.
+
+        A due ``crash`` event preempts everything: a real power cut does
+        not let the other faults of the step fire first, so the crash is
+        consumed alone (the rest stay pending — a snapshot taken earlier
+        carries them into the resumed process) and CrashFault propagates
+        out of the serve loop entirely."""
+        for ev in list(self.pending):
+            if ev.kind == "crash" and ev.step <= step:
+                self.pending.remove(ev)
+                self.fired.append({**ev.record(), "fired_step": step})
+                raise CrashFault(
+                    f"injected crash at decode step {step} (scheduled "
+                    f"step {ev.step})", step)
         due = [ev for ev in self.pending if ev.kind != "prefill_interrupt"
                and ev.step <= step]
         raise_dispatch = None
@@ -193,3 +245,34 @@ class FaultInjector:
     def record(self) -> dict:
         return {"schedule": self.plan.record(), "fired": list(self.fired),
                 "pending": [e.record() for e in self.pending]}
+
+    # -- crash-tolerance (snapshot payload) ---------------------------------
+
+    def state(self) -> dict:
+        """JSON-able injector state for `runtime.snapshot`: which events
+        are still pending and how many prefills have run, so a resumed
+        process keeps executing the *same* seeded schedule instead of
+        restarting it."""
+        return {"pending": [e.record() for e in self.pending],
+                "fired": list(self.fired),
+                "prefill_count": self.prefill_count}
+
+    @classmethod
+    def restore(cls, plan: "FaultPlan", state: dict, *,
+                resume_step: int = 0, sleep=None) -> "FaultInjector":
+        """Rebuild an injector from snapshot state.  Pending ``crash``
+        events scheduled at or before ``resume_step`` are dropped — they
+        are the fault that killed the previous process (the snapshot
+        predates the crash, so the event still looks pending); replaying
+        one would crash-loop the recovery.  Every other pending event is
+        kept: a fault scheduled inside the replay window is simply
+        absorbed again."""
+        inj = cls(plan, sleep=sleep)
+        inj.pending = [
+            ev for ev in (FaultEvent(**{k: r[k] for k in
+                                        ("kind", "step", "slot", "stall_s")})
+                          for r in state.get("pending", []))
+            if not (ev.kind == "crash" and ev.step <= resume_step)]
+        inj.fired = list(state.get("fired", []))
+        inj.prefill_count = int(state.get("prefill_count", 0))
+        return inj

@@ -128,11 +128,17 @@ class Lifecycle:
 
     def __init__(self, *, queue_limit: int = 0, max_retries: int = 2,
                  backoff_steps: int = 4,
-                 clock: Callable[[], float] = time.monotonic):
+                 clock: Callable[[], float] = time.monotonic,
+                 journal=None):
         self.queue_limit = queue_limit
         self.max_retries = max_retries
         self.backoff_steps = backoff_steps
         self.clock = clock
+        # Optional write-ahead log (`runtime.journal.Journal`): every
+        # submit and state transition is journaled *before* it takes
+        # effect, so a crashed serve loop can be replayed deterministically
+        # (docs/ROBUSTNESS.md, "Crash recovery").
+        self.journal = journal
         self.requests: dict[int, Request] = {}
         self._queue: deque[Request] = deque()
         self.evicted_events = 0
@@ -148,7 +154,16 @@ class Lifecycle:
         req = Request(rid, np.asarray(prompt), gen_len, self.clock(),
                       ttft_deadline_s=ttft_deadline_s,
                       deadline_s=deadline_s)
-        if self.queue_limit and len(self._queue) >= self.queue_limit:
+        rejected = self.queue_limit and len(self._queue) >= self.queue_limit
+        if self.journal is not None:
+            # Write-ahead: the admission decision is durable before the
+            # caller can observe it.
+            self.journal.submit(rid, req.prompt, gen_len,
+                                ttft_deadline_s=ttft_deadline_s,
+                                deadline_s=deadline_s)
+            self.journal.state(rid, (State.REJECTED if rejected
+                                     else State.QUEUED).value, -1)
+        if rejected:
             req.state = State.REJECTED
             req.finish_t = req.submit_t
             req.history.append((State.REJECTED, -1))
@@ -182,6 +197,14 @@ class Lifecycle:
             raise TransitionError(
                 f"request {req.rid}: illegal transition "
                 f"{req.state.value} -> {new.value} at step {step}")
+        if self.journal is not None:
+            # Write-ahead: the edge is durable before it takes effect.  A
+            # QUEUED entry carries the retry-backoff eligibility so a
+            # recovery reconstructs the backoff schedule exactly.
+            self.journal.state(
+                req.rid, new.value, step, retries=req.retries,
+                **({"not_before_step": req.not_before_step}
+                   if new is State.QUEUED else {}))
         req.state = new
         if new in TERMINAL:
             req.finish_t = self.clock()

@@ -227,13 +227,43 @@ def save_trace(path, trace: list[TraceRequest]) -> None:
             f.write(json.dumps(t.record()) + "\n")
 
 
+class TraceError(ValueError):
+    """A corrupt trace file — raised with the line number and payload so
+    a bad trace fails loudly instead of silently serving a subset."""
+
+
 def load_trace(path) -> list[TraceRequest]:
+    """Load a JSONL trace, failing loudly on corruption.
+
+    Every malformed line raises :class:`TraceError` with its line number
+    and (truncated) payload.  A malformed **final** line with no trailing
+    newline is reported distinctly — it is the torn-write signature of a
+    producer killed mid-append, which calls for regenerating the trace,
+    not for debugging the generator."""
+    path = pathlib.Path(path)
+    raw = path.read_text()
+    lines = raw.split("\n")
+    # split() leaves a trailing "" when the file ends in a newline; a
+    # non-empty last element means the final line was never terminated.
+    unterminated = bool(lines) and lines[-1] != ""
+    if not unterminated and lines:
+        lines.pop()
     trace = []
-    for line in pathlib.Path(path).read_text().splitlines():
-        line = line.strip()
-        if not line:
+    for ln, line in enumerate(lines, start=1):
+        if not line.strip():
             continue
-        trace.append(TraceRequest(**json.loads(line)))
+        torn = unterminated and ln == len(lines)
+        try:
+            trace.append(TraceRequest(**json.loads(line)))
+        except (ValueError, TypeError) as e:
+            if torn:
+                raise TraceError(
+                    f"{path}:{ln}: partial final line (producer killed "
+                    f"mid-write? regenerate the trace): {e}; payload: "
+                    f"{line[:200]!r}") from None
+            raise TraceError(
+                f"{path}:{ln}: corrupt trace line: {e}; payload: "
+                f"{line[:200]!r}") from None
     return trace
 
 
@@ -309,6 +339,19 @@ class TraceSource(_SourceBase):
     def exhausted(self) -> bool:
         return self._i >= len(self.trace)
 
+    def skip_submitted(self, lc: Lifecycle) -> int:
+        """Re-cursor for `serve --resume`: advance past every trace
+        request the restored lifecycle already knows.  Arrival cursors are
+        not persisted — the journal is — so a resumed source must simply
+        never re-submit a journaled rid.  Returns the skip count."""
+        skipped = 0
+        while self._i < len(self.trace) and \
+                self.trace[self._i].rid in lc.requests:
+            self._i += 1
+            skipped += 1
+        self.submitted += skipped
+        return skipped
+
     def next_arrival_step(self, lc: Lifecycle, step: int) -> int | None:
         """Step to jump an idle loop to (None once exhausted).  Without a
         step-addressable clock the loop can only step forward one at a
@@ -364,6 +407,18 @@ class SessionSource(_SourceBase):
 
     def exhausted(self) -> bool:
         return all(i >= len(s) for i, s in zip(self._idx, self.sessions))
+
+    def skip_submitted(self, lc: Lifecycle) -> int:
+        """Per-session sibling of `TraceSource.skip_submitted` (resume
+        re-cursor): advance each session past its journaled requests."""
+        skipped = 0
+        for si, sess in enumerate(self.sessions):
+            while self._idx[si] < len(sess) and \
+                    sess[self._idx[si]].rid in lc.requests:
+                self._idx[si] += 1
+                skipped += 1
+        self.submitted += skipped
+        return skipped
 
     def next_arrival_step(self, lc: Lifecycle, step: int) -> int | None:
         arrivals = [a for si in range(len(self.sessions))

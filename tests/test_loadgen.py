@@ -94,6 +94,34 @@ def test_trace_roundtrip_through_jsonl(tmp_path):
     assert loadgen.load_trace(path) == trace
 
 
+def test_load_trace_corrupt_line_fails_loudly(tmp_path):
+    """A malformed interior line must raise TraceError naming the file,
+    line number, and offending payload — never be skipped silently."""
+    trace = loadgen.make_trace(seed=3, n=3, rate_rps=2.0,
+                               prompt_dist=FIXED5, gen_dist=FIXED6)
+    path = tmp_path / "trace.jsonl"
+    loadgen.save_trace(path, trace)
+    lines = path.read_text().splitlines()
+    lines[1] = '{"rid": 1, "arrival_s": "not-a-number"}'
+    path.write_text("\n".join(lines) + "\n")
+    with pytest.raises(loadgen.TraceError, match=r":2: corrupt trace"):
+        loadgen.load_trace(path)
+
+
+def test_load_trace_partial_final_line_is_distinct(tmp_path):
+    """A truncated FINAL line is the producer-killed-mid-write signature
+    and gets its own message (regenerate the trace), distinct from
+    interior corruption."""
+    trace = loadgen.make_trace(seed=3, n=3, rate_rps=2.0,
+                               prompt_dist=FIXED5, gen_dist=FIXED6)
+    path = tmp_path / "trace.jsonl"
+    loadgen.save_trace(path, trace)
+    text = path.read_text()
+    path.write_text(text + '{"rid": 3, "arrival_')     # no newline
+    with pytest.raises(loadgen.TraceError, match="partial final line"):
+        loadgen.load_trace(path)
+
+
 def test_sessions_round_robin_preserves_order():
     trace = loadgen.make_trace(seed=3, n=7, rate_rps=1.0,
                                prompt_dist=FIXED5, gen_dist=FIXED6)

@@ -1,0 +1,478 @@
+"""Crash tolerance end-to-end: the journal's write-ahead discipline, the
+atomic snapshot store, and deterministic `serve --resume` recovery.
+
+The invariants (docs/ROBUSTNESS.md, "Crash recovery"): (1) a torn final
+journal line is the crash signature and is absorbed, while interior
+corruption raises loudly; (2) a snapshot round-trips the full server +
+lifecycle state bitwise, and one decode step after restore matches the
+original run exactly; (3) a crashed serve resumed from its --state-dir
+continues token-for-token identical to an uninterrupted run, replaying
+at most one snapshot interval of journal; (4) every durable artifact
+(autotune cache, BENCH reports, snapshots) is written atomically — a
+kill mid-save leaves the previous committed file, never a torn one."""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+import jax
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # minimal env: property tests skip, rest run
+    from _hypothesis_stub import given, settings, st
+
+from repro.core import ioutil
+from repro.kernels.autotune import TuneCache
+from repro.launch.serve import CRASH_EXIT, Server, serve_loop
+from repro.models.config import ModelConfig
+from repro.runtime import faults, journal as journal_mod, snapshot
+from repro.runtime.lifecycle import Lifecycle, State, submit_all
+
+MAX_LEN = 24
+
+
+def _cfg(**kw):
+    base = dict(name="tiny-recovery", family="dense", num_layers=2,
+                d_model=32, d_ff=64, vocab_size=101, num_heads=4,
+                num_kv_heads=2)
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+def _requests(cfg, spec):
+    out = []
+    for rid, (plen, gen) in enumerate(spec):
+        prompt = np.asarray(
+            jax.random.randint(jax.random.PRNGKey(100 + rid), (plen,), 0,
+                               cfg.vocab_size), np.int32)
+        out.append((rid, prompt, gen))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# journal: write-ahead log crash signatures
+# ---------------------------------------------------------------------------
+
+def _write_records(path, n=4):
+    with journal_mod.Journal(path, durable=False) as j:
+        j.submit(0, [1, 2, 3], gen_len=n)
+        for i in range(n):
+            j.token(0, i, 10 + i, step=i)
+    return journal_mod.read_journal(path)
+
+
+def test_journal_roundtrip_with_monotonic_seq(tmp_path):
+    records = _write_records(tmp_path / "j.jsonl")
+    assert [r["seq"] for r in records] == list(range(len(records)))
+    assert records[0]["kind"] == "submit"
+    assert records[0]["prompt"] == [1, 2, 3]
+
+
+def test_journal_torn_final_line_is_absorbed(tmp_path):
+    """A truncated final line — the crash-mid-append signature — is
+    dropped silently; the committed prefix survives untouched."""
+    path = tmp_path / "j.jsonl"
+    committed = _write_records(path)
+    with open(path, "a") as f:
+        f.write('{"kind": "token", "rid": 0, "i": 4, "se')   # no newline
+    records, torn = journal_mod.read_journal(path, return_torn=True)
+    assert records == committed
+    assert torn is not None
+
+
+def test_journal_newlineless_complete_final_line_is_kept(tmp_path):
+    """The crash can also hit between the payload and the newline: a
+    *parseable* final line with the expected seq is complete — keep it."""
+    path = tmp_path / "j.jsonl"
+    committed = _write_records(path)
+    rec = {"kind": "token", "rid": 0, "i": 4, "tok": 99, "step": 4,
+           "seq": committed[-1]["seq"] + 1}
+    with open(path, "a") as f:
+        f.write(json.dumps(rec))                              # no newline
+    records, torn = journal_mod.read_journal(path, return_torn=True)
+    assert torn is None
+    assert records[-1]["tok"] == 99
+
+
+def test_journal_interior_corruption_raises(tmp_path):
+    """Corruption anywhere but the final line is NOT a crash signature:
+    it must raise with the line number and payload, never be absorbed."""
+    path = tmp_path / "j.jsonl"
+    _write_records(path)
+    lines = path.read_text().splitlines()
+    lines[1] = lines[1][:10]          # truncate an interior record
+    path.write_text("\n".join(lines) + "\n")
+    with pytest.raises(journal_mod.JournalError, match=r":2:"):
+        journal_mod.read_journal(path)
+
+
+def test_journal_interior_seq_gap_raises(tmp_path):
+    """A whole missing interior record (seq jump) is lost history, not a
+    torn tail — recovery on top of it would silently drop effects."""
+    path = tmp_path / "j.jsonl"
+    _write_records(path)
+    lines = path.read_text().splitlines()
+    del lines[2]
+    path.write_text("\n".join(lines) + "\n")
+    with pytest.raises(journal_mod.JournalError, match="seq jumped"):
+        journal_mod.read_journal(path)
+
+
+def test_journal_reopen_truncates_torn_tail_and_continues(tmp_path):
+    """Re-opening after a crash truncates the torn tail so the next
+    append starts on a clean line boundary with the next seq."""
+    path = tmp_path / "j.jsonl"
+    committed = _write_records(path)
+    with open(path, "a") as f:
+        f.write('{"kind": "token", "rid"')
+    with journal_mod.Journal(path, durable=False) as j:
+        assert j.seq == committed[-1]["seq"] + 1
+        j.state(0, "completed", step=9)
+    records = journal_mod.read_journal(path)
+    assert [r["seq"] for r in records] == list(range(len(records)))
+    assert records[-1]["state"] == "completed"
+
+
+def test_journal_replay_overwrites_tokens_by_index(tmp_path):
+    """An eviction requeue discards partial output; the retry's token
+    records overwrite by index instead of duplicating."""
+    path = tmp_path / "j.jsonl"
+    with journal_mod.Journal(path, durable=False) as j:
+        j.submit(0, [1, 2], gen_len=2)
+        j.token(0, 0, 11, step=1)
+        j.token(0, 1, 12, step=2)
+        j.state(0, "queued", step=3)            # evicted + requeued
+        j.token(0, 0, 21, step=5)               # retry starts over
+        j.token(0, 1, 22, step=6)
+        j.token(0, 2, 23, step=7)
+        j.state(0, "completed", step=7)
+    reqs = journal_mod.replay(journal_mod.read_journal(path))
+    assert reqs[0]["tokens"] == [21, 22, 23]
+    assert reqs[0]["state"] == "completed"
+
+
+# ---------------------------------------------------------------------------
+# snapshot: atomic commit + bitwise round-trip
+# ---------------------------------------------------------------------------
+
+def _arrays_from_seed(seed: int) -> dict:
+    rng = np.random.default_rng(seed)
+    return {
+        "kv": rng.standard_normal((2, 3, 4)).astype(np.float32),
+        "lengths": rng.integers(0, 9, size=(3,)).astype(np.int32),
+        "mask": rng.integers(0, 2, size=(5,)).astype(bool),
+    }
+
+
+def _roundtrip(tmp_path, seed: int) -> None:
+    store = snapshot.SnapshotStore(tmp_path / "snaps", every=4)
+    arrays = _arrays_from_seed(seed)
+    store.save(step=4, arrays=arrays, meta={"seed": seed}, journal_seq=7)
+    manifest, loaded = snapshot.latest_snapshot(tmp_path / "snaps")
+    assert manifest["step"] == 4 and manifest["journal_seq"] == 7
+    assert set(loaded) == set(arrays)
+    for leaf, a in arrays.items():
+        assert loaded[leaf].dtype == a.dtype
+        np.testing.assert_array_equal(loaded[leaf], a)
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_snapshot_roundtrip_bitwise(tmp_path, seed):
+    """Seeded fallback for the property test below — runs even without
+    hypothesis installed."""
+    _roundtrip(tmp_path, seed)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=2**31 - 1))
+def test_snapshot_roundtrip_bitwise_property(tmp_path_factory, seed):
+    """Property form: any array dict round-trips bitwise through the
+    npz payload + hashed manifest."""
+    _roundtrip(tmp_path_factory.mktemp("snap"), seed)
+
+
+def test_snapshot_incremental_reuses_unchanged_leaves(tmp_path):
+    """A leaf unchanged since the previous snapshot is *referenced* from
+    the older payload file, not rewritten."""
+    store = snapshot.SnapshotStore(tmp_path, every=4)
+    arrays = _arrays_from_seed(0)
+    store.save(step=4, arrays=arrays, meta={}, journal_seq=0)
+    arrays2 = dict(arrays, kv=arrays["kv"] + 1.0)    # one leaf changed
+    store.save(step=8, arrays=arrays2, meta={}, journal_seq=5)
+    man2 = json.loads((tmp_path / "snap-00000008.json").read_text())
+    assert man2["arrays"]["kv"]["file"] == "snap-00000008.npz"
+    assert man2["arrays"]["lengths"]["file"] == "snap-00000004.npz"
+    _, loaded = snapshot.load_snapshot(tmp_path / "snap-00000008.json")
+    np.testing.assert_array_equal(loaded["kv"], arrays2["kv"])
+    np.testing.assert_array_equal(loaded["lengths"], arrays["lengths"])
+
+
+def test_snapshot_torn_payload_falls_back_to_older(tmp_path):
+    """The manifest is the commit point: a snapshot whose payload is torn
+    (crash mid-write window) is skipped and the next-older one loads."""
+    store = snapshot.SnapshotStore(tmp_path, every=4)
+    store.save(step=4, arrays=_arrays_from_seed(0), meta={}, journal_seq=0)
+    store.save(step=8, arrays=_arrays_from_seed(1), meta={}, journal_seq=5)
+    (tmp_path / "snap-00000008.npz").write_bytes(b"torn!")
+    manifest, loaded = snapshot.latest_snapshot(tmp_path)
+    assert manifest["step"] == 4
+    np.testing.assert_array_equal(loaded["kv"], _arrays_from_seed(0)["kv"])
+
+
+def test_snapshot_prune_keeps_referenced_payloads(tmp_path):
+    """Pruning drops old manifests but keeps any payload file a surviving
+    (incremental) manifest still references."""
+    store = snapshot.SnapshotStore(tmp_path, every=4, keep=2)
+    arrays = _arrays_from_seed(0)
+    for step in (4, 8, 12, 16):
+        store.save(step=step, arrays=arrays, meta={}, journal_seq=step)
+    manifests = sorted(p.name for p in tmp_path.glob("snap-*.json"))
+    assert manifests == ["snap-00000012.json", "snap-00000016.json"]
+    # every leaf was unchanged: all manifests reference the FIRST payload
+    assert (tmp_path / "snap-00000004.npz").exists()
+    _, loaded = snapshot.latest_snapshot(tmp_path)
+    np.testing.assert_array_equal(loaded["kv"], arrays["kv"])
+
+
+def test_lifecycle_state_roundtrip(tmp_path):
+    """lifecycle_state -> restore_lifecycle preserves every request field,
+    the queue order, and the event counters."""
+    cfg = _cfg()
+    lc = Lifecycle(max_retries=3, clock=lambda: 2.5)
+    submit_all(lc, _requests(cfg, [(4, 6), (5, 6), (3, 6)]))
+    req = lc.requests[0]
+    lc.transition(req, State.PREFILLING, 0)
+    req.tokens.extend([7, 8])
+    lc.record_first_token(req)
+    lc.transition(req, State.DECODING, 0)
+    lc2 = snapshot.restore_lifecycle(snapshot.lifecycle_state(lc))
+    assert sorted(lc2.requests) == sorted(lc.requests)
+    assert [r.rid for r in lc2._queue] == [r.rid for r in lc._queue]
+    for rid, r in lc.requests.items():
+        r2 = lc2.requests[rid]
+        assert (r2.state, r2.retries, r2.tokens, r2.gen_len) == \
+            (r.state, r.retries, r.tokens, r.gen_len)
+        np.testing.assert_array_equal(r2.prompt, r.prompt)
+        assert r2.history == r.history
+
+
+# ---------------------------------------------------------------------------
+# server state: export/restore + deterministic re-prefill
+# ---------------------------------------------------------------------------
+
+def _decode_tokens(server, slot, steps, start=0):
+    toks = []
+    for step in range(start, start + steps):
+        nxt, done, bad = server.decode_step(step)
+        assert not bad
+        toks.append(int(nxt[slot, 0]))
+    return toks
+
+
+def test_restore_state_decode_step_matches_bitwise():
+    """A server restored from export_state must produce the exact same
+    next decode step as the original — the snapshot-resume acceptance
+    criterion at the single-step level."""
+    cfg = _cfg()
+    reqs = _requests(cfg, [(5, 10), (4, 10)])
+    a = Server(cfg, 2, MAX_LEN, autotune_kernels=False)
+    for slot, (rid, prompt, gen) in enumerate(reqs):
+        a.prefill(slot, rid, prompt, gen)
+    _decode_tokens(a, 0, 3)
+
+    b = Server(cfg, 2, MAX_LEN, autotune_kernels=False)
+    b.restore_state(a.export_state())
+    nxt_a, done_a, _ = a.decode_step(3)
+    nxt_b, done_b, _ = b.decode_step(3)
+    np.testing.assert_array_equal(np.asarray(nxt_a), np.asarray(nxt_b))
+    assert list(done_a) == list(done_b)
+
+
+def test_restore_slot_reprefill_is_deterministic():
+    """Re-prefilling prompt ++ tokens[:-1] must re-predict tokens[-1]
+    (teacher-forcing determinism) and leave the slot continuing exactly
+    where the crashed run stopped."""
+    cfg = _cfg()
+    [(rid, prompt, gen)] = _requests(cfg, [(5, 12)])
+    a = Server(cfg, 2, MAX_LEN, autotune_kernels=False)
+    a.prefill(0, rid, prompt, gen)
+    tokens = [int(a.last_tok[0, 0])]
+    tokens += _decode_tokens(a, 0, 4)
+
+    b = Server(cfg, 2, MAX_LEN, autotune_kernels=False)
+    b.restore_slot(0, rid, prompt, tokens, gen)
+    assert int(b.slot_len[0]) == len(tokens) - 1
+    nxt_a, _, _ = a.decode_step(4)
+    nxt_b, _, _ = b.decode_step(4)
+    assert int(nxt_b[0, 0]) == int(nxt_a[0, 0])
+
+
+def test_restore_slot_rejects_diverged_journal():
+    """A journaled continuation the model would NOT have produced means
+    params/config drift or corruption: refuse to serve it."""
+    cfg = _cfg()
+    [(rid, prompt, gen)] = _requests(cfg, [(5, 12)])
+    a = Server(cfg, 2, MAX_LEN, autotune_kernels=False)
+    a.prefill(0, rid, prompt, gen)
+    tokens = [int(a.last_tok[0, 0])] + _decode_tokens(a, 0, 3)
+    tampered = tokens[:-1] + [(tokens[-1] + 1) % cfg.vocab_size]
+    b = Server(cfg, 2, MAX_LEN, autotune_kernels=False)
+    with pytest.raises(RuntimeError, match="deterministic recovery"):
+        b.restore_slot(0, rid, prompt, tampered, gen)
+
+
+# ---------------------------------------------------------------------------
+# serve loop: write-ahead journaling, snapshot cadence, crash propagation
+# ---------------------------------------------------------------------------
+
+def test_serve_loop_journal_replay_matches_lifecycle(tmp_path):
+    """After a clean drain, folding the journal reproduces every
+    request's final state and exact token list — the journal really is
+    the authoritative record."""
+    cfg = _cfg()
+    journal = journal_mod.Journal(tmp_path / "j.jsonl", durable=False)
+    lc = Lifecycle(clock=lambda: 0.0, journal=journal)
+    submit_all(lc, _requests(cfg, [(5, 8), (4, 8), (6, 8)]))
+    server = Server(cfg, 2, MAX_LEN, autotune_kernels=False)
+    snaps = snapshot.SnapshotStore(tmp_path / "snaps", every=4)
+    stats = serve_loop(server, lc, journal=journal, snapshots=snaps)
+    journal.close()
+    assert stats["snapshots_saved"] >= 1
+    folded = journal_mod.replay(journal_mod.read_journal(tmp_path / "j.jsonl"))
+    for rid, req in lc.requests.items():
+        assert folded[rid]["state"] == req.state.value
+        assert folded[rid]["tokens"] == list(req.tokens)
+        assert len(req.tokens) == req.gen_len + 1
+
+
+def test_crash_fault_propagates_out_of_serve_loop(tmp_path):
+    """CrashFault is the one fault the loop must NOT absorb: it kills the
+    process (exit 17 at the CLI) with the journal left on disk."""
+    cfg = _cfg()
+    plan = faults.FaultPlan.crash(0, step=5)
+    injector = faults.FaultInjector(plan, sleep=lambda s: None)
+    journal = journal_mod.Journal(tmp_path / "j.jsonl", durable=False)
+    lc = Lifecycle(clock=lambda: 0.0, journal=journal)
+    submit_all(lc, _requests(cfg, [(5, 10), (4, 10)]))
+    server = Server(cfg, 2, MAX_LEN, autotune_kernels=False,
+                    injector=injector)
+    with pytest.raises(faults.CrashFault):
+        serve_loop(server, lc, journal=journal)
+    journal.close()
+    records = journal_mod.read_journal(tmp_path / "j.jsonl")
+    assert any(r["kind"] == "token" for r in records)
+    assert CRASH_EXIT == 17
+
+
+def test_crash_plan_is_seed_deterministic():
+    p1 = faults.FaultPlan.crash(3)
+    p2 = faults.FaultPlan.crash(3)
+    assert p1.record() == p2.record()
+    assert [e.kind for e in p1.events] == ["crash"]
+    assert faults.FaultPlan.crash(4).record() != p1.record()
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: crash + resume token-for-token vs uninterrupted
+# ---------------------------------------------------------------------------
+
+def _run_serve(argv):
+    import contextlib
+    import io
+
+    from repro.launch import serve
+
+    buf = io.StringIO()
+    with contextlib.redirect_stdout(buf):
+        rc = serve.main(argv)
+    return rc, buf.getvalue()
+
+
+def _folded_tokens(state_dir):
+    reqs = journal_mod.replay(
+        journal_mod.read_journal(os.path.join(state_dir, "journal.jsonl")))
+    return {rid: r["tokens"] for rid, r in reqs.items()}, reqs
+
+
+def test_crash_resume_token_for_token(tmp_path):
+    """The recovery acceptance criterion: crash a serve mid-decode (exit
+    17), `--resume` it, and the combined journal must hold exactly the
+    token streams an uninterrupted run produces — with the replay bounded
+    by the snapshot interval."""
+    from repro.launch import serve
+
+    sd_crash = str(tmp_path / "crashed")
+    sd_clean = str(tmp_path / "clean")
+    base = ["--arch", "qwen3_14b", "--smoke", "--requests", "4",
+            "--prompt-len", "8", "--gen", "8", "--snapshot-every", "3"]
+
+    rc, out = _run_serve(base + ["--state-dir", sd_crash,
+                                 "--crash", "--crash-step", "5"])
+    assert rc == serve.CRASH_EXIT
+    assert any("\"crash\"" in ln for ln in out.splitlines())
+    assert not any("tokens_generated" in ln for ln in out.splitlines())
+
+    rc, out = _run_serve(["--resume", "--state-dir", sd_crash])
+    assert rc == 0
+    summary = json.loads([ln for ln in out.splitlines()
+                          if "tokens_generated" in ln][-1])
+    rec = summary["recovery"]
+    assert rec["resumed"] is True
+    assert 1 <= rec["replayed_steps"] <= 3      # bounded by --snapshot-every
+    assert summary["outcomes"]["failed"] == 0
+
+    rc, _ = _run_serve(base + ["--state-dir", sd_clean])
+    assert rc == 0
+
+    crashed, creqs = _folded_tokens(sd_crash)
+    clean, _ = _folded_tokens(sd_clean)
+    assert crashed == clean                     # token-for-token identical
+    assert all(r["state"] == "completed" for r in creqs.values())
+    assert all(len(t) == 8 + 1 for t in crashed.values())
+
+
+# ---------------------------------------------------------------------------
+# atomic writes: the durable artifacts survive a kill mid-save
+# ---------------------------------------------------------------------------
+
+def test_atomic_write_failure_preserves_old_file(tmp_path):
+    """A failed write (serialization error here; a crash in real life)
+    leaves the previous committed file intact and no temp litter."""
+    path = tmp_path / "report.json"
+    ioutil.atomic_write_json(path, {"good": 1})
+    with pytest.raises(TypeError):
+        ioutil.atomic_write_json(path, {"bad": object()})
+    assert json.loads(path.read_text()) == {"good": 1}
+    assert list(tmp_path.glob("*.tmp")) == []
+
+
+def test_atomic_write_crash_window_preserves_old_file(tmp_path,
+                                                      monkeypatch):
+    """Die at the worst instant — payload written, rename not yet done —
+    and the old file must survive with the orphan cleaned up."""
+    path = tmp_path / "cache.json"
+    ioutil.atomic_write_json(path, {"v": 1})
+    monkeypatch.setattr(ioutil.os, "replace",
+                        lambda *a: (_ for _ in ()).throw(OSError("kill")))
+    with pytest.raises(OSError):
+        ioutil.atomic_write_json(path, {"v": 2})
+    assert json.loads(path.read_text()) == {"v": 1}
+    assert list(tmp_path.glob("*.tmp")) == []
+
+
+def test_tune_cache_put_survives_unwritable_disk(tmp_path, monkeypatch):
+    """TuneCache.put through the atomic guard: an OSError mid-save keeps
+    the previous cache on disk AND the new entry served from memory —
+    the compute path must never die on an unwritable cache."""
+    path = tmp_path / "autotune.json"
+    cache = TuneCache(path)
+    cache.put("k1", {"knobs": {"tile": 8}, "detail": {}})
+    before = path.read_text()
+    monkeypatch.setattr(ioutil.os, "replace",
+                        lambda *a: (_ for _ in ()).throw(OSError("full")))
+    cache.put("k2", {"knobs": {"tile": 16}, "detail": {}})   # must not raise
+    assert path.read_text() == before
+    assert cache.get("k2")["knobs"]["tile"] == 16

@@ -300,12 +300,29 @@ def _good_mix(name="steady", kind="open"):
     }
 
 
+def _good_recovery():
+    """A minimal recovery row that passes check_load: crash really
+    crashed, resume really resumed, replay bounded by the snapshot
+    interval, nothing lost across the two process lifetimes."""
+    return {"requests": 6, "gen": 12, "crash_step": 9, "snapshot_every": 4,
+            "crash_exit_ok": True, "resume_exit_ok": True,
+            "snapshot_step": 8, "resume_step": 9, "replayed_steps": 1,
+            "replayed_records": 8, "reprefilled_slots": 2,
+            "submitted": 6,
+            "outcomes": {"completed": 6, "timed_out": 0, "failed": 0,
+                         "rejected": 0, "evicted": 0, "retried": 0},
+            "conserved": True,
+            "wall": {"resume_wall_s": 0.5, "prepare_s": 0.1,
+                     "first_new_token_s": 0.2}}
+
+
 @pytest.fixture
 def good_serving_report():
     return {"schema": check_load.SCHEMA, "arch": "x", "backend": "cpu",
             "host": "x", "smoke": True,
             "mixes": {"steady": _good_mix("steady"),
                       "interactive": _good_mix("interactive", "closed")},
+            "recovery": _good_recovery(),
             "slo_ok": True}
 
 
@@ -402,3 +419,208 @@ def test_check_load_unreadable_report_fails(tmp_path):
     assert any("unreadable" in p for p in check_load.check(path))
     path.write_text("{not json")
     assert check_load.main(["check_load.py", str(path)]) == 1
+
+
+def test_check_load_missing_recovery_block_fails(tmp_path,
+                                                 good_serving_report):
+    """Schema 2 requires the crash-recovery row — a report without it
+    means the injected-crash cycle never ran."""
+    del good_serving_report["recovery"]
+    path = _write_serving(tmp_path, good_serving_report)
+    assert any("recovery" in p for p in check_load.check(path))
+    assert check_load.main(["check_load.py", str(path)]) == 1
+
+
+def test_check_load_recovery_no_crash_fails(tmp_path, good_serving_report):
+    """crash_exit_ok false: the fault never killed the process, so the
+    'recovery' that followed proved nothing."""
+    good_serving_report["recovery"]["crash_exit_ok"] = False
+    path = _write_serving(tmp_path, good_serving_report)
+    assert any("never killed" in p for p in check_load.check(path))
+
+
+def test_check_load_recovery_unbounded_replay_fails(tmp_path,
+                                                    good_serving_report):
+    """replayed_steps > snapshot_every: snapshots are not bounding the
+    journal replay — the whole point of taking them."""
+    rec = good_serving_report["recovery"]
+    rec["replayed_steps"] = rec["snapshot_every"] + 1
+    path = _write_serving(tmp_path, good_serving_report)
+    assert any("not bounding" in p for p in check_load.check(path))
+    assert check_load.main(["check_load.py", str(path)]) == 1
+
+
+def test_check_load_recovery_lost_request_fails(tmp_path,
+                                                good_serving_report):
+    rec = good_serving_report["recovery"]
+    rec["outcomes"]["completed"] -= 1      # one request vanished
+    path = _write_serving(tmp_path, good_serving_report)
+    assert any("lost or completed twice" in p
+               for p in check_load.check(path))
+
+
+# ---------------------------------------------------------------------------
+# check_serve --recovery (crash-smoke gate)
+# ---------------------------------------------------------------------------
+
+def _journal_lines(rid=0, gen_len=2, tokens=(11, 12, 13),
+                   terminal="completed", extra_states=()):
+    """Journal records for one request: submit -> queued -> ... -> terminal
+    with a token record per emitted token."""
+    rows = [{"kind": "submit", "rid": rid, "gen_len": gen_len, "seq": 0},
+            {"kind": "state", "rid": rid, "state": "queued", "seq": 1}]
+    for st in extra_states:
+        rows.append({"kind": "state", "rid": rid, "state": st})
+    for i, t in enumerate(tokens):
+        rows.append({"kind": "token", "rid": rid, "i": i, "tok": t})
+    rows.append({"kind": "state", "rid": rid, "state": terminal})
+    return [json.dumps(r) for r in rows]
+
+
+def _write_journal(tmp_path, lines, name="journal.jsonl", torn_tail=None):
+    text = "\n".join(lines) + "\n"
+    if torn_tail is not None:
+        text += torn_tail        # no trailing newline: the crash signature
+    p = tmp_path / name
+    p.write_text(text)
+    return p
+
+
+def _resume_log(recovery=None, **summary_overrides):
+    rec = {"resumed": True, "snapshot_step": 8, "resume_step": 9,
+           "replayed_steps": 1, "replayed_records": 8,
+           "reprefilled_slots": 2}
+    if recovery is not None:
+        rec.update(recovery)
+    summary = _good_summary(recovery=rec, **summary_overrides)
+    return json.dumps(summary)      # --resume prints no serving_plan line
+
+
+CRASH_LOG = json.dumps({"crash": {"step": 9, "msg": "injected crash"}})
+
+
+def test_check_serve_recovery_happy_path(tmp_path):
+    journal = _write_journal(tmp_path, _journal_lines())
+    text = _resume_log()
+    assert check_serve.check(text, require_plan=False) == []
+    assert check_serve.check_recovery(
+        text, crash_text=CRASH_LOG, journal=journal,
+        snapshot_every=4) == []
+    log = tmp_path / "resume.log"
+    log.write_text(text)
+    crash = tmp_path / "crash.log"
+    crash.write_text(CRASH_LOG)
+    assert check_serve.main(
+        ["check_serve.py", str(log), "--recovery",
+         "--crash-log", str(crash), "--journal", str(journal),
+         "--snapshot-every", "4"]) == 0
+
+
+def test_check_serve_recovery_requires_recovery_block():
+    """A plain serve summary (no recovery block) must fail --recovery:
+    the run did not actually resume anything."""
+    text = json.dumps(_good_summary())
+    problems = check_serve.check_recovery(text)
+    assert any("no recovery block" in p for p in problems)
+
+
+def test_check_serve_recovery_missing_crash_marker_fails(tmp_path):
+    """A crash log without the {"crash": ...} marker means the fault
+    never fired — the resume proved nothing."""
+    problems = check_serve.check_recovery(
+        _resume_log(), crash_text="no json here")
+    assert any("crash" in p and "marker" in p for p in problems)
+
+
+def test_check_serve_recovery_summary_in_crash_log_fails():
+    """A summary line in the crash log means the process drained the
+    queue and exited cleanly — it did NOT die mid-serve."""
+    crash_text = CRASH_LOG + "\n" + json.dumps(_good_summary())
+    problems = check_serve.check_recovery(_resume_log(),
+                                          crash_text=crash_text)
+    assert any("did NOT die" in p for p in problems)
+
+
+def test_check_serve_recovery_unbounded_replay_fails():
+    problems = check_serve.check_recovery(
+        _resume_log(recovery={"replayed_steps": 9}), snapshot_every=4)
+    assert any("not bounding" in p for p in problems)
+
+
+def test_check_serve_recovery_duplicate_terminal_fails(tmp_path):
+    """A rid that completes in both process lifetimes (journaled twice)
+    is the double-serve bug the exactly-once fold exists to catch."""
+    lines = _journal_lines()
+    lines.append(json.dumps({"kind": "state", "rid": 0,
+                             "state": "completed"}))
+    journal = _write_journal(tmp_path, lines)
+    problems = check_serve.check_recovery(_resume_log(), journal=journal)
+    assert any("exactly once" in p for p in problems)
+
+
+def test_check_serve_recovery_nonterminal_rid_fails(tmp_path):
+    """A rid still DECODING at the end of the journal was lost across
+    the crash — the resume never finished it."""
+    lines = _journal_lines()[:-1]      # drop the terminal state record
+    lines.append(json.dumps({"kind": "state", "rid": 0,
+                             "state": "decoding"}))
+    journal = _write_journal(tmp_path, lines)
+    problems = check_serve.check_recovery(_resume_log(), journal=journal)
+    assert any("non-terminal" in p for p in problems)
+
+
+def test_check_serve_recovery_token_count_mismatch_fails(tmp_path):
+    """A completed rid with fewer journaled tokens than gen_len+1 lost
+    output across the crash."""
+    journal = _write_journal(
+        tmp_path, _journal_lines(gen_len=5, tokens=(11, 12, 13)))
+    problems = check_serve.check_recovery(_resume_log(), journal=journal)
+    assert any("journaled tokens" in p for p in problems)
+
+
+def test_fold_journal_tolerates_torn_tail(tmp_path):
+    """A truncated final line is the crash signature: dropped silently,
+    never reported as corruption."""
+    journal = _write_journal(tmp_path, _journal_lines(),
+                             torn_tail='{"kind": "token", "rid": 0, "i"')
+    reqs, problems = check_serve.fold_journal(journal)
+    assert problems == []
+    assert reqs[0]["state"] == "completed"
+    assert reqs[0]["tokens"] == 3
+
+
+def test_fold_journal_flags_interior_corruption(tmp_path):
+    """Corruption anywhere but the final line is NOT a crash signature
+    — it must be reported, not absorbed."""
+    lines = _journal_lines()
+    lines.insert(2, "{garbage interior line")
+    journal = _write_journal(tmp_path, lines)
+    reqs, problems = check_serve.fold_journal(journal)
+    assert any("corrupt interior" in p for p in problems)
+
+
+def test_fold_journal_requeue_resets_tokens(tmp_path):
+    """Eviction requeue discards generated output: after a queued state
+    record the token count restarts from zero and the retry's tokens
+    overwrite by index without tripping the gap check."""
+    lines = _journal_lines(gen_len=2, tokens=(11, 12),
+                           terminal="completed")
+    # splice a requeue + full retry before the terminal record
+    retry = [{"kind": "state", "rid": 0, "state": "queued"},
+             {"kind": "token", "rid": 0, "i": 0, "tok": 21},
+             {"kind": "token", "rid": 0, "i": 1, "tok": 22},
+             {"kind": "token", "rid": 0, "i": 2, "tok": 23}]
+    lines[-1:-1] = [json.dumps(r) for r in retry]
+    journal = _write_journal(tmp_path, lines)
+    reqs, problems = check_serve.fold_journal(journal)
+    assert problems == []
+    assert reqs[0]["tokens"] == 3      # gen_len + 1 after the retry
+
+
+def test_fold_journal_flags_token_index_gap(tmp_path):
+    lines = _journal_lines(tokens=(11,))
+    lines.insert(-1, json.dumps({"kind": "token", "rid": 0, "i": 5,
+                                 "tok": 99}))
+    journal = _write_journal(tmp_path, lines)
+    reqs, problems = check_serve.fold_journal(journal)
+    assert any("token index gap" in p for p in problems)

@@ -17,6 +17,10 @@ Validates a BENCH_serving.json produced by `benchmarks/serving_load.py`
    latencies/throughput actually satisfy the recorded budgets (recomputed
    here, so a report that *claims* slo_ok with violating numbers fails
    too).
+5. **Crash recovery**: the ``recovery`` block shows the injected-crash
+   cycle really crashed (exit 17) and resumed (exit 0), conserved every
+   request exactly once across both process lifetimes, and replayed no
+   more journal than one snapshot interval.
 
 Usage: python tools/check_load.py [BENCH_serving.json]
 Exit code 0 = clean; 1 = problems (listed one per line).
@@ -28,7 +32,7 @@ import json
 import pathlib
 import sys
 
-SCHEMA = 1
+SCHEMA = 2
 MIN_MIXES = 2
 
 # Per-mix blocks the serving trajectory diffs rely on.
@@ -98,6 +102,45 @@ def _check_mix(name: str, mix: dict) -> list[str]:
     return problems
 
 
+def _check_recovery(rec) -> list[str]:
+    problems: list[str] = []
+    if not isinstance(rec, dict):
+        return ["recovery: block missing — the crash-recovery cycle "
+                "never ran"]
+    for f in ("crash_step", "snapshot_every", "replayed_steps",
+              "submitted", "outcomes", "conserved",
+              "crash_exit_ok", "resume_exit_ok"):
+        if f not in rec:
+            problems.append(f"recovery: missing field {f!r}")
+    if problems:
+        return problems
+    if not rec["crash_exit_ok"]:
+        problems.append("recovery: crash run did not die with the crash "
+                        "exit code — the fault never killed the process")
+    if not rec["resume_exit_ok"]:
+        problems.append("recovery: `serve --resume` exited non-zero")
+    if not rec["conserved"]:
+        problems.append(f"recovery: conservation violated across the "
+                        f"crash ({rec['outcomes']} vs submitted="
+                        f"{rec['submitted']})")
+    out = rec["outcomes"]
+    terminal = sum(out.get(k, 0) for k in
+                   ("completed", "timed_out", "failed", "rejected"))
+    if terminal != rec["submitted"]:
+        problems.append(f"recovery: terminal outcomes {terminal} != "
+                        f"submitted {rec['submitted']} — a request was "
+                        f"lost or completed twice across the crash")
+    replayed, every = rec["replayed_steps"], rec["snapshot_every"]
+    if not isinstance(replayed, int) or replayed < 1:
+        problems.append(f"recovery: replayed_steps must be a positive "
+                        f"int, got {replayed!r}")
+    elif replayed > every:
+        problems.append(f"recovery: replayed {replayed} steps > snapshot "
+                        f"interval {every} — snapshots are not bounding "
+                        f"the journal replay")
+    return problems
+
+
 def check(path: pathlib.Path) -> list[str]:
     problems: list[str] = []
     try:
@@ -126,6 +169,8 @@ def check(path: pathlib.Path) -> list[str]:
     if "open" not in kinds:
         problems.append("mixes: no open-loop (Poisson trace) mix present")
 
+    problems.extend(_check_recovery(report.get("recovery")))
+
     if not report.get("slo_ok") and not any("SLO" in p for p in problems):
         problems.append("report slo_ok false")
     return problems
@@ -138,7 +183,7 @@ def main(argv: list[str]) -> int:
         print(p)
     if not problems:
         print(f"ok: {path} (schema {SCHEMA}, >= {MIN_MIXES} mixes, "
-              f"conservation + SLO budgets hold)")
+              f"conservation + SLO budgets hold, crash recovery bounded)")
     return 1 if problems else 0
 
 

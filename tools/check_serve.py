@@ -24,8 +24,22 @@ summary completed exactly N requests, ``--min-tokens T`` floors
 schedule to have fired (at least one injected fault of each scheduled
 class reached the server) with zero failed requests.
 
+**Recovery mode** (the crash-smoke CI job): ``--recovery`` validates the
+log of a `serve --resume` run after an injected crash.  ``--crash-log``
+points at the crashed run's stdout (must contain the ``{"crash": ...}``
+marker and NO summary — the process really died mid-serve);
+``--journal`` points at the shared request journal, over which this
+checker independently re-folds exactly-once accounting: every submitted
+rid reaches a terminal state exactly once *across both process
+lifetimes*, token indices are contiguous per attempt, and every
+completed request carries its full token count.  ``--snapshot-every``
+bounds the recovery block's ``replayed_steps``.  The journal fold here
+is a deliberate stdlib-only reimplementation — double-entry bookkeeping
+against `repro.runtime.journal`.
+
 Usage: python tools/check_serve.py serve.log [--requests N]
        [--min-tokens T] [--chaos]
+       [--recovery [--crash-log LOG] [--journal J] [--snapshot-every N]]
 Exit code 0 = clean; 1 = problems (listed one per line).
 """
 
@@ -115,14 +129,140 @@ def _check_chaos(rows: list[dict], s: dict, problems: list[str]) -> None:
                         f"smoke schedule (retry budget should absorb it)")
 
 
+TERMINAL_STATES = ("completed", "timed_out", "failed", "rejected")
+
+
+def fold_journal(path: pathlib.Path) -> tuple[dict, list[str]]:
+    """Stdlib re-fold of a request journal: per-rid terminal-entry counts,
+    token contiguity, and final state.  A malformed *final* line is the
+    crash signature and is dropped; malformed interior lines are
+    reported as problems."""
+    problems: list[str] = []
+    reqs: dict[int, dict] = {}
+    try:
+        raw = path.read_text()
+    except OSError as e:
+        return {}, [f"journal {path}: unreadable ({e!r})"]
+    lines = raw.split("\n")
+    torn = lines.pop() if lines and lines[-1] != "" else None
+    if torn is not None:
+        try:
+            rec = json.loads(torn)
+            lines.append(torn)      # parseable, just newline-less: keep
+        except ValueError:
+            pass                    # truncated mid-append: dropped
+    for ln, line in enumerate(lines, start=1):
+        if not line.strip():
+            continue
+        try:
+            rec = json.loads(line)
+        except ValueError:
+            problems.append(f"journal {path}:{ln}: corrupt interior line")
+            continue
+        kind = rec.get("kind")
+        rid = rec.get("rid")
+        if kind == "submit":
+            reqs[rid] = {"gen_len": rec.get("gen_len"), "tokens": 0,
+                         "terminal_entries": 0, "state": None}
+        elif kind == "state":
+            r = reqs.get(rid)
+            if r is None:
+                problems.append(f"journal {path}:{ln}: state record for "
+                                f"unknown rid {rid}")
+                continue
+            state = rec.get("state")
+            if state in TERMINAL_STATES:
+                r["terminal_entries"] += 1
+            if state == "queued":
+                r["tokens"] = 0      # eviction requeue discards output
+            r["state"] = state
+        elif kind == "token":
+            r = reqs.get(rid)
+            if r is None:
+                problems.append(f"journal {path}:{ln}: token record for "
+                                f"unknown rid {rid}")
+                continue
+            i = rec.get("i")
+            if not isinstance(i, int) or i > r["tokens"]:
+                problems.append(
+                    f"journal {path}:{ln}: token index gap for rid {rid} "
+                    f"(i={i}, have {r['tokens']})")
+                continue
+            r["tokens"] = i + 1      # overwrite semantics past i
+    return reqs, problems
+
+
+def check_recovery(text: str, crash_text: str | None = None,
+                   journal: pathlib.Path | None = None,
+                   snapshot_every: int | None = None) -> list[str]:
+    """The crash-smoke gate: crashed run really died, resumed run really
+    recovered, and the shared journal conserves every request exactly
+    once across both lifetimes."""
+    problems: list[str] = []
+
+    if crash_text is not None:
+        crash_rows = _json_lines(crash_text)
+        if not any("crash" in r for r in crash_rows):
+            problems.append("recovery: crash log has no {\"crash\": ...} "
+                            "marker — did the fault fire?")
+        if any("tokens_generated" in r for r in crash_rows):
+            problems.append("recovery: crash log contains a summary line "
+                            "— the process did NOT die mid-serve")
+
+    rows = _json_lines(text)
+    summaries = [r for r in rows if "tokens_generated" in r]
+    rec = (summaries[-1].get("recovery") if summaries else None) or next(
+        (r["recovery"] for r in rows if "recovery" in r), None)
+    if not isinstance(rec, dict) or not rec.get("resumed"):
+        problems.append("recovery: resume log has no recovery block "
+                        "(was --resume passed to serve?)")
+        return problems
+    replayed = rec.get("replayed_steps")
+    if not isinstance(replayed, int) or replayed < 1:
+        problems.append(f"recovery: replayed_steps must be a positive "
+                        f"int, got {replayed!r}")
+    elif snapshot_every is not None and replayed > snapshot_every:
+        problems.append(f"recovery: replayed {replayed} steps > snapshot "
+                        f"interval {snapshot_every} — snapshots are not "
+                        f"bounding the journal replay")
+
+    if journal is not None:
+        reqs, jproblems = fold_journal(journal)
+        problems.extend(jproblems)
+        if not reqs:
+            problems.append(f"recovery: journal {journal} holds no "
+                            f"submitted requests")
+        for rid in sorted(reqs):
+            r = reqs[rid]
+            if r["terminal_entries"] != 1:
+                problems.append(
+                    f"recovery: rid {rid} entered a terminal state "
+                    f"{r['terminal_entries']} times across both "
+                    f"lifetimes (must be exactly once)")
+            if r["state"] not in TERMINAL_STATES:
+                problems.append(f"recovery: rid {rid} ended the journal "
+                                f"in non-terminal state {r['state']!r}")
+            if r["state"] == "completed" and \
+                    r["tokens"] != r["gen_len"] + 1:
+                problems.append(
+                    f"recovery: rid {rid} completed with {r['tokens']} "
+                    f"journaled tokens, expected gen_len+1="
+                    f"{r['gen_len'] + 1} (duplicated or lost tokens)")
+    return problems
+
+
 def check(text: str, requests: int | None = None,
-          min_tokens: int = 1, chaos: bool = False) -> list[str]:
+          min_tokens: int = 1, chaos: bool = False,
+          require_plan: bool = True) -> list[str]:
     problems: list[str] = []
     rows = _json_lines(text)
 
     plans = [r["serving_plan"] for r in rows if "serving_plan" in r]
     if not plans:
-        problems.append("no parseable {\"serving_plan\": ...} JSON line")
+        # a --resume run re-derives its plan from serving.json and prints
+        # no serving_plan line; recovery mode relaxes the requirement
+        if require_plan:
+            problems.append("no parseable {\"serving_plan\": ...} JSON line")
     else:
         plan = plans[-1]
         if not isinstance(plan, dict) or plan.get("batch", 0) < 1:
@@ -165,6 +305,18 @@ def main(argv: list[str]) -> int:
     ap.add_argument("--chaos", action="store_true",
                     help="require the fault schedule to have fired with "
                          "zero FAILED requests")
+    ap.add_argument("--recovery", action="store_true",
+                    help="validate a `serve --resume` log (crash-smoke "
+                         "job): recovery block, bounded replay, and "
+                         "journal-folded exactly-once accounting")
+    ap.add_argument("--crash-log", type=pathlib.Path, default=None,
+                    help="stdout of the crashed run (recovery mode): must "
+                         "hold the crash marker and no summary")
+    ap.add_argument("--journal", type=pathlib.Path, default=None,
+                    help="the shared request journal (recovery mode)")
+    ap.add_argument("--snapshot-every", type=int, default=None,
+                    help="snapshot interval that must bound "
+                         "replayed_steps (recovery mode)")
     args = ap.parse_args(argv[1:])
 
     try:
@@ -173,13 +325,26 @@ def main(argv: list[str]) -> int:
         print(f"{args.log}: unreadable ({e!r})")
         return 1
     problems = check(text, requests=args.requests,
-                     min_tokens=args.min_tokens, chaos=args.chaos)
+                     min_tokens=args.min_tokens, chaos=args.chaos,
+                     require_plan=not args.recovery)
+    if args.recovery:
+        crash_text = None
+        if args.crash_log is not None:
+            try:
+                crash_text = args.crash_log.read_text()
+            except OSError as e:
+                problems.append(f"{args.crash_log}: unreadable ({e!r})")
+        problems.extend(check_recovery(
+            text, crash_text=crash_text, journal=args.journal,
+            snapshot_every=args.snapshot_every))
     for p in problems:
         print(p)
     if not problems:
-        print(f"ok: {args.log} (serving_plan parsed, positive predicted "
-              f"throughput, queue drained, outcomes conserve the "
-              f"submitted count{', chaos schedule fired' if args.chaos else ''})")
+        extra = (", chaos schedule fired" if args.chaos else "") + \
+            (", crash recovered with exactly-once accounting"
+             if args.recovery else "")
+        print(f"ok: {args.log} (summary parsed, queue drained, outcomes "
+              f"conserve the submitted count{extra})")
     return 1 if problems else 0
 
 
