@@ -15,6 +15,15 @@ seeded workload shape (`runtime.loadgen`):
 * ``interactive`` — closed-loop think-time sessions: each user submits
   the next request only after the previous answer, so a slow server
   sheds its own offered load.
+* ``heavytail``   — open-loop arrivals with lognormal prompt/gen lengths
+  (most requests short, a few very long): the production shape where a
+  paged KV cache beats per-slot worst-case allocation.  Runs paged with
+  the ``spf`` admission policy (docs/PAGING.md).
+
+The report's ``paging`` block replays the heavy-tail workload twice at
+the **same KV-memory budget** — contiguous per-slot reservations vs the
+paged pool — and gates that paging sustains >= ``ratio_floor`` more
+concurrent active slots (`tools/check_load.py`).
 
 Every mix runs on the **virtual clock** (one predicted decode-step of
 time per loop step), so TTFT / per-token percentiles and tokens/sec are
@@ -46,7 +55,12 @@ import time
 
 import numpy as np
 
-SERVING_SCHEMA = 2
+SERVING_SCHEMA = 3
+
+# The paged-vs-contiguous concurrency floor the paging block is gated on:
+# at the same KV-memory budget the paged allocator must sustain at least
+# this many times the contiguous path's concurrent active slots.
+PAGING_RATIO_FLOOR = 1.5
 
 # One entry per workload shape.  `requests` is the full-run count,
 # `smoke_requests` the CI count; slo budgets are denominated in decode
@@ -93,6 +107,24 @@ MIXES: dict[str, dict] = {
         "slo": {"ttft_p99_steps": 30, "per_token_p99_steps": 3,
                 "min_tok_per_step_frac": 0.05},
     },
+    "heavytail": {
+        "kind": "open",
+        "seed": 19,
+        "requests": 24,
+        "smoke_requests": 12,
+        "rate_factor": 1.5,
+        "prompt_dist": {"kind": "lognormal", "mean": 8, "sigma": 0.6,
+                        "lo": 4, "hi": 48},
+        "gen_dist": {"kind": "lognormal", "mean": 6, "sigma": 0.8,
+                     "lo": 2, "hi": 40},
+        "batch_candidates": [1, 2, 4, 8],
+        "queue_limit": 0,
+        "paged": True,
+        "page_size": 8,
+        "sched": "spf",
+        "slo": {"ttft_p99_steps": 160, "per_token_p99_steps": 4,
+                "min_tok_per_step_frac": 0.15},
+    },
 }
 
 
@@ -135,17 +167,24 @@ def build_trace(spec: dict, n: int, step_s: float, batch: int):
 
 def run_mix(cfg, name: str, spec: dict, *, smoke: bool = False,
             batch: int = 0, batch_candidates=(1, 2, 4, 8),
-            emit_dir=None) -> dict:
+            emit_dir=None, pool_pages: int = 0) -> dict:
     """Run one load mix end-to-end and return its report row.  ``batch``
     forces the decode batch (0 = `select_serving_batch` picks); tests use
-    the override to replay the same trace at two batch sizes."""
+    the override to replay the same trace at two batch sizes.
+
+    Spec keys ``paged`` / ``page_size`` / ``sched`` run the mix on the
+    paged KV cache under the named admission policy; ``pool_pages``
+    overrides the physical pool size (0 = the spec's own ``pool_pages``
+    key, falling back to contiguous-equivalent) — the paging comparison
+    uses it to pin both paths to the same KV-memory budget."""
     import jax.numpy as jnp
 
     from repro.kernels import autotune
     from repro.launch import serve, specs
     from repro.launch.mesh import make_host_mesh, set_mesh
+    from repro.launch.scheduler import Scheduler
     from repro.parallel import sharding as shd
-    from repro.runtime import fault_tolerance, loadgen
+    from repro.runtime import fault_tolerance, loadgen, paging
     from repro.runtime.lifecycle import Lifecycle
 
     n = spec["smoke_requests"] if smoke else spec["requests"]
@@ -200,15 +239,25 @@ def run_mix(cfg, name: str, spec: dict, *, smoke: bool = False,
     else:
         source = loadgen.TraceSource(trace, cfg.vocab_size, seed=seed)
 
+    paged_spec = None
+    if spec.get("paged"):
+        paged_spec = paging.PageSpec.build(
+            batch, max_len, spec.get("page_size", 8),
+            pool_pages=pool_pages or spec.get("pool_pages", 0))
+    sched = spec.get("sched", "fcfs")
+
     mesh = make_host_mesh(data=1, model=1)
     with set_mesh(mesh), shd.use_rules(specs.rules_for(mesh)):
         server = serve.Server(cfg, batch, max_len, prefill_len=prefill_len,
-                              slot_lengths=dist)
+                              slot_lengths=dist, paged=paged_spec)
+        scheduler = (Scheduler(sched, allocator=server.allocator)
+                     if (paged_spec is not None or sched != "fcfs")
+                     else None)
         recorder = loadgen.StepTimeRecorder(
             fault_tolerance.DecodeWatchdog(step_us))
         t0 = time.time()
         stats = serve.serve_loop(server, lc, watchdog=recorder,
-                                 source=source)
+                                 source=source, scheduler=scheduler)
         wall = time.time() - t0
 
     metrics = loadgen.collect_metrics(lc, predicted_step_us=step_us,
@@ -257,6 +306,9 @@ def run_mix(cfg, name: str, spec: dict, *, smoke: bool = False,
         "trace": [t.record() for t in trace],
         "decode_steps": stats["steps"],
         "generated": stats["generated"],
+        "max_concurrent": stats.get("max_concurrent", 0),
+        "paged": paged_spec is not None,
+        "sched": sched,
         **metrics,
         "slo": slo,
         "slo_ok": not violations,
@@ -266,6 +318,14 @@ def run_mix(cfg, name: str, spec: dict, *, smoke: bool = False,
                                          / max(wall, 1e-9), 1),
                  **recorder.summary()},
     }
+    if paged_spec is not None:
+        # pages-allocated-vs-tokens-resident at the pool's peak — the
+        # KV-memory utilization the report (and its gate) cares about
+        row["kv"] = {**(stats.get("kv_peak")
+                        or server.allocator.utilization()),
+                     "pages_peak": stats.get("kv_pages_peak", 0),
+                     "kv_ooms": stats.get("kv_ooms", 0)}
+        server.allocator.check_conserved()   # pool must drain leak-free
     return row
 
 
@@ -341,6 +401,67 @@ def measure_recovery(arch: str = "qwen3_14b", *, smoke: bool = False) -> dict:
     }
 
 
+def measure_paging(cfg, *, smoke: bool = False) -> dict:
+    """The paging block of BENCH_serving.json: replay the heavy-tail
+    workload at the **same KV-memory budget** twice — contiguous
+    per-slot worst-case reservations vs the paged pool — and measure the
+    concurrent active slots each sustains under saturating load.
+
+    The budget is ``cont_batch * max_len`` tokens: exactly what the
+    contiguous cache must reserve for ``cont_batch`` slots.  The paged
+    run gets the same tokens as a shared pool
+    (``budget // page_size`` pages) with more slots than the pool could
+    cover at worst case — the allocator + spf admission turn the
+    heavy-tail length distribution into extra concurrency, which is the
+    whole argument for paging (docs/PAGING.md).  Gated by
+    `tools/check_load.py` at :data:`PAGING_RATIO_FLOOR`.
+    """
+    from repro.runtime import loadgen
+
+    spec = MIXES["heavytail"]
+    n = spec["smoke_requests"] if smoke else spec["requests"]
+    len_rng = np.random.default_rng(spec["seed"])
+    prompts = [max(1, p) for p in
+               loadgen.sample_lengths(len_rng, n, spec["prompt_dist"])]
+    gens = [max(1, g) for g in
+            loadgen.sample_lengths(len_rng, n, spec["gen_dist"])]
+    max_len = max(p + g for p, g in zip(prompts, gens)) + 8
+    page_size = spec.get("page_size", 8)
+    cont_batch = 2
+    budget_tokens = cont_batch * max_len
+    pool_pages = budget_tokens // page_size
+    paged_batch = 8
+
+    def brief(row):
+        return {"batch": row["batch"],
+                "max_concurrent": row["max_concurrent"],
+                "generated": row["generated"],
+                "decode_steps": row["decode_steps"],
+                "tok_per_s": row["tok_per_s"],
+                "outcomes": row["outcomes"]}
+
+    cont = run_mix(cfg, "paging_contiguous",
+                   {**spec, "paged": False, "sched": "fcfs"},
+                   smoke=smoke, batch=cont_batch)
+    paged = run_mix(cfg, "paging_paged", spec, smoke=smoke,
+                    batch=paged_batch, pool_pages=pool_pages)
+    ratio = (paged["max_concurrent"]
+             / max(1, cont["max_concurrent"]))
+    return {
+        "mix": "heavytail",
+        "page_size": page_size,
+        "max_len": max_len,
+        "budget_tokens": budget_tokens,
+        "pool_pages": pool_pages,
+        "contiguous": brief(cont),
+        "paged": {**brief(paged), "pool_pages": pool_pages,
+                  "kv": paged["kv"]},
+        "concurrency_ratio": round(ratio, 3),
+        "ratio_floor": PAGING_RATIO_FLOOR,
+        "ratio_ok": ratio >= PAGING_RATIO_FLOOR,
+    }
+
+
 def build_report(arch: str = "qwen3_14b", mixes=None, smoke: bool = False,
                  emit_dir=None) -> dict:
     """The full BENCH_serving.json payload.  Always measures the smoke
@@ -370,6 +491,11 @@ def build_report(arch: str = "qwen3_14b", mixes=None, smoke: bool = False,
         k: recovery[k] for k in ("crash_step", "snapshot_every",
                                  "replayed_steps", "conserved",
                                  "crash_exit_ok", "resume_exit_ok")}}))
+    paging = measure_paging(cfg, smoke=smoke)
+    print(json.dumps({"paging": {
+        k: paging[k] for k in ("budget_tokens", "pool_pages",
+                               "concurrency_ratio", "ratio_floor",
+                               "ratio_ok")}}))
     return {
         "schema": SERVING_SCHEMA,
         "arch": cfg.name,
@@ -378,6 +504,7 @@ def build_report(arch: str = "qwen3_14b", mixes=None, smoke: bool = False,
         "smoke": bool(smoke),
         "mixes": rows,
         "recovery": recovery,
+        "paging": paging,
         "slo_ok": all(r["slo_ok"] for r in rows.values()),
     }
 

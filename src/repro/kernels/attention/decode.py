@@ -181,6 +181,144 @@ def gqa_decode_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
     return out.reshape(b, hkv, g, dh).reshape(b, hq, dh)
 
 
+def _paged_decode_kernel(len_ref, pt_ref, q_ref, k_ref, v_ref, o_ref,
+                         m_ref, l_ref, acc_ref, *,
+                         scale: float, page_size: int, max_pages: int):
+    """Same online-softmax body as `_decode_kernel`, but the grid's k axis
+    walks the slot's *page table* instead of a contiguous cache: grid step
+    j streams physical page ``pt_ref[slot, j]`` (the index maps below do
+    the translation; ``pt_ref`` itself is unused here but must ride the
+    scalar-prefetch signature)."""
+    del pt_ref
+    bb = pl.program_id(0)
+    jj = pl.program_id(1)
+    length = len_ref[bb]
+    last = jnp.maximum(0, (length - 1) // page_size)
+
+    @pl.when(jj == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when(jj <= last)
+    def _compute():
+        q = q_ref[0]                                     # (g, dh)
+        k = k_ref[0, :, 0]                               # (page_size, dh)
+        v = v_ref[0, :, 0]
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale  # (g, page_size)
+        k_pos = jj * page_size + jax.lax.broadcasted_iota(jnp.int32,
+                                                          s.shape, 1)
+        s = jnp.where(k_pos < length, s, NEG_INF)
+
+        m_prev = m_ref[...]                              # (g, 1)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        p = jnp.where(m_new <= NEG_INF, 0.0, p)          # fully-masked page
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=1, keepdims=True)
+        m_ref[...] = m_new
+        acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+    @pl.when(jj == max_pages - 1)
+    def _store():
+        o_ref[0] = (acc_ref[...] /
+                    jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+def paged_gqa_decode_attention(q: jax.Array, k_pool: jax.Array,
+                               v_pool: jax.Array, pages: jax.Array, *,
+                               length, scale: float | None = None,
+                               interpret: bool = False) -> jax.Array:
+    """Fused decode attention through a paged KV cache.
+
+    q: (B, Hq, dh); k_pool, v_pool: (num_pages, page_size, Hkv, dh) —
+    the layer's shared physical page pools; pages: (B, max_pages) int32
+    per-slot page table (-1 = unassigned); length: (B,) valid-prefix
+    token counts.  Returns (B, Hq, dh).
+
+    The page table rides the *second* scalar-prefetch argument next to
+    the lengths vector: the K/V BlockSpec index maps read
+    ``pages[slot, min(j, last)]`` to pick the physical pool row each grid
+    step streams, so a slot touches exactly its own pages — blocks past a
+    slot's depth are neither streamed nor multiplied, same skip law as
+    the contiguous kernel, and unassigned (-1) entries are never reached
+    because ``j`` is clamped to the slot's last valid page.  The GQA
+    group folds into the q-row axis per KV head exactly like
+    `gqa_decode_attention`; the pool is NOT folded (it has no batch
+    axis — that is the whole point), so the index maps carry the
+    row -> (slot, kv_head) split instead.
+    """
+    out_dtype = q.dtype
+    if q.dtype != k_pool.dtype:
+        q = q.astype(k_pool.dtype)
+    b, hq, dh = q.shape
+    num_pages, page_size, hkv, _ = k_pool.shape
+    max_pages = pages.shape[1]
+    g = hq // hkv
+    if scale is None:
+        scale = 1.0 / (dh ** 0.5)
+    lengths = _row_lengths(length, b, max_pages * page_size)
+    lengths = jnp.repeat(lengths, hkv)              # row r -> slot r // hkv
+    pt = jnp.asarray(pages, jnp.int32)
+    qf = q.reshape(b, hkv, g, dh).reshape(b * hkv, g, dh)
+    bkv = b * hkv
+
+    def kv_index(r, j, len_ref, pt_ref):
+        last = jnp.maximum(0, (len_ref[r] - 1) // page_size)
+        page = pt_ref[r // hkv, jnp.minimum(j, last)]
+        # Clamp keeps even a pathological table in bounds; the length
+        # mask already zeroes anything past the valid prefix.
+        return (jnp.clip(page, 0, num_pages - 1), 0, r % hkv, 0)
+
+    fn = functools.partial(_paged_decode_kernel, scale=scale,
+                           page_size=page_size, max_pages=max_pages)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(bkv, max_pages),
+        in_specs=[
+            pl.BlockSpec((1, g, dh), lambda r, j, len_ref, pt_ref: (r, 0, 0)),
+            pl.BlockSpec((1, page_size, 1, dh), kv_index),
+            pl.BlockSpec((1, page_size, 1, dh), kv_index),
+        ],
+        out_specs=pl.BlockSpec((1, g, dh),
+                               lambda r, j, len_ref, pt_ref: (r, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, dh), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        fn,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((bkv, g, dh), q.dtype),
+        interpret=interpret,
+    )(lengths, pt, qf, k_pool, v_pool)
+    return out.reshape(b, hkv, g, dh).reshape(b, hq, dh).astype(out_dtype)
+
+
+def paged_decode_ref(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
+                     pages: jax.Array, *, length,
+                     scale: float | None = None) -> jax.Array:
+    """Pure-jnp oracle for `paged_gqa_decode_attention`: gather each
+    slot's pages back into a contiguous view, then reuse `decode_ref`."""
+    b = q.shape[0]
+    num_pages, page_size, hkv, dh = k_pool.shape
+    max_pages = pages.shape[1]
+    safe = jnp.clip(jnp.asarray(pages, jnp.int32), 0, num_pages - 1)
+    kg = k_pool[safe].reshape(b, max_pages * page_size, hkv, dh)
+    vg = v_pool[safe].reshape(b, max_pages * page_size, hkv, dh)
+    lv = jnp.asarray(length, jnp.int32)
+    if lv.ndim == 0:
+        lv = jnp.full((b,), lv, jnp.int32)
+    return decode_ref(q, kg, vg, length=lv, scale=scale)
+
+
 def decode_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
                length, scale: float | None = None) -> jax.Array:
     """Pure-jnp oracle for `gqa_decode_attention` (materialized logits).

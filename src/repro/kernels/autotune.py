@@ -656,7 +656,8 @@ def predict_decode_step_us(cfg, batch: int, *, cache_len: int,
                            kv_dtype=jnp.bfloat16,
                            lengths: Sequence[int] | None = None,
                            plans: list[OpPlan] | None = None,
-                           cache: TuneCache | None = None) -> float:
+                           cache: TuneCache | None = None,
+                           block_k: int | None = None) -> float:
     """Predicted wall time of one decode step at this batch, from the tuned
     plans' model times.
 
@@ -671,6 +672,11 @@ def predict_decode_step_us(cfg, batch: int, *, cache_len: int,
     at the ragged batch's active prefixes — the block-rounded per-row
     stream the fused kernel actually executes — instead of the batch-max
     broadcast that charges every short slot the full ``cache_len``.
+
+    ``block_k`` (optional) overrides the tuned plan's KV block in the
+    re-priced term: the paged decode kernel streams one *page* per grid
+    step, so a paged server prices the stream at its page size rather
+    than the contiguous plan's tuned block.
     """
     lengths = lengths or None            # empty == no distribution
     plans = plans if plans is not None else plan_for_model(
@@ -695,7 +701,7 @@ def predict_decode_step_us(cfg, batch: int, *, cache_len: int,
             prob = decode_plan.plan.problem
             model = cost_model.decode_time_model(
                 prob["bkv"], prob["g"], prob["cache_len"], prob["dh"],
-                decode_plan.plan.knobs["block_k"],
+                block_k or decode_plan.plan.knobs["block_k"],
                 dtype_bytes=jnp.dtype(kv_dtype).itemsize,
                 lengths=list(lengths))
             kv_us = n_attn * model["time_s"] * 1e6
@@ -717,6 +723,8 @@ def select_serving_batch(
     latency_budget_ms: float | None = None,
     slot_lengths: Sequence[int] | None = None,
     cache: TuneCache | None = None,
+    pool_pages: int | None = None,
+    page_size: int | None = None,
 ) -> dict:
     """Sweep candidate batch sizes against the tuned plans' predicted step
     time; pick the batch maximizing predicted decode throughput under the
@@ -736,6 +744,13 @@ def select_serving_batch(
     quantiles of it (per-slot active-prefix accounting) instead of the
     batch-max broadcast that over-charges ragged batches — so a mixed
     16/500-token batch no longer pays 500 everywhere in the sweep.
+
+    ``page_size`` (optional, paged serving) adds the free-page term: each
+    candidate's steady-state KV demand in pages is checked against the
+    physical pool (``pool_pages``, or the candidate's contiguous
+    equivalent when None) — a batch whose page demand overflows the pool
+    is infeasible no matter its predicted throughput, and the KV stream
+    is re-priced at the page granularity the paged kernel walks.
     """
     slot_lengths = slot_lengths or None   # empty queue == no distribution
     sweep = []
@@ -764,7 +779,8 @@ def select_serving_batch(
             decode_plans[b] = None
         step_us = predict_decode_step_us(cfg, b, cache_len=cache_len,
                                          kv_dtype=kv_dtype, plans=plans,
-                                         lengths=lengths_b)
+                                         lengths=lengths_b,
+                                         block_k=page_size)
         tok_per_s = b / (step_us * 1e-6)
         feasible = (latency_budget_ms is None
                     or step_us <= latency_budget_ms * 1e3)
@@ -773,11 +789,25 @@ def select_serving_batch(
         if lengths_b is not None:
             row["slot_lengths"] = lengths_b
             row["mean_len"] = sum(lengths_b) / len(lengths_b)
+        if page_size:
+            # free-page term: steady-state page demand at the priced
+            # lengths vs the physical pool
+            lens = lengths_b if lengths_b is not None else [cache_len] * b
+            kv_pages = sum(-(-max(1, l) // page_size) for l in lens)
+            pool = pool_pages or b * (-(-cache_len // page_size))
+            row["kv_pages"] = kv_pages
+            row["pool_pages"] = pool
+            row["free_pages"] = max(0, pool - kv_pages)
+            row["kv_fits"] = kv_pages <= pool
+            row["feasible"] = feasible = feasible and row["kv_fits"]
         sweep.append(row)
         if feasible and (best is None or tok_per_s > best["tok_per_s"]):
             best = sweep[-1]
     if best is None:       # nothing met the budget: least-bad latency wins
-        best = min(sweep, key=lambda r: r["step_us"])
+        # (but never a batch whose pages overflow the pool — that one
+        # cannot be served at all)
+        fits = [r for r in sweep if r.get("kv_fits", True)]
+        best = min(fits or sweep, key=lambda r: r["step_us"])
     return {"batch": best["batch"],
             "predicted_step_us": best["step_us"],
             "predicted_tok_per_s": best["tok_per_s"],

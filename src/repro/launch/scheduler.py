@@ -1,0 +1,90 @@
+"""Pluggable admission scheduling over the Lifecycle queue.
+
+``serve --sched fcfs|spf|paged-aware`` picks which eligible queued
+request fills an idle slot next; with a paged KV cache the scheduler is
+also the backpressure valve — a request is admitted only when the
+:class:`~repro.runtime.paging.PageAllocator` can cover its *predicted*
+footprint (``pages_for(prompt + gen)``), reserved at admission and
+consumed as the slot actually grows, so a full pool shows up as
+REJECTED/queued requests, never as a mid-decode crash.
+
+Policies (all deterministic; ties broken by rid):
+
+- ``fcfs`` — strict arrival order among backoff-eligible requests; if
+  the head does not fit the pool, nothing is admitted (head-of-line
+  blocking is the point: arrival order is the contract).
+- ``spf`` — shortest-predicted-footprint first: the request with the
+  smallest ``prompt + gen`` goes first, which drains heavy-tail mixes
+  with far less pool pressure.
+- ``paged-aware`` — FCFS order, but *first fit*: scan past requests the
+  pool cannot cover right now and admit the first that fits, so one
+  giant request at the head does not idle free pages.
+
+A request whose footprint exceeds what an **empty** pool could hold can
+never be admitted; the scheduler rejects it loudly
+(QUEUED -> REJECTED) instead of queueing it forever.
+"""
+
+from __future__ import annotations
+
+from repro.runtime.lifecycle import Lifecycle, Request
+from repro.runtime.paging import PageAllocator
+
+POLICIES = ("fcfs", "spf", "paged-aware")
+
+
+class Scheduler:
+    """Admission policy over ``Lifecycle.eligible``; pool-aware when an
+    allocator is attached, plain request ordering when not."""
+
+    def __init__(self, policy: str = "fcfs",
+                 allocator: PageAllocator | None = None):
+        if policy not in POLICIES:
+            raise ValueError(f"unknown policy {policy!r}; "
+                             f"expected one of {POLICIES}")
+        self.policy = policy
+        self.allocator = allocator
+        self.rejected_oversize = 0
+
+    @staticmethod
+    def footprint_tokens(req: Request) -> int:
+        """Predicted resident KV tokens at completion: the prompt plus
+        one cache entry per generated token."""
+        return int(len(req.prompt)) + int(req.gen_len)
+
+    def _fits_now(self, req: Request) -> bool:
+        return self.allocator is None or \
+            self.allocator.can_admit(self.footprint_tokens(req))
+
+    def pop_ready(self, lc: Lifecycle, step: int) -> Request | None:
+        """Admit (and pool-reserve) the next request, or None when
+        nothing eligible fits.  Drop-in for ``Lifecycle.pop_ready``."""
+        candidates = lc.eligible(step)
+
+        # Oversize requests can never be served: reject them all now so
+        # they stop occupying queue positions (loud backpressure).
+        if self.allocator is not None:
+            for req in list(candidates):
+                if not self.allocator.fits_pool(self.footprint_tokens(req)):
+                    lc.reject(req, step)
+                    self.rejected_oversize += 1
+                    candidates.remove(req)
+        if not candidates:
+            return None
+
+        if self.policy == "spf":
+            candidates.sort(key=lambda r: (self.footprint_tokens(r), r.rid))
+            pick = candidates[0] if self._fits_now(candidates[0]) else None
+        elif self.policy == "paged-aware":
+            pick = next((r for r in candidates if self._fits_now(r)), None)
+        else:                               # fcfs: head of line or nothing
+            pick = candidates[0] if self._fits_now(candidates[0]) else None
+        if pick is None:
+            return None
+
+        lc.take(pick)
+        if self.allocator is not None:
+            # Pledge the full predicted footprint; PageAllocator.ensure
+            # consumes the pledge page-by-page as decode actually grows.
+            self.allocator.reserve(pick.rid, self.footprint_tokens(pick))
+        return pick

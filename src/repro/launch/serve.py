@@ -58,9 +58,10 @@ from repro.kernels import autotune
 from repro.launch import steps
 from repro.launch.mesh import make_host_mesh, set_mesh
 from repro.launch import specs
+from repro.launch.scheduler import POLICIES, Scheduler
 from repro.models import transformer
 from repro.parallel import sharding as shd
-from repro.runtime import fault_tolerance, faults, loadgen
+from repro.runtime import fault_tolerance, faults, loadgen, paging
 from repro.runtime import journal as journal_mod
 from repro.runtime import snapshot as snapshot_mod
 from repro.runtime.lifecycle import (Lifecycle, Request, State, TERMINAL)
@@ -74,10 +75,19 @@ CRASH_EXIT = 17
 class Server:
     def __init__(self, cfg, batch: int, max_len: int,
                  prefill_len: int = 0, autotune_kernels: bool = True,
-                 slot_lengths=None, injector=None):
+                 slot_lengths=None, injector=None, paged=None):
         self.cfg = cfg
         self.batch = batch
         self.max_len = max_len
+        # `paged` (a runtime.paging.PageSpec, or None for the contiguous
+        # cache) switches the KV cache to the pooled page layout
+        # (docs/PAGING.md): every layer shares one physical page pool and
+        # the cache carries a per-slot page table the host-side allocator
+        # mirrors.  The allocator is the truth; `_sync_pages` pushes its
+        # table to the device cache after any alloc/free.
+        self.paged = paged
+        self.allocator = (paging.PageAllocator(paged, batch)
+                          if paged is not None else None)
         # Close the DSE loop before taking traffic: pre-tune the decode-path
         # matmul shapes, the prefill flash-attention shape AND the fused
         # decode-attention fold so the kernel engine's cache is warm
@@ -98,14 +108,15 @@ class Server:
                             if autotune_kernels else [])
         self.params = transformer.init(cfg, jax.random.PRNGKey(0),
                                        dtype=jnp.float32)
-        self.serve_step = jax.jit(steps.make_guarded_serve_step(cfg))
+        self.serve_step = jax.jit(
+            steps.make_guarded_serve_step(cfg, paged=paged))
         # The degradation step: same math forced onto the jnp reference
         # path ($REPRO_DECODE_KERNEL=off at trace time) — built lazily on
         # the first kernel-dispatch fault.
         self._serve_step_ref = None
         self.injector = injector
         self.cache = transformer.cache_init(cfg, batch, max_len,
-                                            dtype=jnp.float32)
+                                            dtype=jnp.float32, paged=paged)
         self.slot_len = np.zeros(batch, np.int32)      # tokens generated
         self.slot_target = np.zeros(batch, np.int32)   # stop length
         self.slot_req = -np.ones(batch, np.int32)      # request id
@@ -133,7 +144,16 @@ class Server:
             # one masked scatter would alias ring rows. A fresh slot only
             # ever attends the last `window` prompt tokens anyway.
             prompt = prompt[-self.cfg.sliding_window:]
-        self.cache = transformer.cache_reset_slot(self.cache, slot)
+        self.cache = transformer.cache_reset_slot(self.cache, slot,
+                                                  paged=self.paged)
+        if self.allocator is not None:
+            # Drop any pages a previous occupant left behind (idempotent),
+            # then cover the prompt before the forward — the masked scatter
+            # needs physical rows to land in.  `ensure` consumes the
+            # scheduler's admission reservation as the pages land.
+            self.allocator.free_slot(slot, rid=int(self.slot_req[slot]))
+            self.allocator.ensure(slot, prompt.size, rid=req_id)
+            self._sync_pages()
         if self.injector is not None:
             self.injector.prefill_hook(slot, req_id)   # may raise
         toks = jnp.zeros((self.batch, prompt.size),
@@ -146,6 +166,79 @@ class Server:
         self.slot_target[slot] = gen_len
         self.slot_req[slot] = req_id
         return bool(np.asarray(ok)[slot])
+
+    def can_chunk(self) -> bool:
+        """Chunked prefill needs the (B, S) active-mask machinery, which
+        only the attention families implement (per-slot valid-prefix
+        scatter); the ring-buffer SWA layout and the chaos injector's
+        ordinal-keyed prefill faults stay on the one-slot path."""
+        return (self.cfg.family in ("dense", "moe") and self.cfg.causal
+                and not self.cfg.sliding_window and self.injector is None)
+
+    def admit_chunk(self, admits, step: int = 0):
+        """Chunked prefill: pack several variable-length prompts into ONE
+        forward, with every in-flight decode slot riding along at column
+        0 (its next decode token) — prefill no longer stalls decode.
+
+        ``admits`` is a list of ``(slot, rid, prompt, gen_len)`` for idle
+        slots.  Each admitted slot's row carries its prompt left-aligned
+        under a (B, S) active mask (only valid columns write cache rows
+        and advance the slot's length); a riding decode slot's row is its
+        ``last_tok`` at column 0.  The guarded step picks each slot's
+        *last valid* logits, so admitted slots get their first token and
+        riding slots their next one from the same forward.
+
+        Returns ``(ok_admit, nxt, rode, done, bad)``: per-admitted-slot
+        finite-logits verdicts, the token array, the riding slots, and
+        the riding slots that finished / went non-finite this step
+        (mirroring `decode_step`'s contract for exactly those slots)."""
+        width = max(int(np.asarray(p).size) for _, _, p, _ in admits)
+        rode = [s for s in range(self.batch) if self.slot_req[s] >= 0]
+        for slot, rid, prompt, _ in admits:
+            self.cache = transformer.cache_reset_slot(self.cache, slot,
+                                                      paged=self.paged)
+            if self.allocator is not None:
+                self.allocator.free_slot(slot, rid=int(self.slot_req[slot]))
+                self.allocator.ensure(slot, np.asarray(prompt).size, rid=rid)
+        if self.allocator is not None:
+            depths = np.asarray(self.cache["lengths"])
+            for s in rode:                     # riding slots grow one token
+                self.allocator.ensure(s, int(depths[s]) + 1,
+                                      rid=int(self.slot_req[s]))
+            self._sync_pages()
+        tokens = np.zeros((self.batch, width), np.int32)
+        act = np.zeros((self.batch, width), bool)
+        last = np.asarray(self.last_tok)
+        for s in rode:
+            tokens[s, 0] = int(last[s, 0])
+            act[s, 0] = True
+        for slot, _, prompt, _ in admits:
+            p = np.asarray(prompt, np.int32)
+            tokens[slot, :p.size] = p
+            act[slot, :p.size] = True
+        nxt, ok, self.cache = self.serve_step(self.params, self.cache,
+                                              jnp.asarray(tokens),
+                                              jnp.asarray(act),
+                                              jnp.asarray(self.poison))
+        self.poison[:] = False
+        ok = np.asarray(ok)
+        nxt_np = np.asarray(nxt)
+        ok_admit = {}
+        new_last = last.copy()
+        for slot, rid, _, gen_len in admits:
+            new_last[slot, 0] = int(nxt_np[slot, 0])
+            self.slot_len[slot] = 0
+            self.slot_target[slot] = gen_len
+            self.slot_req[slot] = rid
+            ok_admit[slot] = bool(ok[slot])
+        adv = [s for s in rode if ok[s]]
+        for s in adv:
+            new_last[s, 0] = int(nxt_np[s, 0])
+            self.slot_len[s] += 1
+        self.last_tok = jnp.asarray(new_last)
+        done = [s for s in adv if self.slot_len[s] >= self.slot_target[s]]
+        bad = [s for s in rode if not ok[s]]
+        return ok_admit, nxt, rode, done, bad
 
     def restore_slot(self, slot: int, rid: int, prompt, tokens,
                      gen_len: int) -> None:
@@ -226,18 +319,36 @@ class Server:
         self.last_tok = jnp.asarray(np.asarray(arrays["last_tok"],
                                                np.int32))
         self.poison[:] = False
+        if self.paged is not None:
+            # Allocation order is canonical (min-heap), so the restored
+            # page table fully determines the allocator state — rebuild
+            # it rather than snapshotting it (docs/PAGING.md).
+            self.allocator = paging.PageAllocator.adopt(
+                self.paged, np.asarray(self.cache["pages"]))
 
     def release_slot(self, slot: int) -> None:
         """Free a slot and zero its cache rows — quarantine for a poisoned
         slot, plain recycling for a completed one (the zeroing is also done
         by the next prefill; doing it here means a NaN-corrupted slot never
-        sits armed in the cache)."""
+        sits armed in the cache).  In paged mode the slot's pages return
+        to the pool and its outstanding reservation is dropped."""
+        rid = int(self.slot_req[slot])
         self.slot_req[slot] = -1
-        self.cache = transformer.cache_reset_slot(self.cache, slot)
+        self.cache = transformer.cache_reset_slot(self.cache, slot,
+                                                  paged=self.paged)
+        if self.allocator is not None:
+            self.allocator.free_slot(slot, rid=rid)
+            self._sync_pages()
+
+    def _sync_pages(self) -> None:
+        """Push the host allocator's page table to the device cache (the
+        allocator is the truth; the cache copy is what the kernels read)."""
+        self.cache["pages"] = jnp.asarray(self.allocator.table)
 
     def corrupt_kv(self, slot: int) -> None:
         """Chaos hook: NaN over one slot's KV/state cache rows."""
-        self.cache = transformer.cache_poison_slot(self.cache, slot)
+        self.cache = transformer.cache_poison_slot(self.cache, slot,
+                                                   paged=self.paged)
 
     def decode_step(self, step: int = 0, use_ref: bool = False):
         """One ragged decode step: every occupied slot attends over its own
@@ -253,6 +364,22 @@ class Server:
         May raise `faults.KernelDispatchFault` in chaos mode."""
         if self.injector is not None and not use_ref:
             self.injector.apply_decode_faults(self, step)   # may raise
+        if self.allocator is not None:
+            # Decode-boundary crossing: every occupied slot writes one
+            # token this step — grow its page table to cover depth + 1
+            # *before* the forward so the scatter has a physical row.
+            # With reservation-priced admission this never OOMs; an
+            # overcommitted pool raises PageOOM and the serve loop turns
+            # it into an eviction (backpressure), not a crash.
+            depths = np.asarray(self.cache["lengths"])
+            grew = False
+            for slot in range(self.batch):
+                if self.slot_req[slot] >= 0:
+                    grew |= self.allocator.ensure(
+                        slot, int(depths[slot]) + 1,
+                        rid=int(self.slot_req[slot]))
+            if grew:
+                self._sync_pages()
         active = jnp.asarray(self.slot_req >= 0)
         poison = jnp.asarray(self.poison)
         step_fn = self._ref_step() if use_ref else self.serve_step
@@ -276,7 +403,8 @@ class Server:
         cached, so the env flip is scoped to the first call)."""
         if self._serve_step_ref is None:
             import os
-            fn = jax.jit(steps.make_guarded_serve_step(self.cfg))
+            fn = jax.jit(steps.make_guarded_serve_step(self.cfg,
+                                                       paged=self.paged))
             old = os.environ.get("REPRO_DECODE_KERNEL")
             os.environ["REPRO_DECODE_KERNEL"] = "off"
             try:
@@ -295,8 +423,15 @@ class Server:
 
 def serve_loop(server: Server, lc: Lifecycle, *, watchdog=None,
                max_steps: int = 100_000, source=None, journal=None,
-               snapshots=None, start_step: int = 0) -> dict:
+               snapshots=None, start_step: int = 0,
+               scheduler=None) -> dict:
     """Drain every admitted request to a terminal state.
+
+    ``scheduler`` (optional, `launch.scheduler.Scheduler`) replaces the
+    lifecycle's plain FCFS pop with a pluggable admission policy; with a
+    paged server it is also the backpressure valve — requests are
+    admitted only when the page allocator can cover their predicted
+    footprint, and requests that could never fit are REJECTED loudly.
 
     The loop invariant replacing the old ``while completed < requests``
     spin: it runs while *any* request is non-terminal (or an arrival
@@ -331,7 +466,19 @@ def serve_loop(server: Server, lc: Lifecycle, *, watchdog=None,
     last_snap = start_step
     generated = 0
     kernel_fallbacks = 0
+    max_concurrent = 0
+    kv_pages_peak = 0
+    kv_peak = None           # allocator utilization snapshot at the peak
+    kv_ooms = 0
+    chunked_prefills = 0
     t_start = time.monotonic()
+
+    def note_kv() -> None:
+        nonlocal kv_pages_peak, kv_peak
+        a = server.allocator
+        if a is not None and a.allocated_pages >= kv_pages_peak:
+            kv_pages_peak = a.allocated_pages
+            kv_peak = a.utilization()
     first_new_token_s = None
     tick = getattr(lc.clock, "on_step", None)
 
@@ -378,27 +525,69 @@ def serve_loop(server: Server, lc: Lifecycle, *, watchdog=None,
         if snapshots is not None and snapshots.due(step, last_snap):
             take_snapshot()
         # -- fill idle slots from the admission queue -----------------------
+        admits = []
         for slot in range(server.batch):
             if server.slot_req[slot] >= 0:
                 continue
-            req = lc.pop_ready(step)
+            req = (scheduler.pop_ready(lc, step) if scheduler is not None
+                   else lc.pop_ready(step))
             if req is None:
                 break
-            lc.transition(req, State.PREFILLING, step)
-            try:
-                ok = server.prefill(slot, req.rid, req.prompt, req.gen_len)
-            except faults.PrefillInterrupt:
-                # the slot was reset before the interrupt: just release it
-                server.release_slot(slot)
-                lc.evict(req, step, reason="prefill_interrupt")
-                continue
-            if not ok:
-                server.release_slot(slot)
-                lc.evict(req, step, reason="nan_prefill")
-                continue
-            emit(req, int(server.last_tok[slot, 0]))
-            lc.record_first_token(req)
-            lc.transition(req, State.DECODING, step)
+            admits.append((slot, req))
+        chunk = None
+        if len(admits) > 1 and server.can_chunk():
+            # Chunked prefill: every admitted prompt — plus each in-flight
+            # decode slot's next token — packed into ONE forward, so a
+            # burst of arrivals costs one step instead of stalling decode
+            # behind per-request prefills.
+            for slot, req in admits:
+                lc.transition(req, State.PREFILLING, step)
+            ok_admit, c_nxt, c_rode, c_done, c_bad = server.admit_chunk(
+                [(slot, req.rid, req.prompt, req.gen_len)
+                 for slot, req in admits], step)
+            chunked_prefills += 1
+            for slot, req in admits:
+                if not ok_admit[slot]:
+                    server.release_slot(slot)
+                    lc.evict(req, step, reason="nan_prefill")
+                    continue
+                emit(req, int(server.last_tok[slot, 0]))
+                lc.record_first_token(req)
+                lc.transition(req, State.DECODING, step)
+            chunk = (c_nxt, c_rode, c_done, c_bad)
+        else:
+            for slot, req in admits:
+                lc.transition(req, State.PREFILLING, step)
+                try:
+                    ok = server.prefill(slot, req.rid, req.prompt,
+                                        req.gen_len)
+                except faults.PrefillInterrupt:
+                    # the slot was reset before the interrupt: release it
+                    server.release_slot(slot)
+                    if server.allocator is not None:
+                        server.allocator.release_reservation(req.rid)
+                    lc.evict(req, step, reason="prefill_interrupt")
+                    continue
+                except paging.PageOOM:
+                    # Defensive: admission reservations normally cover the
+                    # prompt; an overcommitted pool requeues the request
+                    # (backpressure), never crashes the server.
+                    kv_ooms += 1
+                    server.release_slot(slot)
+                    if server.allocator is not None:
+                        server.allocator.release_reservation(req.rid)
+                    lc.evict(req, step, reason="kv_oom")
+                    continue
+                if not ok:
+                    server.release_slot(slot)
+                    lc.evict(req, step, reason="nan_prefill")
+                    continue
+                emit(req, int(server.last_tok[slot, 0]))
+                lc.record_first_token(req)
+                lc.transition(req, State.DECODING, step)
+        max_concurrent = max(max_concurrent,
+                             int((server.slot_req >= 0).sum()))
+        note_kv()
         # -- deadline sweep -------------------------------------------------
         for req in lc.check_deadlines(step):
             tslot = np.nonzero(server.slot_req == req.rid)[0]
@@ -424,27 +613,50 @@ def serve_loop(server: Server, lc: Lifecycle, *, watchdog=None,
             # earliest eligibility instead of spinning
             step = max(step + 1, min(jumps))
             continue
-        # -- one ragged decode step -----------------------------------------
-        t0 = time.monotonic()
-        try:
-            nxt, done, bad = server.decode_step(step)
-        except faults.KernelDispatchFault:
-            # graceful degradation: finish the step on the jnp reference
-            # path and quarantine the tuned decode plan for re-tune
-            kernel_fallbacks += 1
-            dp = next((p for p in server.kernel_plan
-                       if p.op == "attn_decode"), None)
-            if dp is not None:
-                autotune.mark_plan_poisoned(dp.plan.key)
-            nxt, done, bad = server.decode_step(step, use_ref=True)
-        if watchdog is not None:
-            watchdog.observe(step, time.monotonic() - t0)
+        # -- one ragged decode step (or the chunk's riding results) ---------
+        if chunk is not None:
+            # the chunked forward already advanced every riding decode
+            # slot; newly admitted slots take their first decode step on
+            # the next iteration
+            nxt, rode, done, bad = chunk
+            advanced = [s for s in rode if s not in bad]
+        else:
+            t0 = time.monotonic()
+            try:
+                nxt, done, bad = server.decode_step(step)
+            except faults.KernelDispatchFault:
+                # graceful degradation: finish the step on the jnp
+                # reference path and quarantine the tuned decode plan for
+                # re-tune
+                kernel_fallbacks += 1
+                dp = next((p for p in server.kernel_plan
+                           if p.op == "attn_decode"), None)
+                if dp is not None:
+                    autotune.mark_plan_poisoned(dp.plan.key)
+                nxt, done, bad = server.decode_step(step, use_ref=True)
+            except paging.PageOOM:
+                # Pool overcommit mid-decode (reservations disabled, or a
+                # resume without them): evict the cheapest-to-redo slot —
+                # fewest generated tokens, deterministic tie-break — and
+                # retry the step with its pages back in the pool.
+                kv_ooms += 1
+                victim = min((s for s in range(server.batch)
+                              if server.slot_req[s] >= 0),
+                             key=lambda s: (int(server.slot_len[s]), s))
+                vreq = lc.requests[int(server.slot_req[victim])]
+                server.release_slot(victim)
+                lc.evict(vreq, step, reason="kv_oom")
+                step += 1
+                continue
+            if watchdog is not None:
+                watchdog.observe(step, time.monotonic() - t0)
+            advanced = [s for s in range(server.batch)
+                        if server.slot_req[s] >= 0 and s not in bad]
+        note_kv()                    # decode growth can also set the peak
         # tokens for every slot that advanced this step
-        for slot in range(server.batch):
-            rid = int(server.slot_req[slot])
-            if rid >= 0 and slot not in bad:
-                emit(lc.requests[rid], int(nxt[slot, 0]))
-                generated += 1
+        for slot in advanced:
+            emit(lc.requests[int(server.slot_req[slot])], int(nxt[slot, 0]))
+            generated += 1
         for slot in bad:
             # quarantine exactly the poisoned slot: reset + requeue; the
             # neighbours' rows were never touched (per-slot masked writes)
@@ -464,6 +676,11 @@ def serve_loop(server: Server, lc: Lifecycle, *, watchdog=None,
     return {"generated": generated, "steps": step,
             "kernel_fallbacks": kernel_fallbacks,
             "first_new_token_s": first_new_token_s,
+            "max_concurrent": max_concurrent,
+            "kv_pages_peak": kv_pages_peak,
+            "kv_peak": kv_peak,
+            "kv_ooms": kv_ooms,
+            "chunked_prefills": chunked_prefills,
             "snapshots_saved": 0 if snapshots is None else snapshots.saved}
 
 
@@ -654,10 +871,18 @@ def prepare_resume(state_dir, cfg=None) -> dict:
                                                 resume_step=resume_step)
 
     # -- server: snapshot arrays + deterministic re-prefill -----------------
+    pg = serving.get("paging")
+    paged = (paging.PageSpec(page_size=int(pg["page_size"]),
+                             num_pages=int(pg["num_pages"]),
+                             max_pages=int(pg["max_pages"]))
+             if pg else None)
     server = Server(cfg, int(serving["batch"]), int(serving["max_len"]),
                     prefill_len=int(serving["prefill_len"]),
-                    slot_lengths=serving["dist"], injector=injector)
+                    slot_lengths=serving["dist"], injector=injector,
+                    paged=paged)
     if arrays is not None:
+        # restore_state re-adopts the page allocator from the restored
+        # table (canonical allocation order makes it snapshot-free)
         server.restore_state(arrays)
 
     reprefilled, placed = [], set()
@@ -692,6 +917,25 @@ def prepare_resume(state_dir, cfg=None) -> dict:
         placed.add(rid)
         reprefilled.append(rid)
 
+    # -- scheduler: re-pledge in-flight footprints ---------------------------
+    sched_policy = serving.get("sched", "fcfs")
+    scheduler = (Scheduler(sched_policy, allocator=server.allocator)
+                 if (paged is not None or sched_policy != "fcfs") else None)
+    if server.allocator is not None:
+        # The dead process's reservations died with it; re-pledge each
+        # placed request's *remaining* footprint so post-resume admission
+        # prices the pool exactly like the uninterrupted run.
+        for slot in range(server.batch):
+            rid = int(server.slot_req[slot])
+            if rid < 0 or rid not in lc.requests:
+                continue
+            req = lc.requests[rid]
+            total = int(len(req.prompt)) + int(req.gen_len)
+            short = (server.allocator.pages_for(total)
+                     - server.allocator.slot_pages(slot))
+            if short > 0:
+                server.allocator.reserve(rid, short * paged.page_size)
+
     # -- arrival source: re-cursor past the journaled prefix ----------------
     source = None
     if serving.get("load_trace"):
@@ -719,15 +963,16 @@ def prepare_resume(state_dir, cfg=None) -> dict:
     return {"cfg": cfg, "serving": serving, "server": server, "lc": lc,
             "journal": journal, "snapshots": snapshots,
             "injector": injector, "source": source, "step_us": step_us,
-            "start_step": resume_step, "recovery": recovery}
+            "start_step": resume_step, "recovery": recovery,
+            "scheduler": scheduler}
 
 
 def _summary(server, lc, stats, wall, *, batch, batch_source,
-             watchdog) -> dict:
+             watchdog, scheduler=None) -> dict:
     """The final conservation-bearing summary line (shared between a
     fresh run and `serve --resume`)."""
     outcomes = lc.counters()
-    return {
+    out = {
         "arch": server.cfg.name,
         "requests": outcomes["completed"],      # back-compat: served count
         "submitted": lc.submitted,
@@ -740,12 +985,28 @@ def _summary(server, lc, stats, wall, *, batch, batch_source,
         "retries_total": lc.retried_events,
         "kernel_fallbacks": stats["kernel_fallbacks"],
         "snapshots_saved": stats.get("snapshots_saved", 0),
+        "max_concurrent": stats.get("max_concurrent", 0),
+        "chunked_prefills": stats.get("chunked_prefills", 0),
         "ttft_ms": lc.ttft_percentiles(),
         "per_token_ms": lc.per_token_percentiles(),
         "request_outcomes": lc.outcome_trace(),
         "watchdog": watchdog.summary(),
         "kernel_plan": [p.record() for p in server.kernel_plan],
     }
+    if scheduler is not None:
+        out["sched"] = {"policy": scheduler.policy,
+                        "rejected_oversize": scheduler.rejected_oversize}
+    if server.allocator is not None:
+        # KV-memory utilization: pages allocated vs tokens actually
+        # resident in them at drain (plus the run's peak), the numbers
+        # BENCH_serving.json's paging comparison is gated on.
+        resident = int(np.asarray(server.cache["lengths"])[
+            server.slot_req >= 0].sum())
+        out["kv"] = {**server.allocator.utilization(resident),
+                     "pages_peak": stats.get("kv_pages_peak", 0),
+                     "peak": stats.get("kv_peak"),
+                     "kv_ooms": stats.get("kv_ooms", 0)}
+    return out
 
 
 def _run_resume(args) -> int:
@@ -775,7 +1036,8 @@ def _run_resume(args) -> int:
                 stats = serve_loop(server, lc, watchdog=watchdog,
                                    source=R["source"], journal=R["journal"],
                                    snapshots=R["snapshots"],
-                                   start_step=R["start_step"])
+                                   start_step=R["start_step"],
+                                   scheduler=R["scheduler"])
             except faults.CrashFault as cf:
                 print(json.dumps({"crash": {"step": cf.step,
                                             "msg": str(cf),
@@ -788,7 +1050,8 @@ def _run_resume(args) -> int:
         autotune.install_dispatch_hook(None)
 
     summary = _summary(server, lc, stats, wall, batch=server.batch,
-                       batch_source="resume", watchdog=watchdog)
+                       batch_source="resume", watchdog=watchdog,
+                       scheduler=R["scheduler"])
     summary["recovery"] = {
         **R["recovery"],
         "prepare_s": round(prep_s, 3),
@@ -829,6 +1092,21 @@ def main(argv=None):
                          "sweep (None = pure throughput)")
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--gen", type=int, default=12)
+    ap.add_argument("--paged", action="store_true",
+                    help="paged KV cache: a fixed pool of page-size-token "
+                         "KV blocks shared across slots through per-slot "
+                         "page tables (docs/PAGING.md)")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="tokens per KV page (with --paged)")
+    ap.add_argument("--pool-pages", type=int, default=0,
+                    help="physical pages in the shared pool; 0 = "
+                         "contiguous-equivalent "
+                         "(batch * ceil(max_len / page_size))")
+    ap.add_argument("--sched", default="fcfs", choices=list(POLICIES),
+                    help="admission policy over the request queue; with "
+                         "--paged admission is additionally gated on the "
+                         "allocator covering the request's predicted "
+                         "KV footprint")
     ap.add_argument("--queue-limit", type=int, default=0,
                     help="admission-queue bound; submits past it are "
                          "REJECTED (0 = unbounded)")
@@ -923,10 +1201,25 @@ def main(argv=None):
             kv_dtype=jnp.float32,          # the Server's cache dtype
             candidates=tuple(cands),
             slot_lengths=dist,
-            latency_budget_ms=args.latency_budget_ms)
+            latency_budget_ms=args.latency_budget_ms,
+            pool_pages=(args.pool_pages or None) if args.paged else None,
+            page_size=args.page_size if args.paged else None)
         decision["source"] = "autotune"
         batch = decision["batch"]
     print(json.dumps({"serving_plan": decision}))
+
+    paged = None
+    if args.paged:
+        if cfg.family not in ("dense", "moe") or not cfg.causal \
+                or cfg.sliding_window:
+            ap.error("--paged needs a dense/moe causal arch without "
+                     "sliding-window attention (the SWA ring buffer is "
+                     "contiguous-only)")
+        paged = paging.PageSpec.build(batch, max_len, args.page_size,
+                                      pool_pages=args.pool_pages)
+        print(json.dumps({"paging": {"page_size": paged.page_size,
+                                     "num_pages": paged.num_pages,
+                                     "max_pages": paged.max_pages}}))
 
     injector = None
     plan = build_fault_plan(chaos=args.chaos, fault_seed=args.fault_seed,
@@ -1002,13 +1295,22 @@ def main(argv=None):
             "requests": args.requests, "prompt_len": args.prompt_len,
             "gen": args.gen,
             "ttft_ms": args.ttft_ms, "deadline_ms": args.deadline_ms,
+            "paging": (None if paged is None else
+                       {"page_size": paged.page_size,
+                        "num_pages": paged.num_pages,
+                        "max_pages": paged.max_pages}),
+            "sched": args.sched,
         })
 
     try:
         with set_mesh(mesh), shd.use_rules(rules):
             server = Server(cfg, batch, max_len,
                             prefill_len=prefill_len,
-                            slot_lengths=dist, injector=injector)
+                            slot_lengths=dist, injector=injector,
+                            paged=paged)
+            scheduler = (Scheduler(args.sched, allocator=server.allocator)
+                         if (paged is not None or args.sched != "fcfs")
+                         else None)
             predicted_us = (autotune.predict_decode_step_us(
                 cfg, batch, cache_len=max_len, kv_dtype=jnp.float32,
                 lengths=autotune._quantile_lengths(batch, dist, max_len),
@@ -1019,7 +1321,8 @@ def main(argv=None):
             try:
                 stats = serve_loop(server, lc, watchdog=watchdog,
                                    source=source, journal=journal,
-                                   snapshots=snapshots)
+                                   snapshots=snapshots,
+                                   scheduler=scheduler)
             except faults.CrashFault as cf:
                 # The one fault class the process must NOT absorb: die
                 # with no summary (the conservation line never prints) and
@@ -1038,7 +1341,8 @@ def main(argv=None):
         autotune.install_dispatch_hook(None)
 
     summary = _summary(server, lc, stats, wall, batch=batch,
-                       batch_source=decision["source"], watchdog=watchdog)
+                       batch_source=decision["source"], watchdog=watchdog,
+                       scheduler=scheduler)
     if injector is not None:
         summary["faults"] = injector.record()
     if source is not None:

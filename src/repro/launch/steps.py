@@ -66,7 +66,19 @@ def make_prefill_step(cfg: ModelConfig):
     return prefill_step
 
 
-def make_serve_step(cfg: ModelConfig):
+def _last_valid_logits(logits, active, s):
+    """Final-position logits per slot.  With a (B, S) chunked-prefill
+    ``active`` each slot's "final position" is the last one it actually
+    wrote (variable-length prompts packed into one chunk); everywhere
+    else it is literally the last column."""
+    if active is not None and active.ndim == 2:
+        idx = jnp.clip(jnp.sum(active, axis=1, dtype=jnp.int32) - 1, 0,
+                       s - 1)
+        return jnp.take_along_axis(logits, idx[:, None, None], axis=1)[:, 0]
+    return logits[:, -1]
+
+
+def make_serve_step(cfg: ModelConfig, paged=None):
     """One decode step: new token(s) in, next token + updated cache out.
 
     ``active`` ((B,) bool, optional) is the ragged continuous-batching
@@ -74,19 +86,25 @@ def make_serve_step(cfg: ModelConfig):
     ``lengths``; ``None`` advances everyone (the uniform-batch case).
     The same step serves two shapes: S=1 is the decode hot loop, S>1 with
     a one-hot ``active`` is the masked batched prefill that fills exactly
-    one slot's cache from depth 0 without touching its neighbours.
+    one slot's cache from depth 0 without touching its neighbours — and a
+    (B, S) ``active`` is the chunked prefill that packs several
+    variable-length prompts (plus riding decode slots) into one forward.
+    ``paged`` (a `runtime.paging.PageSpec`, static) switches the cache to
+    the paged pool layout.
     """
 
     def serve_step(params, cache, tokens, active=None):
         logits, new_cache, _ = transformer.forward(
-            cfg, params, {"tokens": tokens}, cache=cache, active=active)
-        nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+            cfg, params, {"tokens": tokens}, cache=cache, active=active,
+            paged=paged)
+        last = _last_valid_logits(logits, active, tokens.shape[1])
+        nxt = jnp.argmax(last, axis=-1).astype(jnp.int32)
         return nxt[:, None], new_cache
 
     return serve_step
 
 
-def make_guarded_serve_step(cfg: ModelConfig):
+def make_guarded_serve_step(cfg: ModelConfig, paged=None):
     """`make_serve_step` plus the per-slot NaN/Inf logits guard (and the
     chaos logits-poison hook) — the step the fault-tolerant server runs.
 
@@ -102,8 +120,9 @@ def make_guarded_serve_step(cfg: ModelConfig):
 
     def serve_step(params, cache, tokens, active=None, poison=None):
         logits, new_cache, _ = transformer.forward(
-            cfg, params, {"tokens": tokens}, cache=cache, active=active)
-        last = logits[:, -1]
+            cfg, params, {"tokens": tokens}, cache=cache, active=active,
+            paged=paged)
+        last = _last_valid_logits(logits, active, tokens.shape[1])
         if poison is not None:
             last = jnp.where(poison[:, None], jnp.nan, last)
         ok = jnp.all(jnp.isfinite(last), axis=-1)

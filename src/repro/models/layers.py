@@ -183,9 +183,11 @@ def attention_apply(
     positions: jax.Array,               # (S,) or (B, S) int32 abs positions
     cache: Params | None = None,        # {"k","v": (B, S_cache, Hkv, dh)}
     lengths: jax.Array | None = None,   # (B,) per-slot valid cache prefix
-    active: jax.Array | None = None,    # (B,) slots that write/advance
+    active: jax.Array | None = None,    # (B,) or (B, S) write/advance mask
     chunk_q: int | None = None,
     prefill: bool = False,              # serving prefill (fwd-only, no grad)
+    pages: jax.Array | None = None,     # (B, max_pages) int32 page table
+    paged=None,                         # runtime.paging.PageSpec (static)
 ) -> tuple[jax.Array, Params | None]:
     from repro.parallel.sharding import gather_weight
     b, s, _ = x.shape
@@ -240,25 +242,77 @@ def attention_apply(
         # (`lengths[b]`; ring-buffer modulo for SWA) and attends only over
         # its own valid cache prefix — ragged continuous batching.  A shared
         # scalar depth is the degenerate case where `lengths` is uniform.
+        # ``active`` may be (B,) — the slot writes/advances all S positions
+        # — or (B, S) — chunked prefill, where each admitted slot writes
+        # only its own prompt's prefix of the packed chunk.
         ck, cv = cache["k"], cache["v"]
-        cache_len = ck.shape[1]
         if lengths is None:
             lengths = jnp.zeros((b,), jnp.int32)
-        act = (jnp.ones((b,), bool) if active is None
-               else jnp.asarray(active).astype(bool))
-        b_idx = jnp.arange(b, dtype=jnp.int32)[:, None]            # (B, 1)
+        if active is None:
+            act2d = jnp.ones((b, s), bool)
+        else:
+            act = jnp.asarray(active).astype(bool)
+            act2d = (act if act.ndim == 2
+                     else jnp.broadcast_to(act[:, None], (b, s)))
         t_abs = lengths[:, None] + jnp.arange(s, dtype=jnp.int32)  # (B, S)
+        # Valid prefix after the write, per slot (inactive: unchanged).
+        new_len = lengths + jnp.sum(act2d, axis=1, dtype=jnp.int32)
+        mode = os.environ.get("REPRO_DECODE_KERNEL", "auto")
+        use_fused = (s == 1 and cfg.causal and not cfg.sliding_window
+                     and mode != "off"
+                     and (mode == "interpret"
+                          or jax.default_backend() == "tpu"))
+        if paged is not None and pages is not None:
+            # Paged cache: ck/cv are the layer's physical page pools
+            # (num_pages, page_size, Hkv, dh) shared by every slot; the
+            # (B, max_pages) page table maps each slot's logical page to
+            # its pool row.  Writes scatter through the table (masked
+            # rows aimed at num_pages and dropped), reads either gather
+            # the slot's pages back into a contiguous view (jnp
+            # reference) or ride the table into the fused kernel as a
+            # second scalar-prefetch vector.  SWA is gated off (the
+            # ring-buffer layout stays contiguous-only).
+            psz, mp, npg = paged.page_size, paged.max_pages, paged.num_pages
+            page_idx = t_abs // psz                                # (B, S)
+            row = t_abs % psz
+            page_id = jnp.take_along_axis(
+                pages, jnp.clip(page_idx, 0, mp - 1), axis=1)      # (B, S)
+            ok_w = act2d & (page_idx < mp) & (page_id >= 0)
+            page_w = jnp.where(ok_w, page_id, npg)     # OOB sentinel: drop
+            ck = ck.at[page_w, row].set(k.astype(ck.dtype), mode="drop")
+            cv = cv.at[page_w, row].set(v.astype(cv.dtype), mode="drop")
+            if use_fused:
+                from repro.kernels.attention.decode import \
+                    paged_gqa_decode_attention
+                out = paged_gqa_decode_attention(
+                    q[:, 0], ck, cv, pages, length=new_len, scale=scale,
+                    interpret=(mode == "interpret"))[:, None]
+            else:
+                safe = jnp.clip(pages, 0, npg - 1)
+                kg = ck[safe].reshape(b, mp * psz, cfg.num_kv_heads,
+                                      cfg.head_dim)
+                vg = cv[safe].reshape(b, mp * psz, cfg.num_kv_heads,
+                                      cfg.head_dim)
+                k_pos = jnp.arange(mp * psz, dtype=jnp.int32)
+                k_valid = k_pos[None, :] < new_len[:, None]
+                out = attention_core(q, kg, vg, pos_b, k_pos,
+                                     causal=cfg.causal, window=None,
+                                     scale=scale, k_valid=k_valid)
+            new_cache = {"k": ck, "v": cv}
+            out = out.reshape(b, s, cfg.q_dim).astype(x.dtype)
+            y = out @ gather_weight(params["wo"]).astype(x.dtype)
+            return constrain(y, "batch", "res_seq", "embed"), new_cache
+        cache_len = ck.shape[1]
+        b_idx = jnp.arange(b, dtype=jnp.int32)[:, None]            # (B, 1)
         t_write = t_abs % cache_len if cfg.sliding_window else t_abs
         # Inactive slots must not write: aim their rows out of bounds and
         # let mode="drop" discard them (also guards depth overflow).
-        t_write = jnp.where(act[:, None], t_write, cache_len)
+        t_write = jnp.where(act2d, t_write, cache_len)
         ck = ck.at[b_idx, t_write].set(k.astype(ck.dtype), mode="drop")
         cv = cv.at[b_idx, t_write].set(v.astype(cv.dtype), mode="drop")
         ck = constrain(ck, "batch", "kv_seq", "kv_heads", None)
         cv = constrain(cv, "batch", "kv_seq", "kv_heads", None)
         k_slots = jnp.arange(cache_len, dtype=jnp.int32)
-        # Valid prefix after the write, per slot (inactive: unchanged).
-        new_len = lengths + s * act.astype(jnp.int32)
         if cfg.sliding_window:
             # Ring buffer, per slot: ring slot j holds absolute position
             # end - ((end % L - j) % L) where end is the slot's newest
@@ -271,11 +325,7 @@ def attention_apply(
         else:
             k_pos = k_slots                                        # (L,)
             k_valid = k_slots[None, :] < new_len[:, None]          # (B, L)
-        mode = os.environ.get("REPRO_DECODE_KERNEL", "auto")
-        if (s == 1 and cfg.causal and not cfg.sliding_window
-                and mode != "off"
-                and (mode == "interpret"
-                     or jax.default_backend() == "tpu")):
+        if use_fused:
             # Serving decode: the single-token hot loop goes through the
             # registry's fused autotuned decode kernel (plan resolved at
             # trace time against the cache `plan_for_model` pre-warmed;
@@ -302,7 +352,19 @@ def attention_apply(
     return constrain(y, "batch", "res_seq", "embed"), new_cache
 
 
-def attention_cache_init(cfg, batch: int, cache_len: int, dtype=jnp.bfloat16) -> Params:
+def attention_cache_init(cfg, batch: int, cache_len: int, dtype=jnp.bfloat16,
+                         paged=None) -> Params:
+    if paged is not None:
+        # Paged layout: a pool of physical pages shared by every slot
+        # (the per-slot page table lives once at the cache root, not per
+        # layer — page id p is pool row p in every layer's K and V).
+        if cfg.sliding_window:
+            raise ValueError(
+                "paged KV cache does not support sliding-window attention "
+                "(the ring-buffer layout is contiguous-only)")
+        shape = (paged.num_pages, paged.page_size, cfg.num_kv_heads,
+                 cfg.head_dim)
+        return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
     if cfg.sliding_window:
         cache_len = min(cache_len, cfg.sliding_window)
     return {

@@ -59,6 +59,8 @@ def _keep_inactive(new_c, old_c, active):
     double the decode hot loop's KV-cache traffic for nothing."""
     if active is None or new_c is None:
         return new_c
+    if active.ndim == 2:     # (B, S) chunked mask -> per-slot any()
+        active = active.any(axis=1)
     return jax.tree.map(
         lambda n, o: jnp.where(
             active.reshape((-1,) + (1,) * (n.ndim - 1)), n, o),
@@ -67,12 +69,14 @@ def _keep_inactive(new_c, old_c, active):
 
 def _layer_apply(p: Params, x, cfg: ModelConfig, l: int, positions,
                  cache: Params | None, lengths, active,
-                 prefill: bool = False):
+                 prefill: bool = False, pages=None, paged=None):
     """Pre-norm block l.  Returns (x, new_cache, aux).
 
     ``lengths`` is the per-slot valid cache prefix ((B,) int32) and
-    ``active`` the per-slot advance mask — the ragged continuous-batching
-    contract threaded from the serve loop; both are None outside decode.
+    ``active`` the per-slot advance mask ((B,) — or (B, S) for chunked
+    prefill) — the ragged continuous-batching contract threaded from the
+    serve loop; both are None outside decode.  ``pages``/``paged`` carry
+    the shared page table + static PageSpec when the KV cache is paged.
     """
     aux = jnp.zeros((), jnp.float32)
     h = layers.rmsnorm(p["ln1"], x, cfg.norm_eps)
@@ -90,7 +94,7 @@ def _layer_apply(p: Params, x, cfg: ModelConfig, l: int, positions,
         # _keep_inactive pass over the KV buffers.
         h, new_mix_cache = layers.attention_apply(
             p["mixer"], h, cfg, positions, cache=cache, lengths=lengths,
-            active=active, prefill=prefill)
+            active=active, prefill=prefill, pages=pages, paged=paged)
     else:
         h, new_mix_cache = ssm.mamba_apply(p["mixer"], h, cfg, cache=cache)
         new_mix_cache = _keep_inactive(new_mix_cache, cache, active)
@@ -108,11 +112,12 @@ def _layer_apply(p: Params, x, cfg: ModelConfig, l: int, positions,
 
 
 def _layer_cache_init(cfg: ModelConfig, l: int, batch: int, cache_len: int,
-                      dtype=jnp.bfloat16) -> Params:
+                      dtype=jnp.bfloat16, paged=None) -> Params:
     if cfg.family == "ssm":
         return rwkv.rwkv_cache_init(cfg, batch, dtype)
     if cfg.is_attn_layer(l):
-        return layers.attention_cache_init(cfg, batch, cache_len, dtype)
+        return layers.attention_cache_init(cfg, batch, cache_len, dtype,
+                                           paged=paged)
     return ssm.mamba_cache_init(cfg, batch, dtype)
 
 
@@ -171,26 +176,35 @@ def param_specs(cfg: ModelConfig):
     return specs
 
 
-def _layer_cache_specs(cfg: ModelConfig, l: int):
+def _layer_cache_specs(cfg: ModelConfig, l: int, paged=None):
     if cfg.family == "ssm":
         return {"shift_t": ("batch", None, "embed"),
                 "wkv": ("batch", "heads", None, None),
                 "shift_c": ("batch", None, "embed")}
     if cfg.is_attn_layer(l):
+        if paged is not None:
+            # Pool axes: (num_pages, page_size, Hkv, dh) — no batch axis;
+            # pages are interleaved across slots, so only heads shard.
+            return {"k": (None, None, "kv_heads", None),
+                    "v": (None, None, "kv_heads", None)}
         return {"k": ("batch", "kv_seq", "kv_heads", None),
                 "v": ("batch", "kv_seq", "kv_heads", None)}
     return {"conv": ("batch", None, "ff"), "h": ("batch", "ff", None)}
 
 
-def cache_specs(cfg: ModelConfig):
+def cache_specs(cfg: ModelConfig, paged=None):
     """Pytree of logical-axis tuples matching `cache_init`'s structure."""
     if cfg.family == "hybrid":
         period = cfg.attn_period
-        group = {str(i): _layer_cache_specs(cfg, i) for i in range(period)}
+        group = {str(i): _layer_cache_specs(cfg, i, paged)
+                 for i in range(period)}
         blocks = _prepend_layer_axis(group)
     else:
-        blocks = _prepend_layer_axis(_layer_cache_specs(cfg, 0))
-    return {"blocks": blocks, "index": (), "lengths": ("batch",)}
+        blocks = _prepend_layer_axis(_layer_cache_specs(cfg, 0, paged))
+    specs = {"blocks": blocks, "index": (), "lengths": ("batch",)}
+    if paged is not None:
+        specs["pages"] = ("batch", None)
+    return specs
 
 
 # ---------------------------------------------------------------------------
@@ -227,26 +241,48 @@ def init(cfg: ModelConfig, key, dtype=jnp.float32) -> Params:
 
 
 def cache_init(cfg: ModelConfig, batch: int, cache_len: int,
-               dtype=jnp.bfloat16, index: int = 0) -> Params:
+               dtype=jnp.bfloat16, index: int = 0, paged=None) -> Params:
     if cfg.family == "hybrid":
         period = cfg.attn_period
         groups = [
             {str(i): _layer_cache_init(cfg, g * period + i, batch, cache_len,
-                                       dtype)
+                                       dtype, paged=paged)
              for i in range(period)}
             for g in range(cfg.num_layers // period)
         ]
         blocks = _stack(groups)
     else:
         blocks = _stack([
-            _layer_cache_init(cfg, l, batch, cache_len, dtype)
+            _layer_cache_init(cfg, l, batch, cache_len, dtype, paged=paged)
             for l in range(cfg.num_layers)
         ])
-    return {"blocks": blocks, "index": jnp.full((), index, jnp.int32),
-            "lengths": jnp.full((batch,), index, jnp.int32)}
+    cache = {"blocks": blocks, "index": jnp.full((), index, jnp.int32),
+             "lengths": jnp.full((batch,), index, jnp.int32)}
+    if paged is not None:
+        # ONE page table for the whole stack: logical page j of slot b is
+        # the same pool row in every layer's K and V pool.  -1 = no page
+        # assigned; the host-side PageAllocator owns the truth and the
+        # server refreshes this device copy after allocation changes.
+        cache["pages"] = jnp.full((batch, paged.max_pages), -1, jnp.int32)
+    return cache
 
 
-def cache_reset_slot(cache: Params, slot: int) -> Params:
+def _is_pool_leaf(a, paged) -> bool:
+    """A stacked paged attention pool leaf: (L, num_pages, page_size, ...)
+    — distinguishes the pool K/V from batched SSM/RWKV leaves in hybrid
+    stacks."""
+    return (a.ndim >= 3 and a.shape[1] == paged.num_pages
+            and a.shape[2] == paged.page_size)
+
+
+def _slot_page_mask(cache: Params, slot: int, paged) -> jax.Array:
+    """(num_pages,) bool: pool rows held by ``slot`` per its table row."""
+    row = cache["pages"][slot]                            # (max_pages,)
+    safe = jnp.clip(row, 0, paged.num_pages - 1)
+    return jnp.zeros((paged.num_pages,), bool).at[safe].set(row >= 0)
+
+
+def cache_reset_slot(cache: Params, slot: int, paged=None) -> Params:
     """Zero one slot's rows across every per-layer cache leaf (KV rows,
     SSM conv tails / states, RWKV shifts) and reset its length to 0.
 
@@ -255,13 +291,29 @@ def cache_reset_slot(cache: Params, slot: int) -> Params:
     the stale prefix from attention, but zeroing is the defense in depth
     that makes a refilled slot reproduce single-sequence decode bitwise
     (and resets the recurrent states masking cannot reach).
+
+    Paged: pool leaves have no batch axis, so the slot's rows are the
+    pool pages its table row names — those are zeroed and the table row
+    cleared to -1 (the host-side allocator frees them separately).
     """
+    if paged is not None:
+        mask = _slot_page_mask(cache, slot, paged)
+
+        def reset(a):
+            if _is_pool_leaf(a, paged):           # (L, num_pages, ps, ...)
+                m = mask.reshape((1, -1) + (1,) * (a.ndim - 2))
+                return jnp.where(m, 0, a)
+            return a.at[:, slot].set(0)           # SSM/RWKV leaves: batched
+        return {"blocks": jax.tree.map(reset, cache["blocks"]),
+                "index": cache["index"],
+                "lengths": cache["lengths"].at[slot].set(0),
+                "pages": cache["pages"].at[slot].set(-1)}
     blocks = jax.tree.map(lambda a: a.at[:, slot].set(0), cache["blocks"])
     return {"blocks": blocks, "index": cache["index"],
             "lengths": cache["lengths"].at[slot].set(0)}
 
 
-def cache_poison_slot(cache: Params, slot: int) -> Params:
+def cache_poison_slot(cache: Params, slot: int, paged=None) -> Params:
     """Overwrite one slot's float cache rows with NaN (fault injection:
     a corrupted KV block / recurrent state).
 
@@ -271,7 +323,22 @@ def cache_poison_slot(cache: Params, slot: int) -> Params:
     and the per-slot guard must quarantine it.  Integer leaves and the
     shared index/lengths bookkeeping are untouched — the fault corrupts
     *data*, not control state, exactly like a flipped HBM block would.
+    Paged: the slot's "rows" are the pool pages its table row names.
     """
+    if paged is not None:
+        mask = _slot_page_mask(cache, slot, paged)
+
+        def poison(a):
+            if not jnp.issubdtype(a.dtype, jnp.floating):
+                return a
+            if _is_pool_leaf(a, paged):
+                m = mask.reshape((1, -1) + (1,) * (a.ndim - 2))
+                return jnp.where(m, jnp.nan, a)
+            return a.at[:, slot].set(jnp.nan)
+        return {"blocks": jax.tree.map(poison, cache["blocks"]),
+                "index": cache["index"], "lengths": cache["lengths"],
+                "pages": cache["pages"]}
+
     def poison(a):
         if not jnp.issubdtype(a.dtype, jnp.floating):
             return a
@@ -301,7 +368,7 @@ def _embed_inputs(cfg: ModelConfig, params: Params, inputs: dict) -> jax.Array:
 def forward(cfg: ModelConfig, params: Params, inputs: dict,
             cache: Params | None = None, compute_dtype=jnp.bfloat16,
             return_hidden: bool = False, last_only: bool = False,
-            active: jax.Array | None = None):
+            active: jax.Array | None = None, paged=None):
     """Returns (logits-or-hidden, new_cache, aux_loss).
 
     ``return_hidden`` skips the unembedding (the caller fuses it into a
@@ -309,7 +376,12 @@ def forward(cfg: ModelConfig, params: Params, inputs: dict,
     ``active`` ((B,) bool, decode only) masks which slots advance this
     step: inactive slots neither write cache rows nor move their per-slot
     ``lengths`` — the ragged continuous-batching contract (a masked
-    batched prefill is ``active`` = one-hot of the refilled slot).
+    batched prefill is ``active`` = one-hot of the refilled slot).  A
+    (B, S) ``active`` is the chunked-prefill generalization: each slot
+    writes/advances only its own valid prefix of the packed chunk.
+    ``paged`` (a `runtime.paging.PageSpec`, static) marks the cache as
+    paged; the shared (B, max_pages) page table rides ``cache["pages"]``
+    and is threaded to every attention layer.
     """
     x = _embed_inputs(cfg, params, inputs).astype(compute_dtype)
     b, s, _ = x.shape
@@ -327,6 +399,8 @@ def forward(cfg: ModelConfig, params: Params, inputs: dict,
     act = None
     if cache is not None and active is not None:
         act = jnp.asarray(active).astype(bool)
+    pages = cache.get("pages") if (cache is not None and paged is not None) \
+        else None
 
     blocks = params["blocks"]
     block_caches = cache["blocks"] if cache is not None else None
@@ -335,7 +409,8 @@ def forward(cfg: ModelConfig, params: Params, inputs: dict,
     # gradient) routes attention through the autotuned flash kernel; the
     # flag stays a Python-level static so training keeps the jnp path.
     prefill = last_only and cache is None
-    apply_fn = functools.partial(_layer_apply, prefill=prefill)
+    apply_fn = functools.partial(_layer_apply, prefill=prefill,
+                                 pages=pages, paged=paged)
 
     if cfg.family == "hybrid":
         period = cfg.attn_period
@@ -405,9 +480,18 @@ def forward(cfg: ModelConfig, params: Params, inputs: dict,
     x = layers.rmsnorm(params["final_norm"], x, cfg.norm_eps)
     new_cache = None
     if cache is not None:
-        adv = s if act is None else s * act.astype(jnp.int32)
+        if act is None:
+            adv = s
+        elif act.ndim == 2:        # chunked: per-slot valid-position count
+            adv = jnp.sum(act, axis=1, dtype=jnp.int32)
+        else:
+            adv = s * act.astype(jnp.int32)
         new_cache = {"blocks": new_caches, "index": index + s,
                      "lengths": lengths + adv}
+        if pages is not None:
+            # The table itself only changes host-side (allocation); the
+            # device copy rides along unchanged.
+            new_cache["pages"] = pages
     if return_hidden:
         return x, new_cache, aux
     head = params["embed"] if cfg.tie_embeddings else params["head"]

@@ -58,7 +58,11 @@ TERMINAL = frozenset({State.COMPLETED, State.TIMED_OUT, State.FAILED,
 # The legal edges.  Initial states (QUEUED / REJECTED) are set by submit();
 # terminal states have no exits.
 _ALLOWED: dict[State, frozenset[State]] = {
-    State.QUEUED: frozenset({State.PREFILLING, State.TIMED_OUT}),
+    # QUEUED -> REJECTED is scheduler backpressure: a paged-pool
+    # admission policy refuses a request whose KV footprint can never
+    # fit the pool (launch/scheduler.py) — loud, terminal, conserved.
+    State.QUEUED: frozenset({State.PREFILLING, State.TIMED_OUT,
+                             State.REJECTED}),
     State.PREFILLING: frozenset({State.DECODING, State.EVICTED,
                                  State.TIMED_OUT}),
     State.DECODING: frozenset({State.COMPLETED, State.EVICTED,
@@ -182,6 +186,17 @@ class Lifecycle:
                 return req
         return None
 
+    def eligible(self, step: int) -> list[Request]:
+        """Every queued request whose retry backoff has elapsed, in FCFS
+        order — the candidate set a pluggable admission policy
+        (launch/scheduler.py) picks from."""
+        return [r for r in self._queue if r.not_before_step <= step]
+
+    def take(self, req: Request) -> None:
+        """Remove a specific request from the admission queue (the
+        scheduler admitted it out of FCFS order)."""
+        self._queue.remove(req)
+
     def next_eligible_step(self) -> int | None:
         """Earliest step at which *some* queued request becomes eligible
         (None if the queue is empty) — lets an otherwise-idle loop jump its
@@ -232,6 +247,15 @@ class Lifecycle:
             return True
         self.transition(req, State.FAILED, step)
         return False
+
+    def reject(self, req: Request, step: int) -> None:
+        """Backpressure a QUEUED request out of the system entirely —
+        used by the paged-pool scheduler when a request's predicted KV
+        footprint exceeds what the pool could ever hold.  Terminal and
+        conserved, never silently dropped."""
+        if req in self._queue:
+            self._queue.remove(req)
+        self.transition(req, State.REJECTED, step)
 
     def check_deadlines(self, step: int) -> list[Request]:
         """Sweep every open request against its deadlines; newly

@@ -162,6 +162,12 @@ def sample_lengths(rng: np.random.Generator, n: int, dist: dict) -> list[int]:
     ramp ``p + (2i+1)*g // 2n`` over the request index: the steady-state
     slot-depth mix `launch/serve.py` builds for its batch sweep, as an
     arrival-order length pattern.
+    ``{"kind": "lognormal", "mean": m, "sigma": s, "lo": a, "hi": b}`` —
+    the heavy-tail production shape: most requests are short, a few are
+    very long (``exp(N(ln m, s))``, rounded and clamped to [a, b]).
+    This is the mix where a paged KV cache beats per-slot worst-case
+    allocation — the tail sets the contiguous reservation, the body
+    wastes it (docs/PAGING.md).
     """
     kind = dist["kind"]
     if kind == "fixed":
@@ -175,6 +181,12 @@ def sample_lengths(rng: np.random.Generator, n: int, dist: dict) -> list[int]:
     if kind == "staggered":
         base, spread = int(dist["base"]), int(dist["spread"])
         return [base + ((2 * i + 1) * spread) // (2 * n) for i in range(n)]
+    if kind == "lognormal":
+        lo = int(dist.get("lo", 1))
+        hi = int(dist["hi"])
+        draws = rng.lognormal(mean=np.log(float(dist["mean"])),
+                              sigma=float(dist["sigma"]), size=n)
+        return [int(np.clip(round(x), lo, hi)) for x in draws]
     raise ValueError(f"unknown length distribution kind {kind!r}")
 
 

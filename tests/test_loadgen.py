@@ -84,6 +84,25 @@ def test_staggered_lengths_match_serve_dist_model():
                    for i in range(n)]
 
 
+def test_lognormal_lengths_heavy_tailed_and_clamped():
+    """The heavy-tail kind: median near `mean`, a long upper tail, every
+    draw clamped into [lo, hi] — and deterministic under the seed."""
+    dist = {"kind": "lognormal", "mean": 8, "sigma": 0.8, "lo": 2,
+            "hi": 64}
+    got = loadgen.sample_lengths(np.random.default_rng(5), 500, dist)
+    assert all(2 <= x <= 64 for x in got)
+    med = sorted(got)[len(got) // 2]
+    assert 6 <= med <= 10                    # median ~ exp(log(mean))
+    assert max(got) > 3 * med                # the tail is actually heavy
+    again = loadgen.sample_lengths(np.random.default_rng(5), 500, dist)
+    assert got == again
+    # lo defaults to 1 when omitted
+    slim = loadgen.sample_lengths(
+        np.random.default_rng(5), 200,
+        {"kind": "lognormal", "mean": 1, "sigma": 2.0, "hi": 9})
+    assert all(1 <= x <= 9 for x in slim)
+
+
 def test_trace_roundtrip_through_jsonl(tmp_path):
     trace = loadgen.make_trace(
         seed=3, n=6, rate_rps=2.0, prompt_dist=FIXED5, gen_dist=FIXED6,

@@ -1,0 +1,477 @@
+"""Paged KV cache subsystem: allocator invariants (no double-assign,
+idempotent frees, exact pool conservation — property-tested), paged
+decode equivalence with the contiguous cache token-for-token on both the
+jnp reference and the fused interpret-mode kernel paths, the fused paged
+kernel against its pure-jnp oracle, pluggable admission policies, and
+allocator-OOM backpressure through the serve loop (evict/requeue, never
+FAILED)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # minimal env: property tests skip, rest run
+    from _hypothesis_stub import given, settings, st
+
+from repro.launch.scheduler import POLICIES, Scheduler
+from repro.launch.serve import Server, serve_loop
+from repro.models.config import ModelConfig
+from repro.runtime.lifecycle import Lifecycle, State
+from repro.runtime.paging import PageAllocator, PageOOM, PageSpec
+
+KEY = jax.random.PRNGKey(23)
+
+
+def _cfg(**kw):
+    base = dict(name="tiny-paged", family="dense", num_layers=2, d_model=32,
+                d_ff=64, vocab_size=101, num_heads=4, num_kv_heads=2)
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+def _spec(page_size=4, num_pages=8, max_pages=6):
+    return PageSpec(page_size=page_size, num_pages=num_pages,
+                    max_pages=max_pages)
+
+
+# ---------------------------------------------------------------------------
+# PageSpec / allocator unit behaviour
+# ---------------------------------------------------------------------------
+
+def test_spec_build_contiguous_equivalent_and_budgeted():
+    spec = PageSpec.build(batch=4, max_len=33, page_size=8)
+    assert spec.max_pages == 5                 # ceil(33 / 8)
+    assert spec.num_pages == 4 * 5             # contiguous-equivalent pool
+    tight = PageSpec.build(batch=4, max_len=33, page_size=8, pool_pages=7)
+    assert tight.num_pages == 7                # budgeted pool override
+    assert spec.pages_for(0) == 0
+    assert spec.pages_for(1) == 1
+    assert spec.pages_for(8) == 1
+    assert spec.pages_for(9) == 2
+
+
+def test_ensure_grows_in_canonical_lowest_page_order():
+    alloc = PageAllocator(_spec(), batch=3)
+    assert alloc.ensure(0, 7)                  # 2 pages: 0, 1
+    assert alloc.ensure(1, 3)                  # 1 page: 2
+    assert list(alloc.table[0][:2]) == [0, 1]
+    assert alloc.table[1][0] == 2
+    assert not alloc.ensure(0, 8)              # still 2 pages: no growth
+    alloc.free_slot(0)
+    assert alloc.ensure(2, 5)                  # reuses lowest frees: 0, 1
+    assert list(alloc.table[2][:2]) == [0, 1]
+    alloc.check_conserved()
+
+
+def test_ensure_oom_carries_slot_and_rid():
+    alloc = PageAllocator(_spec(num_pages=2), batch=2)
+    alloc.ensure(0, 8)                         # both pages
+    with pytest.raises(PageOOM) as e:
+        alloc.ensure(1, 4, rid=17)
+    assert e.value.slot == 1 and e.value.rid == 17
+    # the failed grow must not have leaked a page
+    alloc.check_conserved()
+    assert alloc.allocated_pages == 2
+
+
+def test_ensure_rejects_over_table_width():
+    alloc = PageAllocator(_spec(max_pages=2, num_pages=8), batch=1)
+    with pytest.raises(PageOOM, match="page-table width"):
+        alloc.ensure(0, 100)
+
+
+def test_free_slot_is_idempotent():
+    alloc = PageAllocator(_spec(), batch=2)
+    alloc.ensure(0, 10)
+    assert alloc.free_slot(0)
+    assert not alloc.free_slot(0)              # second free: no-op
+    assert not alloc.free_slot(1)              # never-allocated: no-op
+    assert alloc.free_pages == alloc.spec.num_pages
+    alloc.check_conserved()
+
+
+def test_reservations_price_admission():
+    alloc = PageAllocator(_spec(page_size=4, num_pages=6), batch=4)
+    alloc.reserve(1, 16)                       # pledge 4 pages to rid 1
+    assert alloc.reserved_pages == 4
+    assert alloc.can_admit(8)                  # 2 more pages still fit
+    assert not alloc.can_admit(12)             # 3 would over-promise
+    # the pledge is consumed page-by-page as the slot actually grows
+    alloc.ensure(0, 8, rid=1)
+    assert alloc.reserved_pages == 2
+    alloc.ensure(0, 16, rid=1)
+    assert alloc.reserved_pages == 0
+    # freeing the slot with its rid drops any leftover pledge too
+    alloc.reserve(2, 8)
+    alloc.ensure(1, 4, rid=2)
+    alloc.free_slot(1, rid=2)
+    assert alloc.reserved_pages == 0
+    alloc.check_conserved()
+
+
+def test_fits_pool_bounds_admissible_footprints():
+    alloc = PageAllocator(_spec(page_size=4, num_pages=3, max_pages=8),
+                          batch=2)
+    assert alloc.fits_pool(12)                 # 3 pages == whole pool
+    assert not alloc.fits_pool(13)             # could never fit: reject
+
+
+def test_utilization_reports_pages_vs_tokens():
+    alloc = PageAllocator(_spec(page_size=4), batch=2)
+    alloc.ensure(0, 6)                         # 2 pages for 6 tokens
+    u = alloc.utilization()
+    assert u["pages_allocated"] == 2
+    assert u["tokens_resident"] == 6
+    assert u["token_capacity"] == 8
+    assert u["utilization"] == pytest.approx(0.75)
+    u2 = alloc.utilization(tokens_resident=5)  # explicit numerator wins
+    assert u2["tokens_resident"] == 5
+
+
+def test_adopt_rebuilds_exact_allocator_state():
+    rng = np.random.default_rng(3)
+    alloc = PageAllocator(_spec(num_pages=10), batch=4)
+    for _ in range(40):
+        slot = int(rng.integers(0, 4))
+        if rng.integers(0, 3) == 0:
+            alloc.free_slot(slot)
+        else:
+            try:
+                alloc.ensure(slot, int(rng.integers(1, 20)))
+            except PageOOM:
+                pass
+    twin = PageAllocator.adopt(alloc.spec, alloc.table)
+    np.testing.assert_array_equal(twin.table, alloc.table)
+    np.testing.assert_array_equal(twin._owner, alloc._owner)
+    # canonical (min-heap) allocation order makes the free list a pure
+    # function of the table: both must hand out the same next page
+    assert sorted(twin._free) == sorted(alloc._free)
+    assert twin.ensure(0, (twin.slot_pages(0) + 1) * twin.spec.page_size) \
+        == alloc.ensure(0, (alloc.slot_pages(0) + 1) * alloc.spec.page_size)
+    np.testing.assert_array_equal(twin.table, alloc.table)
+
+
+def test_adopt_rejects_double_assigned_table():
+    spec = _spec()
+    table = np.full((2, spec.max_pages), -1, np.int32)
+    table[0, 0] = table[1, 0] = 2              # page 2 owned twice
+    with pytest.raises(ValueError, match="page 2"):
+        PageAllocator.adopt(spec, table)
+
+
+# ---------------------------------------------------------------------------
+# allocator properties: seeded fuzz (always runs) + hypothesis variants
+# ---------------------------------------------------------------------------
+
+def _apply_ops(alloc, ops):
+    """Replay (kind, slot, tokens) ops, checking every invariant the
+    module docstring promises after each one."""
+    for kind, slot, tokens in ops:
+        slot %= alloc.batch
+        if kind == 0:
+            try:
+                alloc.ensure(slot, tokens)
+            except PageOOM:
+                pass                           # loud OOM is legal; leaks not
+        elif kind == 1:
+            alloc.free_slot(slot)
+        else:                                  # double free: must be no-op
+            alloc.free_slot(slot)
+            assert not alloc.free_slot(slot)
+        alloc.check_conserved()                # no double-assign, no leak
+        assert alloc.free_pages + alloc.allocated_pages \
+            == alloc.spec.num_pages
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+def test_fuzz_pool_conservation(seed):
+    rng = np.random.default_rng(seed)
+    alloc = PageAllocator(_spec(page_size=3, num_pages=7, max_pages=5),
+                          batch=4)
+    ops = [(int(rng.integers(0, 3)), int(rng.integers(0, 4)),
+            int(rng.integers(0, 16))) for _ in range(120)]
+    _apply_ops(alloc, ops)
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.lists(st.tuples(st.integers(0, 2), st.integers(0, 7),
+                          st.integers(0, 24)), max_size=80))
+def test_property_no_double_assign_and_conserved(ops):
+    _apply_ops(PageAllocator(_spec(page_size=2, num_pages=9, max_pages=6),
+                             batch=3), ops)
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.lists(st.integers(0, 30), min_size=1, max_size=12),
+       st.integers(2, 5))
+def test_property_adopt_is_lossless(tokens_per_slot, page_size):
+    spec = PageSpec(page_size=page_size, num_pages=12, max_pages=8)
+    alloc = PageAllocator(spec, batch=len(tokens_per_slot))
+    for slot, tokens in enumerate(tokens_per_slot):
+        try:
+            alloc.ensure(slot, tokens)
+        except PageOOM:
+            pass
+    twin = PageAllocator.adopt(spec, alloc.table)
+    np.testing.assert_array_equal(twin.table, alloc.table)
+    assert sorted(twin._free) == sorted(alloc._free)
+
+
+# ---------------------------------------------------------------------------
+# decode equivalence: paged must be token-for-token contiguous
+# ---------------------------------------------------------------------------
+
+def _requests(cfg, spec):
+    out = []
+    for rid, (plen, gen) in enumerate(spec):
+        prompt = np.asarray(
+            jax.random.randint(jax.random.PRNGKey(300 + rid), (plen,), 0,
+                               cfg.vocab_size), np.int32)
+        out.append((rid, prompt, gen))
+    return out
+
+
+def _serve_all(cfg, batch, requests, max_len, paged=None):
+    """test_serving's drain loop, optionally on the paged cache: the
+    Server handles allocation internally (prefill covers the prompt,
+    decode_step grows page-by-page, release_slot drains the pool)."""
+    server = Server(cfg, batch, max_len, autotune_kernels=False,
+                    paged=paged)
+    queue = list(requests)
+    tokens = {rid: [] for rid, _, _ in requests}
+    slot_rid = {}
+    for slot in range(min(batch, len(queue))):
+        rid, prompt, gen = queue.pop(0)
+        server.prefill(slot, rid, prompt, gen)
+        slot_rid[slot] = rid
+        tokens[rid].append(int(server.last_tok[slot, 0]))
+    completed, guard = 0, 0
+    while completed < len(requests):
+        nxt, done, _ = server.decode_step()
+        for slot, rid in slot_rid.items():
+            if server.slot_req[slot] == rid:
+                tokens[rid].append(int(nxt[slot, 0]))
+        for slot in done:
+            completed += 1
+            server.release_slot(slot)
+            if queue:
+                rid, prompt, gen = queue.pop(0)
+                server.prefill(slot, rid, prompt, gen)
+                slot_rid[slot] = rid
+                tokens[rid].append(int(server.last_tok[slot, 0]))
+        guard += 1
+        assert guard < 200, "serve loop failed to drain the queue"
+    if server.allocator is not None:
+        server.allocator.check_conserved()
+        assert server.allocator.allocated_pages == 0, \
+            "release_slot must drain the pool"
+    return tokens
+
+
+def test_paged_decode_matches_contiguous_token_for_token():
+    """The acceptance invariant: the same ragged workload (mixed lengths
+    plus a mid-run slot refill) through the paged pool reproduces the
+    contiguous cache's tokens exactly, on the jnp reference path."""
+    cfg = _cfg()
+    spec = [(5, 7), (9, 4), (3, 6)]
+    reqs = _requests(cfg, spec)
+    max_len = max(p + g for p, g in spec) + 4
+    contiguous = _serve_all(cfg, 2, reqs, max_len)
+    paged = _serve_all(cfg, 2, reqs, max_len,
+                       paged=PageSpec.build(2, max_len, page_size=4))
+    assert paged == contiguous
+
+
+def test_paged_decode_through_fused_kernel_matches_contiguous(
+        monkeypatch, tmp_path):
+    """Same invariant with the fused paged decode kernel forced on
+    (interpret mode): the page table rides scalar-prefetch into the
+    kernel and must not change a single token."""
+    monkeypatch.setenv("REPRO_DECODE_KERNEL", "interpret")
+    monkeypatch.setenv("REPRO_AUTOTUNE_CACHE",
+                       str(tmp_path / "autotune.json"))
+    cfg = _cfg()
+    spec = [(4, 5), (7, 3)]
+    reqs = _requests(cfg, spec)
+    max_len = max(p + g for p, g in spec) + 4
+    contiguous = _serve_all(cfg, 2, reqs, max_len)
+    paged = _serve_all(cfg, 2, reqs, max_len,
+                       paged=PageSpec.build(2, max_len, page_size=4))
+    assert paged == contiguous
+
+
+def test_paged_kernel_matches_jnp_oracle():
+    """`paged_gqa_decode_attention` (interpret mode) against
+    `paged_decode_ref` on a ragged batch with a shuffled page table."""
+    from repro.kernels.attention.decode import (paged_decode_ref,
+                                                paged_gqa_decode_attention)
+    b, hq, hkv, dh = 3, 4, 2, 16
+    num_pages, page_size, max_pages = 10, 4, 3
+    k1, k2, k3 = jax.random.split(KEY, 3)
+    q = jax.random.normal(k1, (b, hq, dh), jnp.float32)
+    k_pool = jax.random.normal(k2, (num_pages, page_size, hkv, dh),
+                               jnp.float32)
+    v_pool = jax.random.normal(k3, (num_pages, page_size, hkv, dh),
+                               jnp.float32)
+    # non-monotonic physical pages, ragged depths, -1 tails
+    pages = np.full((b, max_pages), -1, np.int32)
+    pages[0, :3] = [7, 2, 9]
+    pages[1, :1] = [4]
+    pages[2, :2] = [0, 8]
+    lengths = jnp.asarray([11, 3, 6], jnp.int32)
+    got = paged_gqa_decode_attention(q, k_pool, v_pool,
+                                     jnp.asarray(pages), length=lengths,
+                                     interpret=True)
+    want = paged_decode_ref(q, k_pool, v_pool, jnp.asarray(pages),
+                            length=lengths)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# admission policies
+# ---------------------------------------------------------------------------
+
+def _lc_with(reqs):
+    lc = Lifecycle(clock=lambda: 0.0)
+    for rid, plen, gen in reqs:
+        lc.submit(rid, np.zeros(plen, np.int32), gen)
+    return lc
+
+
+def test_scheduler_rejects_unknown_policy():
+    with pytest.raises(ValueError, match="unknown policy"):
+        Scheduler("lifo")
+    assert set(POLICIES) == {"fcfs", "spf", "paged-aware"}
+
+
+def test_fcfs_is_head_of_line_blocking():
+    alloc = PageAllocator(_spec(page_size=4, num_pages=4, max_pages=4),
+                          batch=2)
+    # head needs 4 pages, pool has 4 free but 2 are pledged elsewhere
+    alloc.reserve(99, 8)
+    lc = _lc_with([(0, 8, 8), (1, 2, 2)])      # head 16 tokens, next 4
+    sched = Scheduler("fcfs", allocator=alloc)
+    assert sched.pop_ready(lc, 0) is None      # head doesn't fit: nothing
+    alloc.release_reservation(99)
+    assert sched.pop_ready(lc, 0).rid == 0     # now the head goes first
+
+
+def test_spf_admits_smallest_footprint_first():
+    lc = _lc_with([(0, 8, 8), (1, 2, 2), (2, 4, 4)])
+    sched = Scheduler("spf",
+                      allocator=PageAllocator(_spec(num_pages=32), batch=4))
+    assert [sched.pop_ready(lc, 0).rid for _ in range(3)] == [1, 2, 0]
+
+
+def test_paged_aware_is_first_fit_past_blocked_head():
+    alloc = PageAllocator(_spec(page_size=4, num_pages=4, max_pages=4),
+                          batch=2)
+    alloc.reserve(99, 8)                       # only 2 pages effectively free
+    lc = _lc_with([(0, 8, 8), (1, 2, 2)])
+    sched = Scheduler("paged-aware", allocator=alloc)
+    req = sched.pop_ready(lc, 0)               # skips the too-big head
+    assert req.rid == 1
+    assert lc.requests[0].state is State.QUEUED
+
+
+def test_admission_reserves_predicted_footprint():
+    alloc = PageAllocator(_spec(page_size=4, num_pages=8, max_pages=8),
+                          batch=2)
+    lc = _lc_with([(0, 6, 6)])                 # 12 tokens -> 3 pages
+    Scheduler("fcfs", allocator=alloc).pop_ready(lc, 0)
+    assert alloc.reserved_pages == 3
+
+
+def test_oversize_request_rejected_loudly():
+    alloc = PageAllocator(_spec(page_size=4, num_pages=3, max_pages=8),
+                          batch=2)
+    lc = _lc_with([(0, 20, 20), (1, 2, 2)])    # rid 0 can never fit
+    sched = Scheduler("fcfs", allocator=alloc)
+    assert sched.pop_ready(lc, 0).rid == 1
+    assert lc.requests[0].state is State.REJECTED
+    assert sched.rejected_oversize == 1
+
+
+# ---------------------------------------------------------------------------
+# OOM backpressure through the serve loop
+# ---------------------------------------------------------------------------
+
+def test_decode_oom_backpressure_evicts_never_fails():
+    """A deliberately overcommitted pool (no scheduler reservations):
+    decode growth exhausts it mid-flight, the loop must evict the
+    lightest victim for a later retry — every request still completes,
+    none FAILED, and the pool drains leak-free."""
+    cfg = _cfg()
+    max_len = 20
+    # Each request peaks at ceil(14/2)=7 pages; two in flight need 14
+    # but the pool holds 10 — an OOM mid-decode is guaranteed.
+    paged = PageSpec.build(2, max_len, page_size=2, pool_pages=10)
+    server = Server(cfg, 2, max_len, autotune_kernels=False, paged=paged)
+    # backoff long enough that the evicted victim re-enters only after
+    # the survivor finished and drained its pages — without scheduler
+    # reservations that patience is what breaks the OOM ping-pong
+    lc = Lifecycle(clock=lambda: 0.0, backoff_steps=16)
+    for rid, (plen, gen) in enumerate([(6, 8), (6, 8)]):
+        lc.submit(rid, np.arange(plen, dtype=np.int32) % cfg.vocab_size,
+                  gen)
+    stats = serve_loop(server, lc, max_steps=400)
+    counts = lc.counters()
+    assert stats["kv_ooms"] >= 1, "the overcommit never tripped"
+    assert counts["failed"] == 0, "OOM must backpressure, not fail"
+    assert counts["completed"] == 2
+    assert lc.conserved()
+    server.allocator.check_conserved()
+    assert server.allocator.allocated_pages == 0
+
+
+def test_scheduler_reservations_prevent_oom():
+    """Same overcommitted pool, but admission priced through the
+    scheduler: reservations defer the second request instead of letting
+    it OOM mid-decode."""
+    cfg = _cfg()
+    max_len = 20
+    paged = PageSpec.build(2, max_len, page_size=2, pool_pages=10)
+    server = Server(cfg, 2, max_len, autotune_kernels=False, paged=paged)
+    sched = Scheduler("spf", allocator=server.allocator)
+    lc = Lifecycle(clock=lambda: 0.0)
+    for rid, (plen, gen) in enumerate([(6, 8), (6, 8)]):
+        lc.submit(rid, np.arange(plen, dtype=np.int32) % cfg.vocab_size,
+                  gen)
+    stats = serve_loop(server, lc, max_steps=400, scheduler=sched)
+    counts = lc.counters()
+    assert stats["kv_ooms"] == 0, "reservations must prevent OOM"
+    assert stats["max_concurrent"] == 1        # pool covers one at a time
+    assert counts["completed"] == 2 and counts["failed"] == 0
+    assert lc.conserved()
+
+
+def test_paged_serve_loop_tokens_match_contiguous():
+    """serve_loop end-to-end (scheduler, chunked admission, paged pool)
+    emits exactly the tokens of the contiguous FCFS loop."""
+    cfg = _cfg()
+    spec = [(5, 6), (3, 4), (7, 5), (4, 6)]
+    max_len = max(p + g for p, g in spec) + 4
+
+    def run(paged, policy):
+        server = Server(cfg, 2, max_len, autotune_kernels=False,
+                        paged=paged)
+        sched = (Scheduler(policy, allocator=server.allocator)
+                 if policy else None)
+        lc = Lifecycle(clock=lambda: 0.0)
+        for rid, (plen, gen) in enumerate(spec):
+            prompt = np.asarray(jax.random.randint(
+                jax.random.PRNGKey(500 + rid), (plen,), 0,
+                cfg.vocab_size), np.int32)
+            lc.submit(rid, prompt, gen)
+        serve_loop(server, lc, max_steps=400, scheduler=sched)
+        assert lc.conserved()
+        return {r.rid: list(r.tokens) for r in lc.requests.values()}
+
+    contiguous = run(None, None)
+    pspec = PageSpec.build(2, max_len, page_size=4)
+    paged = run(pspec, "fcfs")
+    assert paged == contiguous

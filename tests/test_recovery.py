@@ -434,6 +434,51 @@ def test_crash_resume_token_for_token(tmp_path):
     assert all(len(t) == 8 + 1 for t in crashed.values())
 
 
+def test_paged_crash_resume_token_for_token(tmp_path):
+    """Crash recovery on the paged KV cache: the snapshot carries the
+    page table, `--resume` re-adopts the allocator from it (canonical
+    min-heap order makes the free list a pure function of the table) and
+    re-pledges in-flight footprints — and the combined journal still
+    matches an uninterrupted paged run token-for-token, which itself
+    matches a contiguous run."""
+    from repro.launch import serve
+
+    paged = ["--paged", "--page-size", "4", "--sched", "spf"]
+    base = ["--arch", "qwen3_14b", "--smoke", "--requests", "4",
+            "--prompt-len", "8", "--gen", "8", "--snapshot-every", "3"]
+
+    sd_crash = str(tmp_path / "crashed")
+    rc, out = _run_serve(base + paged + ["--state-dir", sd_crash,
+                                         "--crash", "--crash-step", "5"])
+    assert rc == serve.CRASH_EXIT
+    assert any('"paging"' in ln for ln in out.splitlines())
+
+    rc, out = _run_serve(["--resume", "--state-dir", sd_crash])
+    assert rc == 0
+    summary = json.loads([ln for ln in out.splitlines()
+                          if "tokens_generated" in ln][-1])
+    assert summary["recovery"]["resumed"] is True
+    assert 1 <= summary["recovery"]["replayed_steps"] <= 3
+    assert summary["outcomes"]["failed"] == 0
+    # the resumed run kept serving on the paged pool, leak-free
+    assert summary["kv"]["kv_ooms"] == 0
+    assert summary["sched"]["policy"] == "spf"
+
+    sd_clean = str(tmp_path / "clean")
+    rc, _ = _run_serve(base + paged + ["--state-dir", sd_clean])
+    assert rc == 0
+    sd_cont = str(tmp_path / "contiguous")
+    rc, _ = _run_serve(base + ["--state-dir", sd_cont])
+    assert rc == 0
+
+    crashed, creqs = _folded_tokens(sd_crash)
+    clean, _ = _folded_tokens(sd_clean)
+    cont, _ = _folded_tokens(sd_cont)
+    assert crashed == clean                     # crash+resume is invisible
+    assert clean == cont                        # and paging never moves a token
+    assert all(r["state"] == "completed" for r in creqs.values())
+
+
 # ---------------------------------------------------------------------------
 # atomic writes: the durable artifacts survive a kill mid-save
 # ---------------------------------------------------------------------------

@@ -209,3 +209,38 @@ def test_serve_step_active_none_advances_everyone():
     tok, cache = serve(params, cache, tok)
     assert list(np.asarray(cache["lengths"])) == [1, 1]
     assert int(cache["index"]) == 1
+
+
+def test_chunked_prefill_matches_solo_token_for_token():
+    """Chunked prefill (several variable-length prompts packed into one
+    forward, in-flight decode slots riding along) must reproduce each
+    request served alone — the 2-D active mask keeps every slot's writes
+    inside its own prompt prefix."""
+    from repro.launch.serve import serve_loop
+    from repro.runtime.lifecycle import Lifecycle
+
+    cfg = _cfg()
+    spec = [(5, 6), (3, 4), (7, 5), (4, 6)]
+    reqs = _requests(cfg, spec)
+    max_len = max(p + g for p, g in spec) + 4
+
+    server = Server(cfg, 2, max_len, autotune_kernels=False)
+    assert server.can_chunk()
+    lc = Lifecycle(clock=lambda: 0.0)
+    for rid, prompt, gen in reqs:
+        lc.submit(rid, prompt, gen)
+    stats = serve_loop(server, lc, max_steps=400)
+    assert stats["chunked_prefills"] >= 1, "the packed path never ran"
+    assert lc.conserved()
+
+    for rid, prompt, gen in reqs:
+        solo = _serve_all(cfg, 1, [(rid, prompt, gen)], max_len)
+        assert list(lc.requests[rid].tokens) == solo[rid], (
+            f"request {rid}: chunked prefill diverged from solo decode")
+
+
+def test_chunk_gate_rejects_unchunkable_configs():
+    """SWA (and non-causal/injected servers) must fall back to the
+    legacy one-slot masked prefill."""
+    server = Server(_cfg(sliding_window=6), 2, 16, autotune_kernels=False)
+    assert not server.can_chunk()

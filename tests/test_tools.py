@@ -296,8 +296,38 @@ def _good_mix(name="steady", kind="open"):
                                  "per_token_p99_steps": 3,
                                  "min_tok_per_step_frac": 0.15}},
         "slo_ok": True, "slo_violations": [],
+        "max_concurrent": 2, "paged": False, "sched": "fcfs",
         "wall": {"wall_s": 0.5},
     }
+
+
+def _good_kv():
+    """A minimal KV-memory utilization block for a paged row."""
+    return {"page_size": 4, "num_pages": 8, "pages_allocated": 5,
+            "pages_free": 3, "pages_reserved": 0, "tokens_resident": 18,
+            "token_capacity": 20, "utilization": 0.9,
+            "pages_peak": 5, "kv_ooms": 0}
+
+
+def _good_paged_mix(name="heavytail"):
+    mix = _good_mix(name)
+    mix.update(paged=True, sched="spf", kv=_good_kv())
+    return mix
+
+
+def _good_paging():
+    """A minimal paged-vs-contiguous comparison block: paged sustains 2x
+    the contiguous concurrency at the same KV budget."""
+    sub = {"batch": 2, "max_concurrent": 2, "generated": 20,
+           "decode_steps": 10, "tok_per_s": 900.0,
+           "outcomes": {"completed": 4, "failed": 0}}
+    return {"mix": "heavytail", "page_size": 4, "max_len": 24,
+            "budget_tokens": 48, "pool_pages": 12,
+            "contiguous": sub,
+            "paged": {**sub, "batch": 8, "max_concurrent": 4,
+                      "pool_pages": 12, "kv": _good_kv()},
+            "concurrency_ratio": 2.0, "ratio_floor": 1.5,
+            "ratio_ok": True}
 
 
 def _good_recovery():
@@ -321,8 +351,10 @@ def good_serving_report():
     return {"schema": check_load.SCHEMA, "arch": "x", "backend": "cpu",
             "host": "x", "smoke": True,
             "mixes": {"steady": _good_mix("steady"),
-                      "interactive": _good_mix("interactive", "closed")},
+                      "interactive": _good_mix("interactive", "closed"),
+                      "heavytail": _good_paged_mix()},
             "recovery": _good_recovery(),
+            "paging": _good_paging(),
             "slo_ok": True}
 
 
@@ -352,6 +384,7 @@ def test_check_load_schema_regression_fails(tmp_path, good_serving_report):
 
 def test_check_load_too_few_mixes_fails(tmp_path, good_serving_report):
     del good_serving_report["mixes"]["interactive"]
+    del good_serving_report["mixes"]["heavytail"]
     path = _write_serving(tmp_path, good_serving_report)
     assert any("mixes" in p for p in check_load.check(path))
     assert check_load.main(["check_load.py", str(path)]) == 1
@@ -457,6 +490,77 @@ def test_check_load_recovery_lost_request_fails(tmp_path,
     path = _write_serving(tmp_path, good_serving_report)
     assert any("lost or completed twice" in p
                for p in check_load.check(path))
+
+
+def test_check_load_missing_paging_block_fails(tmp_path,
+                                               good_serving_report):
+    """Schema 3 requires the paged-vs-contiguous comparison — a report
+    without it means the paging argument was never measured."""
+    del good_serving_report["paging"]
+    path = _write_serving(tmp_path, good_serving_report)
+    assert any("paging: block missing" in p for p in check_load.check(path))
+    assert check_load.main(["check_load.py", str(path)]) == 1
+
+
+def test_check_load_no_paged_mix_fails(tmp_path, good_serving_report):
+    del good_serving_report["mixes"]["heavytail"]
+    good_serving_report["mixes"]["bursty"] = _good_mix("bursty")
+    path = _write_serving(tmp_path, good_serving_report)
+    assert any("no paged" in p for p in check_load.check(path))
+
+
+def test_check_load_paging_ratio_below_floor_fails(tmp_path,
+                                                   good_serving_report):
+    """A fabricated ratio_ok with numbers below the floor must fail —
+    the gate recomputes the ratio from the two sub-runs."""
+    blk = good_serving_report["paging"]
+    blk["paged"]["max_concurrent"] = 2          # 1.0x, floor is 1.5x
+    blk["concurrency_ratio"] = 1.0
+    path = _write_serving(tmp_path, good_serving_report)
+    problems = check_load.check(path)
+    assert any("sustains only" in p for p in problems)
+    assert any("ratio_ok" in p for p in problems)
+    assert check_load.main(["check_load.py", str(path)]) == 1
+
+
+def test_check_load_paging_ratio_mismatch_fails(tmp_path,
+                                                good_serving_report):
+    good_serving_report["paging"]["concurrency_ratio"] = 9.0
+    path = _write_serving(tmp_path, good_serving_report)
+    assert any("recomputed" in p for p in check_load.check(path))
+
+
+def test_check_load_paging_oom_fails(tmp_path, good_serving_report):
+    good_serving_report["paging"]["paged"]["kv"]["kv_ooms"] = 3
+    path = _write_serving(tmp_path, good_serving_report)
+    assert any("allocator OOM" in p for p in check_load.check(path))
+
+
+def test_check_load_paged_mix_missing_kv_fails(tmp_path,
+                                               good_serving_report):
+    del good_serving_report["mixes"]["heavytail"]["kv"]
+    path = _write_serving(tmp_path, good_serving_report)
+    assert any("kv block missing" in p for p in check_load.check(path))
+    assert check_load.main(["check_load.py", str(path)]) == 1
+
+
+def test_check_load_paged_mix_oom_or_failed_fails(tmp_path,
+                                                  good_serving_report):
+    """OOM backpressure must surface as evictions/rejections — FAILED
+    requests or raw allocator OOMs in a paged mix fail the gate."""
+    mix = good_serving_report["mixes"]["heavytail"]
+    mix["kv"]["kv_ooms"] = 1
+    mix["outcomes"]["failed"] = 1
+    mix["outcomes"]["completed"] -= 1      # keep conservation intact
+    for row in mix["requests"]:
+        if row["state"] == "completed":
+            row["state"] = "failed"
+            break
+    path = _write_serving(tmp_path, good_serving_report)
+    problems = check_load.check(path)
+    assert any("over-promising" in p for p in problems)
+    assert any("FAILED requests" in p for p in problems)
+    assert check_load.main(["check_load.py", str(path)]) == 1
 
 
 # ---------------------------------------------------------------------------

@@ -21,6 +21,13 @@ Validates a BENCH_serving.json produced by `benchmarks/serving_load.py`
    cycle really crashed (exit 17) and resumed (exit 0), conserved every
    request exactly once across both process lifetimes, and replayed no
    more journal than one snapshot interval.
+6. **Paging pays for itself**: a heavy-tail (lognormal-length) mix ran
+   on the paged KV cache with a clean pool (no allocator OOMs, no failed
+   requests), and the ``paging`` comparison block shows the paged
+   allocator sustaining >= ``ratio_floor`` (>= 1.5) times the contiguous
+   path's concurrent active slots at the **same KV-memory budget** — the
+   ratio is recomputed here from the two sub-runs' numbers, so a report
+   that merely *claims* ``ratio_ok`` fails too.
 
 Usage: python tools/check_load.py [BENCH_serving.json]
 Exit code 0 = clean; 1 = problems (listed one per line).
@@ -32,8 +39,9 @@ import json
 import pathlib
 import sys
 
-SCHEMA = 2
+SCHEMA = 3
 MIN_MIXES = 2
+MIN_PAGING_RATIO = 1.5
 
 # Per-mix blocks the serving trajectory diffs rely on.
 REQUIRED_MIX_FIELDS = (
@@ -42,8 +50,17 @@ REQUIRED_MIX_FIELDS = (
     "ttft_ms", "per_token_ms", "tok_per_s", "queue_depth",
     "queue_depth_max", "predicted_vs_measured", "requests",
     "slo", "slo_ok", "slo_violations",
+    "max_concurrent", "paged", "sched",
 )
 PERCENTILE_FIELDS = ("p50", "p99", "n")
+
+# KV-memory utilization block every paged mix must report (schema 3):
+# pages allocated vs tokens resident at the pool's peak.
+REQUIRED_KV_FIELDS = (
+    "page_size", "num_pages", "pages_allocated", "pages_free",
+    "tokens_resident", "token_capacity", "utilization",
+    "pages_peak", "kv_ooms",
+)
 
 
 def _check_mix(name: str, mix: dict) -> list[str]:
@@ -99,6 +116,32 @@ def _check_mix(name: str, mix: dict) -> list[str]:
     if mix["slo_ok"] and violations:
         problems.append(f"mix {name}: slo_ok true but budgets violated "
                         f"— report inconsistent")
+
+    # Paged mixes must carry the KV-memory utilization block and must
+    # have drained without tripping allocator OOMs or failing requests —
+    # backpressure is allowed (evictions / rejections), silent loss and
+    # FAILED-from-OOM are not.
+    if mix["paged"]:
+        kv = mix.get("kv")
+        if not isinstance(kv, dict):
+            problems.append(f"mix {name}: paged but kv block missing")
+        else:
+            for f in REQUIRED_KV_FIELDS:
+                if f not in kv:
+                    problems.append(f"mix {name}: kv missing field {f!r}")
+            if kv.get("kv_ooms", 0):
+                problems.append(f"mix {name}: {kv['kv_ooms']} allocator "
+                                f"OOMs — admission is over-promising the "
+                                f"pool")
+            alloc, total = kv.get("pages_allocated"), kv.get("num_pages")
+            if isinstance(alloc, int) and isinstance(total, int) \
+                    and alloc > total:
+                problems.append(f"mix {name}: kv pages_allocated {alloc} "
+                                f"> pool {total}")
+        if out.get("failed", 0):
+            problems.append(f"mix {name}: paged mix has "
+                            f"{out['failed']} FAILED requests — OOM "
+                            f"backpressure must evict/reject, not fail")
     return problems
 
 
@@ -141,6 +184,56 @@ def _check_recovery(rec) -> list[str]:
     return problems
 
 
+def _check_paging(blk) -> list[str]:
+    problems: list[str] = []
+    if not isinstance(blk, dict):
+        return ["paging: block missing — the paged-vs-contiguous "
+                "comparison never ran"]
+    for f in ("page_size", "budget_tokens", "pool_pages", "contiguous",
+              "paged", "concurrency_ratio", "ratio_floor", "ratio_ok"):
+        if f not in blk:
+            problems.append(f"paging: missing field {f!r}")
+    if problems:
+        return problems
+    cont, paged = blk["contiguous"], blk["paged"]
+    for side, sub in (("contiguous", cont), ("paged", paged)):
+        if not isinstance(sub, dict) or "max_concurrent" not in sub:
+            problems.append(f"paging: {side} sub-run missing "
+                            f"max_concurrent")
+    if problems:
+        return problems
+    if blk["ratio_floor"] < MIN_PAGING_RATIO:
+        problems.append(f"paging: ratio_floor {blk['ratio_floor']} < "
+                        f"required {MIN_PAGING_RATIO}")
+    # Recompute the headline ratio — trust numbers, not verdicts.
+    ratio = paged["max_concurrent"] / max(1, cont["max_concurrent"])
+    if abs(ratio - blk["concurrency_ratio"]) > 0.01:
+        problems.append(f"paging: recorded ratio "
+                        f"{blk['concurrency_ratio']} != recomputed "
+                        f"{ratio:.3f}")
+    if ratio < blk["ratio_floor"]:
+        problems.append(f"paging: paged sustains only {ratio:.2f}x the "
+                        f"contiguous concurrency at the same KV budget "
+                        f"(floor {blk['ratio_floor']}x)")
+    if not blk["ratio_ok"]:
+        problems.append("paging: report's own ratio_ok is false")
+    elif ratio < blk["ratio_floor"]:
+        problems.append("paging: ratio_ok true but the numbers violate "
+                        "the floor — report inconsistent")
+    kv = paged.get("kv")
+    if not isinstance(kv, dict):
+        problems.append("paging: paged sub-run missing kv block")
+    elif kv.get("kv_ooms", 0):
+        problems.append(f"paging: paged sub-run hit {kv['kv_ooms']} "
+                        f"allocator OOMs")
+    for side, sub in (("contiguous", cont), ("paged", paged)):
+        out = sub.get("outcomes", {})
+        if out.get("failed", 0):
+            problems.append(f"paging: {side} sub-run has "
+                            f"{out['failed']} FAILED requests")
+    return problems
+
+
 def check(path: pathlib.Path) -> list[str]:
     problems: list[str] = []
     try:
@@ -168,8 +261,12 @@ def check(path: pathlib.Path) -> list[str]:
         problems.extend(_check_mix(name, mix))
     if "open" not in kinds:
         problems.append("mixes: no open-loop (Poisson trace) mix present")
+    if not any(isinstance(m, dict) and m.get("paged")
+               for m in mixes.values()):
+        problems.append("mixes: no paged (heavy-tail) mix present")
 
     problems.extend(_check_recovery(report.get("recovery")))
+    problems.extend(_check_paging(report.get("paging")))
 
     if not report.get("slo_ok") and not any("SLO" in p for p in problems):
         problems.append("report slo_ok false")
@@ -183,7 +280,9 @@ def main(argv: list[str]) -> int:
         print(p)
     if not problems:
         print(f"ok: {path} (schema {SCHEMA}, >= {MIN_MIXES} mixes, "
-              f"conservation + SLO budgets hold, crash recovery bounded)")
+              f"conservation + SLO budgets hold, crash recovery bounded, "
+              f"paging >= {MIN_PAGING_RATIO}x concurrency at equal KV "
+              f"budget)")
     return 1 if problems else 0
 
 
