@@ -179,6 +179,97 @@ def decode_step_measured(b: int = 2, hq: int = 8, hkv: int = 2,
     }
 
 
+# Declared accuracy budget for the int8 KV stream: max |attention-output
+# error| of the quantized kernel vs the float oracle on the same inputs.
+# tools/check_bench.py re-asserts the measured error against this budget
+# (and caps the budget itself, so a report cannot fabricate a loose one).
+INT8_ERR_BUDGET = 0.05
+
+
+def decode_int8_measured(b: int = 2, hq: int = 8, hkv: int = 2,
+                         dh: int = 64, cache_len: int = 1024,
+                         length: int | None = None,
+                         reps: int = 3, trials: int = 3):
+    """Int8 quantized KV stream vs the bf16 stream at the same decode
+    shape — the bandwidth-vs-accuracy trade the quantized family #5 is
+    for, recorded two ways:
+
+    * ``bytes_ratio``: bf16 KV bytes per token / int8+scale bytes per
+      token (``quantize.bytes_per_token``) — the exact per-token stream
+      the kernel fetches, deterministic on any backend (2*dh/(dh+4),
+      >= 1.6x for dh >= 16, ~2x asymptotically);
+    * ``tuned_us`` vs ``bf16_us``: interleaved best-of-``trials``
+      wall-clock of the int8 kernel at its tuned block against the float
+      decode kernel streaming a bf16 cache (interpret mode off-TPU, so
+      dequant overhead dominates — the byte count is the load-bearing
+      number there).
+
+    ``max_abs_err`` is the quantized kernel's output error against the
+    float-cache oracle on the same pre-quantization values; it must land
+    under the declared ``err_budget`` (gated in tools/check_bench.py).
+    """
+    from repro.kernels.attention import decode as attn_decode
+    from repro.kernels.attention import decode_int8 as attn_decode_int8
+    from repro.runtime import quantize
+
+    interpret = jax.default_backend() != "tpu"
+    if length is None:
+        length = cache_len * 3 // 4 + 1          # ragged on purpose
+    g = hq // hkv
+    problem = {"bkv": b * hkv, "g": g, "cache_len": cache_len, "dh": dh}
+    plan = autotune.tune("decode_int8", problem, jnp.bfloat16)
+    tuned_bk = plan.knobs["block_k"]
+    scale = 1.0 / (dh ** 0.5)
+    q = jax.random.normal(jax.random.PRNGKey(0), (b * hkv, g, dh),
+                          jnp.float32)
+    k = jax.random.normal(jax.random.PRNGKey(1), (b * hkv, cache_len, dh),
+                          jnp.float32)
+    v = jax.random.normal(jax.random.PRNGKey(2), (b * hkv, cache_len, dh),
+                          jnp.float32)
+    kq, ks = quantize.quantize_rows(k)
+    vq, vs = quantize.quantize_rows(v)
+    kb, vb = k.astype(jnp.bfloat16), v.astype(jnp.bfloat16)
+
+    slots = _interleaved_best_us({
+        "int8": lambda: attn_decode_int8.quantized_decode_attention(
+            q, kq, ks, vq, vs, scale=scale, length=length,
+            block_k=tuned_bk, interpret=interpret),
+        "bf16": lambda: attn_decode.decode_attention(
+            q.astype(jnp.bfloat16), kb, vb, scale=scale, length=length,
+            block_k=tuned_bk, interpret=interpret),
+    }, reps, trials)
+
+    # Accuracy of the shipped kernel path against the float oracle on the
+    # ORIGINAL (pre-quantization) values — this is the quantization error
+    # plus any kernel-numerics error, i.e. what serving actually eats.
+    out_q = attn_decode_int8.quantized_decode_attention(
+        q, kq, ks, vq, vs, scale=scale, length=length, block_k=tuned_bk,
+        interpret=interpret)
+    out_f = attn_decode.decode_ref(
+        q, k[:, :, None, :], v[:, :, None, :], length=length, scale=scale)
+    max_abs_err = float(jnp.max(jnp.abs(
+        out_q.astype(jnp.float32) - out_f.astype(jnp.float32))))
+
+    bpt_int8 = quantize.bytes_per_token(dh)
+    bpt_bf16 = 2 * dh * 2                        # K + V rows at 2 B/elem
+    model = registry.get("decode_int8").cost_fn(problem, plan.knobs)
+    return {
+        "shape": [b * hkv, g, cache_len, dh],
+        "length": length,
+        "tuned_block_k": tuned_bk,
+        "tuned_source": plan.source,
+        "tuned_us": slots["int8"],
+        "bf16_us": slots["bf16"],
+        "bytes_per_token_int8": bpt_int8,
+        "bytes_per_token_bf16": bpt_bf16,
+        "bytes_ratio": bpt_bf16 / bpt_int8,
+        "max_abs_err": max_abs_err,
+        "err_budget": INT8_ERR_BUDGET,
+        "model_time_us": model["time_s"] * 1e6,
+        "interpret": interpret,
+    }
+
+
 def decode_ragged_measured(b: int = 4, hq: int = 4, hkv: int = 2,
                            dh: int = 32, cache_len: int = 256,
                            block_k: int = 64,
@@ -277,7 +368,7 @@ def tuned_vs_fixed_measured(bh: int = 4, seq: int = 256, dh: int = 32,
 
 
 def main(tuned_recs=None, measured_rec=None, skip_rec=None, decode_rec=None,
-         ragged_rec=None):
+         ragged_rec=None, int8_rec=None):
     lines = []
     for r in (tuned_recs if tuned_recs is not None else tuned_vs_fixed()):
         bh, sq, sk, dh = r["shape"]
@@ -311,6 +402,13 @@ def main(tuned_recs=None, measured_rec=None, skip_rec=None, decode_rec=None,
         f"fetched_speedup={rg['fetched_speedup']:.3f};"
         f"wall_speedup={rg['wall_speedup']:.3f};"
         f"block_k={rg['block_k']}")
+    q8 = int8_rec if int8_rec is not None else decode_int8_measured()
+    lines.append(
+        f"attn.decode_int8_bkv{q8['shape'][0]}_l{q8['shape'][2]},"
+        f"{q8['tuned_us']:.1f},"
+        f"bytes_ratio={q8['bytes_ratio']:.3f};"
+        f"max_abs_err={q8['max_abs_err']:.4f};"
+        f"block_k={q8['tuned_block_k']};src={q8['tuned_source']}")
     return lines
 
 

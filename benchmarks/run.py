@@ -32,11 +32,12 @@ SMOKE_CAUSAL_SKIP = dict(bh=1, seq=256, dh=32, block_q=64, block_k=64,
 SMOKE_DECODE = dict(b=1, hq=4, hkv=2, dh=32, cache_len=256, reps=2, trials=2)
 SMOKE_RAGGED = dict(b=2, hq=4, hkv=2, dh=32, cache_len=128, block_k=32,
                     reps=2, trials=2)
+SMOKE_INT8 = dict(b=1, hq=4, hkv=2, dh=32, cache_len=256, reps=2, trials=2)
 
 
 def kernel_report(tuned_recs=None, attn_recs=None, attn_measured=None,
                   attn_skip=None, attn_decode=None,
-                  attn_ragged=None) -> dict:
+                  attn_ragged=None, attn_int8=None) -> dict:
     import jax
 
     from benchmarks import attention_prefill, table1_matmul, table2_spmv
@@ -64,6 +65,9 @@ def kernel_report(tuned_recs=None, attn_recs=None, attn_measured=None,
         "decode_ragged": (
             attn_ragged if attn_ragged is not None
             else attention_prefill.decode_ragged_measured()),
+        "decode_int8": (
+            attn_int8 if attn_int8 is not None
+            else attention_prefill.decode_int8_measured()),
     }
 
 
@@ -98,11 +102,13 @@ def main(argv=None) -> None:
         **(SMOKE_DECODE if args.smoke else {}))
     attn_ragged = attention_prefill.decode_ragged_measured(
         **(SMOKE_RAGGED if args.smoke else {}))
+    attn_int8 = attention_prefill.decode_int8_measured(
+        **(SMOKE_INT8 if args.smoke else {}))
     lines: list[str] = []
     lines += table1_matmul.main(tuned_recs)
     lines += table2_spmv.main()
     lines += attention_prefill.main(attn_recs, attn_measured, attn_skip,
-                                    attn_decode, attn_ragged)
+                                    attn_decode, attn_ragged, attn_int8)
     lines += bandwidth_extrapolation.main()
     try:
         lines += roofline_report.main()
@@ -114,7 +120,8 @@ def main(argv=None) -> None:
 
     if not args.skip_json:
         report = kernel_report(tuned_recs, attn_recs, attn_measured,
-                               attn_skip, attn_decode, attn_ragged)
+                               attn_skip, attn_decode, attn_ragged,
+                               attn_int8)
         # Atomic temp+fsync+rename: a run killed mid-save leaves the
         # previous committed report, never a torn BENCH_kernels.json.
         from repro.core.ioutil import atomic_write_json

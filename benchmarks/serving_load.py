@@ -19,6 +19,10 @@ seeded workload shape (`runtime.loadgen`):
   (most requests short, a few very long): the production shape where a
   paged KV cache beats per-slot worst-case allocation.  Runs paged with
   the ``spf`` admission policy (docs/PAGING.md).
+* ``quantized``   — the steady workload on the int8 KV cache
+  (``kv_dtype: int8``): the quantized decode family #5 end-to-end, with
+  the step-time prediction priced by the int8+scale byte stream
+  (docs/AUTOTUNE.md "Quantized streaming").
 
 The report's ``paging`` block replays the heavy-tail workload twice at
 the **same KV-memory budget** — contiguous per-slot reservations vs the
@@ -107,6 +111,19 @@ MIXES: dict[str, dict] = {
         "slo": {"ttft_p99_steps": 30, "per_token_p99_steps": 3,
                 "min_tok_per_step_frac": 0.05},
     },
+    "quantized": {
+        "kind": "open",
+        "seed": 23,
+        "requests": 24,
+        "smoke_requests": 10,
+        "rate_factor": 0.5,
+        "prompt_dist": {"kind": "staggered", "base": 8, "spread": 8},
+        "gen_dist": {"kind": "fixed", "value": 8},
+        "queue_limit": 0,
+        "kv_dtype": "int8",
+        "slo": {"ttft_p99_steps": 30, "per_token_p99_steps": 3,
+                "min_tok_per_step_frac": 0.15},
+    },
     "heavytail": {
         "kind": "open",
         "seed": 19,
@@ -189,6 +206,7 @@ def run_mix(cfg, name: str, spec: dict, *, smoke: bool = False,
 
     n = spec["smoke_requests"] if smoke else spec["requests"]
     seed = spec["seed"]
+    kv_dtype = jnp.dtype(spec.get("kv_dtype", "float32"))
 
     # Phase 1: lengths only — the workload's slot-depth distribution the
     # batch sweep prices (same midpoint model as launch/serve.py).
@@ -203,7 +221,7 @@ def run_mix(cfg, name: str, spec: dict, *, smoke: bool = False,
 
     if batch > 0:
         step_us = autotune.predict_decode_step_us(
-            cfg, batch, cache_len=max_len, kv_dtype=jnp.float32,
+            cfg, batch, cache_len=max_len, kv_dtype=kv_dtype,
             lengths=autotune._quantile_lengths(batch, dist, max_len))
         decision = {"batch": batch, "source": "flag",
                     "predicted_step_us": round(step_us, 3)}
@@ -213,7 +231,7 @@ def run_mix(cfg, name: str, spec: dict, *, smoke: bool = False,
             or [min(batch_candidates)]
         decision = autotune.select_serving_batch(
             cfg, cache_len=max_len, prefill_len=prefill_len,
-            kv_dtype=jnp.float32, candidates=tuple(cands),
+            kv_dtype=kv_dtype, candidates=tuple(cands),
             slot_lengths=dist)
         decision["source"] = "autotune"
         batch = decision["batch"]
@@ -249,7 +267,8 @@ def run_mix(cfg, name: str, spec: dict, *, smoke: bool = False,
     mesh = make_host_mesh(data=1, model=1)
     with set_mesh(mesh), shd.use_rules(specs.rules_for(mesh)):
         server = serve.Server(cfg, batch, max_len, prefill_len=prefill_len,
-                              slot_lengths=dist, paged=paged_spec)
+                              slot_lengths=dist, paged=paged_spec,
+                              kv_dtype=kv_dtype)
         scheduler = (Scheduler(sched, allocator=server.allocator)
                      if (paged_spec is not None or sched != "fcfs")
                      else None)
@@ -309,6 +328,7 @@ def run_mix(cfg, name: str, spec: dict, *, smoke: bool = False,
         "max_concurrent": stats.get("max_concurrent", 0),
         "paged": paged_spec is not None,
         "sched": sched,
+        "kv_dtype": kv_dtype.name,
         **metrics,
         "slo": slo,
         "slo_ok": not violations,

@@ -335,6 +335,61 @@ def decode_time_model(
     }
 
 
+def quantized_decode_time_model(
+    bkv: int, g: int, kv_len: int, dh: int,
+    block_k: int,
+    chip: hardware.Chip = hardware.TPU_V5E,
+    lengths: Sequence[int] | None = None,
+) -> dict:
+    """Bandwidth model of the int8 quantized-streaming decode kernel
+    (kernels/attention/decode_int8.py).
+
+    Honest accounting relative to :func:`decode_time_model`: the K/V
+    stream drops to 1 byte per element **plus** a 4-byte f32 scale per
+    fetched token row per K and V (the scale stream is real traffic —
+    ``dh + 4`` bytes per token per KV head each for K and V, which is why
+    the win is ``2*dh / (dh + 4)``, not 2x), and the in-register dequant
+    adds one multiply per fetched K/V element on top of the attention
+    FLOPs.  For small ``dh`` or compute-bound regimes the model can and
+    should lose to the bf16 stream — the DSE compares, it doesn't assume.
+    """
+    base = decode_time_model(bkv, g, kv_len, dh, block_k, chip=chip,
+                             dtype_bytes=1, lengths=lengths)
+    fetched_total = base["fetched_k"] * bkv
+    # f32 scale per fetched token row, for each of K and V.
+    scale_bytes = 2.0 * fetched_total * 4
+    # q/o rows stay float (f32 here; decode_time_model charged them at
+    # the 1-byte cache width, so re-charge at 4).
+    qo_bytes = 2.0 * bkv * g * dh * 4
+    kv_bytes = 2.0 * fetched_total * dh * 1
+    # One dequant multiply per streamed K/V element.
+    flops = base["flops"] + 2.0 * fetched_total * dh
+    memory_s = (kv_bytes + scale_bytes + qo_bytes) / chip.hbm_bw
+    compute_s = flops / chip.peak_flops
+    total_s = max(compute_s, memory_s)
+    # VMEM: int8 K/V blocks + f32 scale vectors + f32 q/o/scratch.
+    vmem_bytes = (
+        2 * 2 * block_k * dh * 1             # double-buffered int8 K/V
+        + 2 * 2 * block_k * 4                # double-buffered scale rows
+        + 2 * g * dh * 4                     # q + o rows (f32)
+        + (2 * g + g * dh) * 4               # m, l, acc scratch
+        + 2 * g * block_k * 4                # s, p intermediates
+    )
+    out = dict(base)
+    out.update({
+        "flops": flops,
+        "traffic_bytes": kv_bytes + scale_bytes + qo_bytes,
+        "scale_bytes": scale_bytes,
+        "vmem_bytes": vmem_bytes,
+        "compute_s": compute_s,
+        "memory_s": memory_s,
+        "time_s": total_s,
+        "gflops": flops / total_s / 1e9,
+        "bytes_per_token": 2 * (dh + 4),     # per token per KV head
+    })
+    return out
+
+
 def spmv_time_model(
     rows: int, width: int, n: int, nnz: int,
     block_rows: int, block_cols: int | None = None,

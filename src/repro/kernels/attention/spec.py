@@ -19,8 +19,10 @@ import jax
 from repro.core import cost_model, dse, hardware
 from repro.kernels import registry
 from repro.kernels.attention import decode as attn_decode
+from repro.kernels.attention import decode_int8 as attn_decode_int8
 from repro.kernels.attention import kernel as attn_kernel
 from repro.kernels.attention import ops as attn_ops
+from repro.runtime import quantize
 
 
 # ---------------------------------------------------------------------------
@@ -328,4 +330,124 @@ registry.register(registry.KernelSpec(
     tie_break=lambda knobs: (-knobs["block_k"],),
     default_measure_k=0,     # dispatched inside the serving jit trace
     bench_key="attention_decode",
+))
+
+
+# ---------------------------------------------------------------------------
+# Int8 quantized-streaming decode attention (kernel family #5)
+# ---------------------------------------------------------------------------
+# The ~50-line KernelSpec recipe: the quantized kernel shares the decode
+# family's problem shape and block_k knob, but streams int8 K/V + f32
+# per-row scales and is priced by `quantized_decode_time_model` — whose
+# honest scale-stream + dequant-FLOP accounting lets the DSE lose to the
+# bf16 stream where it should (small dh, compute-bound corners).
+
+def _decode_int8_key_fn(problem: dict, dtype: str, backend: str) -> str:
+    # `q8` tags the quantized cache layout; `dtype` remains the activation
+    # dtype the q rows and output carry.
+    lengths = problem.get("lengths")
+    ltag = ("" if not lengths
+            else ":l" + "-".join(str(int(l)) for l in lengths))
+    return (f"{problem['bkv']}x{problem['g']}x{problem['cache_len']}"
+            f"x{problem['dh']}{ltag}:q8:{dtype}:{backend}")
+
+
+def _decode_int8_enumerate(problem: dict, dtype_bytes: int,
+                           vmem_bytes: int | None,
+                           top: int) -> list[dse.Candidate]:
+    chip = hardware.TPU_V5E
+    budget = vmem_bytes if vmem_bytes is not None else chip.usable_vmem()
+    kv_len = problem["cache_len"]
+    cands = sorted({min(bk, max(kv_len, 1))
+                    for bk in (128, 256, 512, 1024, 2048)})
+
+    def evaluate(knobs: dict) -> tuple[float, dict]:
+        res = _decode_int8_cost_fn(problem, knobs)
+        if res["vmem_bytes"] > budget:
+            return float("inf"), {}
+        return res["time_s"], {**knobs, **res}
+
+    ranked = dse.explore([{"block_k": bk} for bk in cands], evaluate,
+                         top=len(cands))
+    ranked = [c for c in ranked if c.detail and "block_k" in c.detail]
+    ranked.sort(key=lambda c: (c.score, -c.detail["block_k"]))
+    if not ranked:
+        bk = cands[0]
+        res = _decode_int8_cost_fn(problem, {"block_k": bk})
+        ranked = [dse.Candidate({"block_k": bk}, res["time_s"],
+                                {"block_k": bk, **res})]
+    return [dse.Candidate({"block_k": c.detail["block_k"]}, c.score, {})
+            for c in ranked[:top]]
+
+
+def _decode_int8_cost_fn(problem: dict, knobs: dict,
+                         dtype_bytes: int = 1) -> dict:
+    # dtype_bytes is fixed by the layout (int8 values + f32 scales); the
+    # engine's argument is accepted and ignored.
+    return cost_model.quantized_decode_time_model(
+        problem["bkv"], problem["g"], problem["cache_len"], problem["dh"],
+        knobs["block_k"], lengths=_decode_lengths(problem))
+
+
+def _decode_int8_make_inputs(problem: dict, dtype) -> tuple:
+    bkv, g, cache_len, dh = (problem["bkv"], problem["g"],
+                             problem["cache_len"], problem["dh"])
+    q = jax.random.normal(jax.random.PRNGKey(0), (bkv, g, dh), dtype)
+    k = jax.random.normal(jax.random.PRNGKey(1), (bkv, cache_len, dh))
+    v = jax.random.normal(jax.random.PRNGKey(2), (bkv, cache_len, dh))
+    kq, ks = quantize.quantize_rows(k)
+    vq, vs = quantize.quantize_rows(v)
+    return q, kq, ks, vq, vs
+
+
+def _decode_int8_build_launcher(problem: dict, knobs: dict, interpret: bool):
+    import numpy as np
+
+    scale = 1.0 / (problem["dh"] ** 0.5)
+    lengths = _decode_lengths(problem)
+    if lengths:
+        rep = problem["bkv"] // len(lengths)
+        length = np.repeat(np.asarray(lengths, np.int32), rep)
+    else:
+        length = problem["cache_len"]
+    return lambda q, kq, ks, vq, vs: attn_decode_int8.quantized_decode_attention(
+        q, kq, ks, vq, vs, scale=scale, length=length,
+        block_k=knobs["block_k"], interpret=interpret)
+
+
+def _decode_int8_problem_fn(q, kq, ks, vq, vs,
+                            length=None) -> tuple[dict, object]:
+    b, hq, dh = q.shape
+    _, kl, hkv, _ = kq.shape
+    # The cache layout is fixed (int8 + f32 scales, tagged `q8` in the
+    # key), so unlike the float decode family the plan keys on the
+    # *activation* dtype the q rows carry.
+    return {"bkv": b * hkv, "g": hq // hkv, "cache_len": kl,
+            "dh": dh}, q.dtype
+
+
+def _decode_int8_run_fn(plan: registry.Plan, q, kq, ks, vq, vs, *,
+                        interpret=False, length=None):
+    return attn_decode_int8.quantized_gqa_decode_attention(
+        q, kq, ks, vq, vs, length=length,
+        block_k=plan.knobs["block_k"], interpret=interpret)
+
+
+registry.register(registry.KernelSpec(
+    name="decode_int8",
+    key_fn=_decode_int8_key_fn,
+    enumerate_candidates=_decode_int8_enumerate,
+    cost_fn=_decode_int8_cost_fn,
+    make_inputs=_decode_int8_make_inputs,
+    build_launcher=_decode_int8_build_launcher,
+    reference_fn=lambda q, kq, ks, vq, vs, length=None:
+        attn_decode_int8.quantized_decode_ref(q, kq, ks, vq, vs,
+                                              length=length),
+    problem_fn=_decode_int8_problem_fn,
+    run_fn=_decode_int8_run_fn,
+    measure_elems=lambda p: p["bkv"] * (p["g"] + 2 * p["cache_len"])
+    * p["dh"],
+    tie_break=lambda knobs: (-knobs["block_k"],),
+    default_measure_k=0,     # dispatched inside the serving jit trace
+    bench_key="decode_int8",
 ))

@@ -605,14 +605,20 @@ def plan_for_model(cfg, batch: int, *, prefill_len: int = 0,
             jnp.bfloat16, measure_k=measure_k, cache=cache)))
     if cache_len > 0 and cfg.num_heads and cfg.num_kv_heads:
         # Keyed on the KV-cache dtype the server allocates (`kv_dtype`) —
-        # the decode kernel streams the cache, not the activations.
+        # the decode kernel streams the cache, not the activations.  An
+        # int8 cache routes to the quantized family instead: its layout
+        # is fixed (q8 tag in the key), so the plan keys on the bf16
+        # activation dtype the serve loop's q rows carry.
+        quantized = jnp.dtype(kv_dtype) == jnp.int8
+        family = "decode_int8" if quantized else "decode"
+        tune_dtype = jnp.bfloat16 if quantized else kv_dtype
         problem = {"bkv": batch * cfg.num_kv_heads,
                    "g": cfg.num_heads // cfg.num_kv_heads,
                    "cache_len": cache_len, "dh": cfg.head_dim}
         if slot_lengths:
             problem["lengths"] = tuple(
                 _quantile_lengths(batch, slot_lengths, cache_len))
-        plan = tune("decode", problem, kv_dtype, measure_k=measure_k,
+        plan = tune(family, problem, tune_dtype, measure_k=measure_k,
                     cache=cache)
         if slot_lengths:
             # Pin the workload-aware winner under the runtime dispatch key
@@ -620,10 +626,10 @@ def plan_for_model(cfg, batch: int, *, prefill_len: int = 0,
             # measured winner already owns it.
             run_problem = {k: v for k, v in problem.items()
                            if k != "lengths"}
-            spec = registry.get("decode")
+            spec = registry.get(family)
             cache_obj = cache or get_cache()
             run_key = cache_key(spec, run_problem,
-                                jnp.dtype(kv_dtype).name, _backend(), None)
+                                jnp.dtype(tune_dtype).name, _backend(), None)
             existing = cache_obj._load()["entries"].get(run_key)
             if existing is None or existing.get("source") == "model":
                 # Re-score the pinned knobs at the runtime problem: the
@@ -699,19 +705,29 @@ def predict_decode_step_us(cfg, batch: int, *, cache_len: int,
             # cache depth — the worst case the kernel must still fit).
             from repro.core import cost_model
             prob = decode_plan.plan.problem
-            model = cost_model.decode_time_model(
-                prob["bkv"], prob["g"], prob["cache_len"], prob["dh"],
-                block_k or decode_plan.plan.knobs["block_k"],
-                dtype_bytes=jnp.dtype(kv_dtype).itemsize,
-                lengths=list(lengths))
+            bk = block_k or decode_plan.plan.knobs["block_k"]
+            if jnp.dtype(kv_dtype) == jnp.int8:
+                model = cost_model.quantized_decode_time_model(
+                    prob["bkv"], prob["g"], prob["cache_len"], prob["dh"],
+                    bk, lengths=list(lengths))
+            else:
+                model = cost_model.decode_time_model(
+                    prob["bkv"], prob["g"], prob["cache_len"], prob["dh"],
+                    bk, dtype_bytes=jnp.dtype(kv_dtype).itemsize,
+                    lengths=list(lengths))
             kv_us = n_attn * model["time_s"] * 1e6
         else:
             kv_us = n_attn * decode_plan.plan.model_time_us
     else:
         streamed = (float(sum(lengths)) if lengths is not None
                     else float(batch * cache_len))
-        kv_bytes = (2.0 * streamed * cfg.kv_dim
-                    * jnp.dtype(kv_dtype).itemsize)            # K+V stream
+        if jnp.dtype(kv_dtype) == jnp.int8:
+            # int8 values + one f32 scale per token per KV head, K and V.
+            kv_bytes = 2.0 * streamed * (cfg.kv_dim
+                                         + 4 * cfg.num_kv_heads)
+        else:
+            kv_bytes = (2.0 * streamed * cfg.kv_dim
+                        * jnp.dtype(kv_dtype).itemsize)        # K+V stream
         kv_us = n_attn * kv_bytes / hardware.TPU_V5E.hbm_bw * 1e6
     return (n_attn * attn_us + cfg.num_layers * ffn_us + logits_us + kv_us)
 

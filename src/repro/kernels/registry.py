@@ -137,7 +137,7 @@ BUILTIN_SPEC_MODULES = (
 # (a snapshot taken mid-load misses a family whose spec module triggered
 # the load from inside its own in-flight registration).  Agreement with
 # the modules is asserted post-load and by tests/test_registry.py.
-BUILTIN_FAMILIES = ("matmul", "spmv", "attention", "decode")
+BUILTIN_FAMILIES = ("matmul", "spmv", "attention", "decode", "decode_int8")
 _builtins_loaded = False
 _loading_builtins = False
 

@@ -75,10 +75,15 @@ CRASH_EXIT = 17
 class Server:
     def __init__(self, cfg, batch: int, max_len: int,
                  prefill_len: int = 0, autotune_kernels: bool = True,
-                 slot_lengths=None, injector=None, paged=None):
+                 slot_lengths=None, injector=None, paged=None,
+                 kv_dtype=jnp.float32):
         self.cfg = cfg
         self.batch = batch
         self.max_len = max_len
+        # The KV-cache storage dtype (`--kv-dtype`): f32 (default), bf16,
+        # or int8 — int8 caches carry per-token-row scale leaves and
+        # decode through the quantized kernel family (decode_int8).
+        self.kv_dtype = jnp.dtype(kv_dtype)
         # `paged` (a runtime.paging.PageSpec, or None for the contiguous
         # cache) switches the KV cache to the pooled page layout
         # (docs/PAGING.md): every layer shares one physical page pool and
@@ -103,7 +108,7 @@ class Server:
         self.kernel_plan = (autotune.plan_for_model(cfg, batch,
                                                     prefill_len=prefill_len,
                                                     cache_len=max_len,
-                                                    kv_dtype=jnp.float32,
+                                                    kv_dtype=self.kv_dtype,
                                                     slot_lengths=slot_lengths)
                             if autotune_kernels else [])
         self.params = transformer.init(cfg, jax.random.PRNGKey(0),
@@ -116,7 +121,7 @@ class Server:
         self._serve_step_ref = None
         self.injector = injector
         self.cache = transformer.cache_init(cfg, batch, max_len,
-                                            dtype=jnp.float32, paged=paged)
+                                            dtype=self.kv_dtype, paged=paged)
         self.slot_len = np.zeros(batch, np.int32)      # tokens generated
         self.slot_target = np.zeros(batch, np.int32)   # stop length
         self.slot_req = -np.ones(batch, np.int32)      # request id
@@ -879,7 +884,8 @@ def prepare_resume(state_dir, cfg=None) -> dict:
     server = Server(cfg, int(serving["batch"]), int(serving["max_len"]),
                     prefill_len=int(serving["prefill_len"]),
                     slot_lengths=serving["dist"], injector=injector,
-                    paged=paged)
+                    paged=paged,
+                    kv_dtype=jnp.dtype(serving.get("kv_dtype", "float32")))
     if arrays is not None:
         # restore_state re-adopts the page allocator from the restored
         # table (canonical allocation order makes it snapshot-free)
@@ -991,6 +997,7 @@ def _summary(server, lc, stats, wall, *, batch, batch_source,
         "per_token_ms": lc.per_token_percentiles(),
         "request_outcomes": lc.outcome_trace(),
         "watchdog": watchdog.summary(),
+        "kv_dtype": server.kv_dtype.name,
         "kernel_plan": [p.record() for p in server.kernel_plan],
     }
     if scheduler is not None:
@@ -1024,7 +1031,7 @@ def _run_resume(args) -> int:
                 autotune.install_dispatch_hook(R["injector"].dispatch_hook)
             predicted_us = (autotune.predict_decode_step_us(
                 server.cfg, server.batch, cache_len=server.max_len,
-                kv_dtype=jnp.float32,
+                kv_dtype=server.kv_dtype,
                 lengths=autotune._quantile_lengths(
                     server.batch, serving["dist"], server.max_len),
                 plans=server.kernel_plan) if server.kernel_plan else None)
@@ -1102,6 +1109,12 @@ def main(argv=None):
                     help="physical pages in the shared pool; 0 = "
                          "contiguous-equivalent "
                          "(batch * ceil(max_len / page_size))")
+    ap.add_argument("--kv-dtype", default="f32",
+                    choices=["f32", "bf16", "int8"],
+                    help="KV-cache storage dtype: int8 streams quantized "
+                         "K/V + per-row scales through the decode_int8 "
+                         "kernel family (~1.9x fewer bytes per token at "
+                         "dh=64)")
     ap.add_argument("--sched", default="fcfs", choices=list(POLICIES),
                     help="admission policy over the request queue; with "
                          "--paged admission is additionally gated on the "
@@ -1158,6 +1171,8 @@ def main(argv=None):
     if cfg.family == "encoder":
         print("encoder-only arch has no decode path; nothing to serve")
         return 0
+    kv_dtype = {"f32": jnp.float32, "bf16": jnp.bfloat16,
+                "int8": jnp.int8}[args.kv_dtype]
     mesh = make_host_mesh(data=1, model=1)
     rules = specs.rules_for(mesh)
 
@@ -1198,7 +1213,7 @@ def main(argv=None):
         # not the batch-max broadcast that over-charges every short slot.
         decision = autotune.select_serving_batch(
             cfg, cache_len=max_len, prefill_len=prefill_len,
-            kv_dtype=jnp.float32,          # the Server's cache dtype
+            kv_dtype=kv_dtype,             # the Server's cache dtype
             candidates=tuple(cands),
             slot_lengths=dist,
             latency_budget_ms=args.latency_budget_ms,
@@ -1254,7 +1269,7 @@ def main(argv=None):
         step_us = args.step_time_us or loadgen.virtual_step_us(
             decision.get("predicted_step_us")
             or autotune.predict_decode_step_us(
-                cfg, batch, cache_len=max_len, kv_dtype=jnp.float32,
+                cfg, batch, cache_len=max_len, kv_dtype=kv_dtype,
                 lengths=autotune._quantile_lengths(batch, dist, max_len)))
         clock = loadgen.VirtualClock(step_us * 1e-6)
         source = loadgen.TraceSource(trace, cfg.vocab_size)
@@ -1300,6 +1315,7 @@ def main(argv=None):
                         "num_pages": paged.num_pages,
                         "max_pages": paged.max_pages}),
             "sched": args.sched,
+            "kv_dtype": jnp.dtype(kv_dtype).name,
         })
 
     try:
@@ -1307,12 +1323,12 @@ def main(argv=None):
             server = Server(cfg, batch, max_len,
                             prefill_len=prefill_len,
                             slot_lengths=dist, injector=injector,
-                            paged=paged)
+                            paged=paged, kv_dtype=kv_dtype)
             scheduler = (Scheduler(args.sched, allocator=server.allocator)
                          if (paged is not None or args.sched != "fcfs")
                          else None)
             predicted_us = (autotune.predict_decode_step_us(
-                cfg, batch, cache_len=max_len, kv_dtype=jnp.float32,
+                cfg, batch, cache_len=max_len, kv_dtype=kv_dtype,
                 lengths=autotune._quantile_lengths(batch, dist, max_len),
                 plans=server.kernel_plan)
                 if server.kernel_plan else None)

@@ -17,6 +17,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.parallel.sharding import constrain
+from repro.runtime import quantize
 
 Params = dict
 DEFAULT_INIT_SCALE = 0.02
@@ -245,7 +246,16 @@ def attention_apply(
         # ``active`` may be (B,) — the slot writes/advances all S positions
         # — or (B, S) — chunked prefill, where each admitted slot writes
         # only its own prompt's prefix of the packed chunk.
+        # An int8 cache carries parallel per-token-row scale leaves
+        # (runtime/quantize.py): tokens are quantized ONCE here at
+        # write time, and reads either stream q+scale through the
+        # quantized fused kernel or dequantize for the jnp fallback.
         ck, cv = cache["k"], cache["v"]
+        quantized = "k_scale" in cache
+        if quantized:
+            kq_w, ks_w = quantize.quantize_rows(k)
+            vq_w, vs_w = quantize.quantize_rows(v)
+            cks, cvs = cache["k_scale"], cache["v_scale"]
         if lengths is None:
             lengths = jnp.zeros((b,), jnp.int32)
         if active is None:
@@ -279,9 +289,21 @@ def attention_apply(
                 pages, jnp.clip(page_idx, 0, mp - 1), axis=1)      # (B, S)
             ok_w = act2d & (page_idx < mp) & (page_id >= 0)
             page_w = jnp.where(ok_w, page_id, npg)     # OOB sentinel: drop
-            ck = ck.at[page_w, row].set(k.astype(ck.dtype), mode="drop")
-            cv = cv.at[page_w, row].set(v.astype(cv.dtype), mode="drop")
-            if use_fused:
+            if quantized:
+                ck = ck.at[page_w, row].set(kq_w, mode="drop")
+                cv = cv.at[page_w, row].set(vq_w, mode="drop")
+                cks = cks.at[page_w, row].set(ks_w, mode="drop")
+                cvs = cvs.at[page_w, row].set(vs_w, mode="drop")
+            else:
+                ck = ck.at[page_w, row].set(k.astype(ck.dtype), mode="drop")
+                cv = cv.at[page_w, row].set(v.astype(cv.dtype), mode="drop")
+            if use_fused and quantized:
+                from repro.kernels.attention.decode_int8 import \
+                    paged_quantized_gqa_decode_attention
+                out = paged_quantized_gqa_decode_attention(
+                    q[:, 0], ck, cks, cv, cvs, pages, length=new_len,
+                    scale=scale, interpret=(mode == "interpret"))[:, None]
+            elif use_fused:
                 from repro.kernels.attention.decode import \
                     paged_gqa_decode_attention
                 out = paged_gqa_decode_attention(
@@ -293,12 +315,21 @@ def attention_apply(
                                       cfg.head_dim)
                 vg = cv[safe].reshape(b, mp * psz, cfg.num_kv_heads,
                                       cfg.head_dim)
+                if quantized:
+                    kg = quantize.dequantize_rows(
+                        kg, cks[safe].reshape(b, mp * psz,
+                                              cfg.num_kv_heads))
+                    vg = quantize.dequantize_rows(
+                        vg, cvs[safe].reshape(b, mp * psz,
+                                              cfg.num_kv_heads))
                 k_pos = jnp.arange(mp * psz, dtype=jnp.int32)
                 k_valid = k_pos[None, :] < new_len[:, None]
                 out = attention_core(q, kg, vg, pos_b, k_pos,
                                      causal=cfg.causal, window=None,
                                      scale=scale, k_valid=k_valid)
             new_cache = {"k": ck, "v": cv}
+            if quantized:
+                new_cache.update({"k_scale": cks, "v_scale": cvs})
             out = out.reshape(b, s, cfg.q_dim).astype(x.dtype)
             y = out @ gather_weight(params["wo"]).astype(x.dtype)
             return constrain(y, "batch", "res_seq", "embed"), new_cache
@@ -308,8 +339,14 @@ def attention_apply(
         # Inactive slots must not write: aim their rows out of bounds and
         # let mode="drop" discard them (also guards depth overflow).
         t_write = jnp.where(act2d, t_write, cache_len)
-        ck = ck.at[b_idx, t_write].set(k.astype(ck.dtype), mode="drop")
-        cv = cv.at[b_idx, t_write].set(v.astype(cv.dtype), mode="drop")
+        if quantized:
+            ck = ck.at[b_idx, t_write].set(kq_w, mode="drop")
+            cv = cv.at[b_idx, t_write].set(vq_w, mode="drop")
+            cks = cks.at[b_idx, t_write].set(ks_w, mode="drop")
+            cvs = cvs.at[b_idx, t_write].set(vs_w, mode="drop")
+        else:
+            ck = ck.at[b_idx, t_write].set(k.astype(ck.dtype), mode="drop")
+            cv = cv.at[b_idx, t_write].set(v.astype(cv.dtype), mode="drop")
         ck = constrain(ck, "batch", "kv_seq", "kv_heads", None)
         cv = constrain(cv, "batch", "kv_seq", "kv_heads", None)
         k_slots = jnp.arange(cache_len, dtype=jnp.int32)
@@ -338,14 +375,25 @@ def attention_apply(
             # after the serve step is jitted requires a retrace (new
             # process / cache clear).
             from repro.kernels.autotune import dispatch
-            out = dispatch("decode", q[:, 0], ck, cv, length=new_len,
-                           interpret=(mode == "interpret"))[:, None]
+            if quantized:
+                out = dispatch("decode_int8", q[:, 0], ck, cks, cv, cvs,
+                               length=new_len,
+                               interpret=(mode == "interpret"))[:, None]
+            else:
+                out = dispatch("decode", q[:, 0], ck, cv, length=new_len,
+                               interpret=(mode == "interpret"))[:, None]
         else:
-            out = attention_core(q, ck, cv, pos_b, k_pos,
+            kr, vr = ck, cv
+            if quantized:
+                kr = quantize.dequantize_rows(ck, cks)
+                vr = quantize.dequantize_rows(cv, cvs)
+            out = attention_core(q, kr, vr, pos_b, k_pos,
                                  causal=cfg.causal,
                                  window=cfg.sliding_window, scale=scale,
                                  k_valid=k_valid)
         new_cache = {"k": ck, "v": cv}
+        if quantized:
+            new_cache.update({"k_scale": cks, "v_scale": cvs})
 
     out = out.reshape(b, s, cfg.q_dim).astype(x.dtype)
     y = out @ gather_weight(params["wo"]).astype(x.dtype)
@@ -354,6 +402,7 @@ def attention_apply(
 
 def attention_cache_init(cfg, batch: int, cache_len: int, dtype=jnp.bfloat16,
                          paged=None) -> Params:
+    quantized = jnp.dtype(dtype) == jnp.int8
     if paged is not None:
         # Paged layout: a pool of physical pages shared by every slot
         # (the per-slot page table lives once at the cache root, not per
@@ -364,13 +413,18 @@ def attention_cache_init(cfg, batch: int, cache_len: int, dtype=jnp.bfloat16,
                 "(the ring-buffer layout is contiguous-only)")
         shape = (paged.num_pages, paged.page_size, cfg.num_kv_heads,
                  cfg.head_dim)
-        return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
-    if cfg.sliding_window:
-        cache_len = min(cache_len, cfg.sliding_window)
-    return {
-        "k": jnp.zeros((batch, cache_len, cfg.num_kv_heads, cfg.head_dim), dtype),
-        "v": jnp.zeros((batch, cache_len, cfg.num_kv_heads, cfg.head_dim), dtype),
-    }
+    else:
+        if cfg.sliding_window:
+            cache_len = min(cache_len, cfg.sliding_window)
+        shape = (batch, cache_len, cfg.num_kv_heads, cfg.head_dim)
+    if quantized:
+        # Int8 layout: q values + a parallel f32 per-token-row scale leaf
+        # per KV head (one scale for each written (dh,) vector — see
+        # runtime/quantize.py for why the block is a row, not a page).
+        kq, ks = quantize.quantized_zeros(shape)
+        vq, vs = quantize.quantized_zeros(shape)
+        return {"k": kq, "k_scale": ks, "v": vq, "v_scale": vs}
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
 
 
 # ---------------------------------------------------------------------------

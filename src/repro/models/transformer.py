@@ -176,7 +176,8 @@ def param_specs(cfg: ModelConfig):
     return specs
 
 
-def _layer_cache_specs(cfg: ModelConfig, l: int, paged=None):
+def _layer_cache_specs(cfg: ModelConfig, l: int, paged=None,
+                       quantized: bool = False):
     if cfg.family == "ssm":
         return {"shift_t": ("batch", None, "embed"),
                 "wkv": ("batch", "heads", None, None),
@@ -185,22 +186,36 @@ def _layer_cache_specs(cfg: ModelConfig, l: int, paged=None):
         if paged is not None:
             # Pool axes: (num_pages, page_size, Hkv, dh) — no batch axis;
             # pages are interleaved across slots, so only heads shard.
-            return {"k": (None, None, "kv_heads", None),
-                    "v": (None, None, "kv_heads", None)}
-        return {"k": ("batch", "kv_seq", "kv_heads", None),
-                "v": ("batch", "kv_seq", "kv_heads", None)}
+            specs = {"k": (None, None, "kv_heads", None),
+                     "v": (None, None, "kv_heads", None)}
+            if quantized:
+                # Scale leaves drop the dh axis (one f32 per token row).
+                specs["k_scale"] = (None, None, "kv_heads")
+                specs["v_scale"] = (None, None, "kv_heads")
+            return specs
+        specs = {"k": ("batch", "kv_seq", "kv_heads", None),
+                 "v": ("batch", "kv_seq", "kv_heads", None)}
+        if quantized:
+            specs["k_scale"] = ("batch", "kv_seq", "kv_heads")
+            specs["v_scale"] = ("batch", "kv_seq", "kv_heads")
+        return specs
     return {"conv": ("batch", None, "ff"), "h": ("batch", "ff", None)}
 
 
-def cache_specs(cfg: ModelConfig, paged=None):
-    """Pytree of logical-axis tuples matching `cache_init`'s structure."""
+def cache_specs(cfg: ModelConfig, paged=None, kv_dtype=None):
+    """Pytree of logical-axis tuples matching `cache_init`'s structure.
+
+    ``kv_dtype`` mirrors `cache_init`'s dtype: int8 caches carry the
+    extra per-row scale leaves, so their spec tree must too."""
+    quantized = kv_dtype is not None and jnp.dtype(kv_dtype) == jnp.int8
     if cfg.family == "hybrid":
         period = cfg.attn_period
-        group = {str(i): _layer_cache_specs(cfg, i, paged)
+        group = {str(i): _layer_cache_specs(cfg, i, paged, quantized)
                  for i in range(period)}
         blocks = _prepend_layer_axis(group)
     else:
-        blocks = _prepend_layer_axis(_layer_cache_specs(cfg, 0, paged))
+        blocks = _prepend_layer_axis(
+            _layer_cache_specs(cfg, 0, paged, quantized))
     specs = {"blocks": blocks, "index": (), "lengths": ("batch",)}
     if paged is not None:
         specs["pages"] = ("batch", None)

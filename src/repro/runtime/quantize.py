@@ -1,0 +1,88 @@
+"""Symmetric int8 quantization for the streamed KV cache.
+
+Decode is bandwidth-bound: the fused decode kernel streams every valid
+K/V row of the cache once per generated token, so halving the streamed
+bytes is a direct tokens/sec multiplier (ROADMAP item 2; the
+bf16-stream/f32-accumulate matmul path is the in-repo precedent, and
+`optim/adamw.py`'s blockwise int8 moments are the storage-side one).
+
+The quantization block here is **one token row**: each written token's
+(dh,)-vector per KV head gets one f32 scale (absmax / 127, the same
+symmetric law as `adamw.quantize_blockwise`, block width = dh instead of
+128).  A coarser `page_size`-row block would amortize the scale stream
+further, but scatter-on-write lands one token at a time — re-quantizing
+a shared block on every write would perturb tokens already in the cache,
+breaking the solo-vs-batched determinism contract and byte-identical
+crash/resume.  Per-row scales keep every cache write idempotent and
+write-once while still cutting the stream to
+``dh + 4`` bytes per token per KV head vs ``2*dh`` for bf16
+(>= 1.6x for dh >= 16, ~1.88x at dh = 64 — the `decode_int8` bench row,
+CI-gated by `tools/check_bench.py`).
+
+Properties the tests pin (`tests/test_quantize.py`):
+
+* round-trip error is bounded by half a quantization step:
+  ``|x - deq(quant(x))| <= absmax(row) / 127 / 2`` (+ float eps);
+* an all-zero row quantizes to zeros with scale 0 and round-trips
+  exactly (the scale floor keeps the division finite);
+* an outlier dominates its own row's scale only — other rows keep full
+  resolution (the reason the block is a row, not a page);
+* re-quantization is idempotent: ``quant(deq(quant(x))) == quant(x)``
+  bit-for-bit, so a crash/resume cycle through the snapshot (which
+  stores q + scale, never dequantized values) cannot drift.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# Quantized values span [-127, 127] (symmetric; -128 unused so negation
+# is exact), one f32 scale per row.
+QMAX = 127
+SCALE_FLOOR = 1e-12
+
+
+def quantize_rows(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """``x (..., dh) float -> (q int8 (..., dh), scale f32 (...))``.
+
+    Per-row symmetric absmax quantization: the row element of largest
+    magnitude maps to exactly +-QMAX, everything else rounds to the
+    nearest step.  A zero row gets scale 0 (the floor only guards the
+    division) and quantizes to zeros.
+    """
+    xf = x.astype(jnp.float32)
+    scale = jnp.max(jnp.abs(xf), axis=-1) / QMAX
+    q = jnp.round(xf / jnp.maximum(scale[..., None], SCALE_FLOOR))
+    q = jnp.clip(q, -QMAX, QMAX).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_rows(q: jax.Array, scale: jax.Array) -> jax.Array:
+    """Inverse of :func:`quantize_rows`: ``q * scale`` in f32."""
+    return q.astype(jnp.float32) * scale[..., None].astype(jnp.float32)
+
+
+def quantized_zeros(shape: tuple[int, ...],
+                    ) -> tuple[jax.Array, jax.Array]:
+    """Fresh (q, scale) leaves for an empty cache of ``shape`` token rows
+    (last axis is dh): all-zero int8 values with all-zero scales — the
+    exact image of `quantize_rows(zeros)`, so a reset slot is bitwise a
+    fresh one."""
+    return (jnp.zeros(shape, jnp.int8),
+            jnp.zeros(shape[:-1], jnp.float32))
+
+
+def bytes_per_token(dh: int, *, kv: int = 2) -> int:
+    """Streamed bytes per token per KV head for the int8 layout: dh int8
+    values + one f32 scale, for each of K and V (``kv = 2``).  The
+    honest-accounting number the cost model and the CI gate recompute."""
+    return kv * (dh + 4)
+
+
+def max_abs_error_bound(x: jax.Array) -> jax.Array:
+    """Per-row round-trip error bound: half a quantization step,
+    ``absmax(row) / QMAX / 2``.  Used by the property tests and the
+    bench row's declared accuracy budget."""
+    xf = x.astype(jnp.float32)
+    return jnp.max(jnp.abs(xf), axis=-1) / QMAX / 2.0

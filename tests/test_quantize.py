@@ -1,0 +1,181 @@
+"""Int8 KV-cache quantization: the properties `runtime/quantize.py`'s
+docstring pins (half-step round-trip bound, zero rows exact, outliers
+isolated to their own row, bitwise-idempotent re-quantization — the
+crash/resume invariant), plus the quantized decode kernel family #5
+against its dequantize-then-attend oracle and the float path.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # minimal env: property tests skip, rest run
+    from _hypothesis_stub import given, settings, st
+
+from repro.kernels import autotune
+from repro.kernels.attention import decode as attn_decode
+from repro.kernels.attention import decode_int8 as attn_decode_int8
+from repro.runtime import quantize
+
+# float32 slop on top of the analytic half-step bound: the bound divides
+# the same absmax the kernel multiplies back, so only rounding eps rides
+# on top.
+EPS = 1e-5
+
+
+def _rows(seed: int, n: int, dh: int) -> jax.Array:
+    return jax.random.normal(jax.random.PRNGKey(seed), (n, dh),
+                             jnp.float32) * 3.0
+
+
+# ---------------------------------------------------------------- properties
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), dh=st.sampled_from([8, 16, 32, 64]))
+def test_round_trip_error_within_half_step(seed, dh):
+    x = _rows(seed, 5, dh)
+    q, s = quantize.quantize_rows(x)
+    err = jnp.abs(quantize.dequantize_rows(q, s) - x)
+    bound = quantize.max_abs_error_bound(x)
+    assert bool(jnp.all(err <= bound[:, None] + EPS)), (
+        np.asarray(err).max(), np.asarray(bound).max())
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), dh=st.sampled_from([8, 16, 32, 64]))
+def test_requantize_is_idempotent(seed, dh):
+    """quant(deq(quant(x))) == quant(x) bit-for-bit: a snapshot/resume
+    cycle (which stores q + scale, never dequantized values) cannot
+    drift the cache."""
+    x = _rows(seed, 5, dh)
+    q1, s1 = quantize.quantize_rows(x)
+    q2, s2 = quantize.quantize_rows(quantize.dequantize_rows(q1, s1))
+    np.testing.assert_array_equal(np.asarray(q1), np.asarray(q2))
+    np.testing.assert_array_equal(np.asarray(s1), np.asarray(s2))
+
+
+def test_zero_row_quantizes_exactly():
+    x = jnp.zeros((3, 16), jnp.float32)
+    q, s = quantize.quantize_rows(x)
+    assert q.dtype == jnp.int8 and s.dtype == jnp.float32
+    np.testing.assert_array_equal(np.asarray(q), 0)
+    np.testing.assert_array_equal(np.asarray(s), 0.0)
+    np.testing.assert_array_equal(
+        np.asarray(quantize.dequantize_rows(q, s)), 0.0)
+
+
+def test_quantized_zeros_is_the_image_of_quantizing_zeros():
+    """A reset cache slot must be bitwise a freshly-written zero row."""
+    zq, zs = quantize.quantized_zeros((2, 4, 8))
+    q, s = quantize.quantize_rows(jnp.zeros((2, 4, 8), jnp.float32))
+    np.testing.assert_array_equal(np.asarray(zq), np.asarray(q))
+    np.testing.assert_array_equal(np.asarray(zs), np.asarray(s))
+
+
+def test_outlier_dominates_only_its_own_row():
+    """The block is one token row on purpose: a huge outlier coarsens its
+    own row's step but leaves every other row at full resolution."""
+    x = _rows(0, 4, 32)
+    x = x.at[1, 7].set(1000.0)
+    q, s = quantize.quantize_rows(x)
+    err = jnp.abs(quantize.dequantize_rows(q, s) - x)
+    clean = jnp.asarray([0, 2, 3])
+    clean_bound = quantize.max_abs_error_bound(x[clean])
+    assert bool(jnp.all(err[clean] <= clean_bound[:, None] + EPS))
+    # and the clean rows' bound is untouched by the outlier: tiny
+    assert float(clean_bound.max()) < 0.1
+    # the outlier row maps its own absmax to exactly +-QMAX
+    assert int(np.abs(np.asarray(q[1])).max()) == quantize.QMAX
+
+
+def test_bytes_per_token_accounting():
+    for dh in (16, 32, 64, 128):
+        int8 = quantize.bytes_per_token(dh)
+        assert int8 == 2 * (dh + 4)
+        bf16 = 2 * dh * 2
+        assert bf16 / int8 >= 1.6          # the CI-gated floor
+    assert quantize.bytes_per_token(64, kv=1) == 68
+
+
+# ------------------------------------------------------------ kernel family
+
+def _gqa_case(b=2, hq=4, hkv=2, dh=32, cache_len=96, seed=3):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(ks[0], (b, hq, dh), jnp.float32)
+    k = jax.random.normal(ks[1], (b, cache_len, hkv, dh), jnp.float32)
+    v = jax.random.normal(ks[2], (b, cache_len, hkv, dh), jnp.float32)
+    kq, ksc = quantize.quantize_rows(k)
+    vq, vsc = quantize.quantize_rows(v)
+    return q, k, v, kq, ksc, vq, vsc
+
+
+def test_quantized_kernel_matches_oracle_contiguous():
+    q, _, _, kq, ksc, vq, vsc = _gqa_case()
+    b, cache_len = q.shape[0], kq.shape[1]
+    length = jnp.asarray([cache_len, cache_len // 3], jnp.int32)
+    out = attn_decode_int8.quantized_gqa_decode_attention(
+        q, kq, ksc, vq, vsc, length=length, block_k=32, interpret=True)
+    ref = attn_decode_int8.quantized_decode_ref(
+        q, kq, ksc, vq, vsc, length=length)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_quantized_kernel_matches_oracle_paged():
+    b, hq, hkv, dh = 2, 4, 2, 16
+    page_size, num_pages, max_pages = 8, 16, 6
+    ks = jax.random.split(jax.random.PRNGKey(11), 4)
+    q = jax.random.normal(ks[0], (b, hq, dh), jnp.float32)
+    kp = jax.random.normal(ks[1], (num_pages, page_size, hkv, dh),
+                           jnp.float32)
+    vp = jax.random.normal(ks[2], (num_pages, page_size, hkv, dh),
+                           jnp.float32)
+    kq, ksc = quantize.quantize_rows(kp)
+    vq, vsc = quantize.quantize_rows(vp)
+    pages = jax.random.permutation(ks[3], num_pages)[: b * max_pages]
+    pages = pages.reshape(b, max_pages).astype(jnp.int32)
+    length = jnp.asarray([page_size * max_pages, 13], jnp.int32)
+    out = attn_decode_int8.paged_quantized_gqa_decode_attention(
+        q, kq, ksc, vq, vsc, pages, length=length, interpret=True)
+    ref = attn_decode_int8.paged_quantized_decode_ref(
+        q, kq, ksc, vq, vsc, pages, length=length)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_dispatch_decode_int8_matches_oracle(monkeypatch, tmp_path):
+    """The engine path layers.py actually takes: tune + run family #5
+    through `autotune.dispatch("decode_int8", ...)` in interpret mode and
+    through the off-TPU reference route; both must agree with the
+    oracle."""
+    monkeypatch.setenv("REPRO_AUTOTUNE_CACHE",
+                       str(tmp_path / "autotune.json"))
+    q, _, _, kq, ksc, vq, vsc = _gqa_case(cache_len=64)
+    length = jnp.asarray([64, 17], jnp.int32)
+    ref = attn_decode_int8.quantized_decode_ref(
+        q, kq, ksc, vq, vsc, length=length)
+    out = autotune.dispatch("decode_int8", q, kq, ksc, vq, vsc,
+                            length=length, interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+    out_ref_path = autotune.dispatch("decode_int8", q, kq, ksc, vq, vsc,
+                                     length=length)
+    np.testing.assert_allclose(np.asarray(out_ref_path), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_quantized_attention_tracks_float_attention():
+    """End-to-end accuracy claim: int8-cache attention vs the f32-cache
+    oracle on the same pre-quantization values stays inside the declared
+    bench budget (attention is an average of rows each within the
+    half-step bound)."""
+    q, k, v, kq, ksc, vq, vsc = _gqa_case(dh=32, cache_len=128, seed=9)
+    length = jnp.asarray([128, 77], jnp.int32)
+    out_q = attn_decode_int8.quantized_decode_ref(
+        q, kq, ksc, vq, vsc, length=length)
+    out_f = attn_decode.decode_ref(q, k, v, length=length)
+    err = float(jnp.max(jnp.abs(out_q - out_f)))
+    assert err < 0.05, err            # the decode_int8 bench err budget
+    assert err > 0.0                  # quantization really happened

@@ -43,11 +43,13 @@ def _requests(cfg, spec):
     return out
 
 
-def _serve_all(cfg, batch, requests, max_len):
+def _serve_all(cfg, batch, requests, max_len, paged=None,
+               kv_dtype=jnp.float32):
     """Run the continuous-batching loop from launch.serve's main(); returns
     {rid: [generated token ids]} (the prefill's next-token prediction plus
     every decode-step token)."""
-    server = Server(cfg, batch, max_len, autotune_kernels=False)
+    server = Server(cfg, batch, max_len, autotune_kernels=False,
+                    paged=paged, kv_dtype=kv_dtype)
     queue = list(requests)
     tokens = {rid: [] for rid, _, _ in requests}
     slot_rid = {}
@@ -64,7 +66,10 @@ def _serve_all(cfg, batch, requests, max_len):
                 tokens[rid].append(int(nxt[slot, 0]))
         for slot in done:
             completed += 1
-            server.slot_req[slot] = -1
+            if paged is not None:
+                server.release_slot(slot)
+            else:
+                server.slot_req[slot] = -1
             if queue:
                 rid, prompt, gen = queue.pop(0)
                 server.prefill(slot, rid, prompt, gen)
@@ -195,6 +200,85 @@ def test_predicted_step_time_ragged_below_batch_max(tmp_path):
     by_batch = {r["batch"]: r["step_us"] for r in d["sweep"]}
     by_batch_max = {r["batch"]: r["step_us"] for r in d_max["sweep"]}
     assert all(by_batch[b] < by_batch_max[b] for b in (2, 4))
+
+
+def test_int8_paged_matches_int8_contiguous_token_for_token():
+    """The quantized layout invariant: the SAME ragged workload through
+    the int8 paged pool and the int8 contiguous cache produces identical
+    tokens — quantization happens once at cache-write, so the layout
+    (and its parallel scales leaves) must not change a single token."""
+    from repro.runtime.paging import PageSpec
+    cfg = _cfg()
+    spec = [(5, 7), (9, 4), (3, 6)]
+    reqs = _requests(cfg, spec)
+    max_len = max(p + g for p, g in spec) + 4
+    contiguous = _serve_all(cfg, 2, reqs, max_len, kv_dtype=jnp.int8)
+    paged = _serve_all(cfg, 2, reqs, max_len,
+                       paged=PageSpec.build(2, max_len, page_size=4),
+                       kv_dtype=jnp.int8)
+    assert paged == contiguous
+
+
+def test_int8_paged_fused_kernel_matches_contiguous(monkeypatch, tmp_path):
+    """Same invariant with the fused quantized kernels forced on
+    (interpret mode): the paged int8 kernel and the contiguous
+    decode_int8 dispatch must agree token-for-token."""
+    from repro.runtime.paging import PageSpec
+    monkeypatch.setenv("REPRO_DECODE_KERNEL", "interpret")
+    monkeypatch.setenv("REPRO_AUTOTUNE_CACHE",
+                       str(tmp_path / "autotune.json"))
+    cfg = _cfg()
+    spec = [(4, 5), (7, 3)]
+    reqs = _requests(cfg, spec)
+    max_len = max(p + g for p, g in spec) + 4
+    contiguous = _serve_all(cfg, 2, reqs, max_len, kv_dtype=jnp.int8)
+    paged = _serve_all(cfg, 2, reqs, max_len,
+                       paged=PageSpec.build(2, max_len, page_size=4),
+                       kv_dtype=jnp.int8)
+    assert paged == contiguous
+
+
+def test_int8_cache_tracks_f32_tokens_under_budget():
+    """Int8 vs f32 cache, token-match-under-budget: decode logits
+    through the int8 cache stay within a bounded distance of the
+    f32-cache logits, and the sampled (argmax) token matches at every
+    step where the f32 top-1/top-2 margin exceeds twice that error —
+    the only steps where an under-budget perturbation could legally flip
+    the argmax are the ones the f32 model itself was nearly undecided
+    on.  (The paged int8 layout is token-identical to this contiguous
+    one — `test_int8_paged_matches_int8_contiguous_token_for_token` — so
+    the budget transfers to int8-paged vs f32-contiguous.)"""
+    cfg = _cfg()
+    b, s, max_len = 2, 6, 16
+    params = transformer.init(cfg, KEY)
+    toks = jax.random.randint(KEY, (b, s), 0, cfg.vocab_size)
+    cache_f = transformer.cache_init(cfg, b, max_len, dtype=jnp.float32)
+    cache_q = transformer.cache_init(cfg, b, max_len, dtype=jnp.int8)
+    assert "k_scale" in cache_q["blocks"]    # parallel scale leaves present
+    max_err, flips, decided = 0.0, 0, 0
+    for t in range(s):
+        step = {"tokens": toks[:, t:t + 1]}
+        lg_f, cache_f, _ = transformer.forward(cfg, params, step,
+                                               cache=cache_f,
+                                               compute_dtype=jnp.float32)
+        lg_q, cache_q, _ = transformer.forward(cfg, params, step,
+                                               cache=cache_q,
+                                               compute_dtype=jnp.float32)
+        lf = np.asarray(lg_f[:, 0], np.float32)
+        lq = np.asarray(lg_q[:, 0], np.float32)
+        err = float(np.abs(lq - lf).max())
+        max_err = max(max_err, err)
+        top2 = np.sort(lf, axis=-1)[:, -2:]
+        margin = top2[:, 1] - top2[:, 0]
+        for i in range(b):
+            if margin[i] > 2.0 * err:
+                decided += 1
+                if lq[i].argmax() != lf[i].argmax():
+                    flips += 1
+    assert max_err < 0.5, f"int8 logit error {max_err} blew the budget"
+    assert decided > 0, "margin threshold decided nothing — test inert"
+    assert flips == 0, (
+        f"{flips} argmax flips at margins above 2x the logit error")
 
 
 def test_serve_step_active_none_advances_everyone():

@@ -29,6 +29,16 @@ def good_report():
         report[key] = {f: 1 for f in fields}
     report["attention_causal_skip"]["kstep_speedup"] = 2.0
     report["decode_ragged"]["fetched_speedup"] = 1.6
+    # the decode_int8 gate RECOMPUTES the bytes accounting from the
+    # shape, so the fixture must be internally consistent (dh=64)
+    report["decode_int8"].update({
+        "shape": [4, 2, 256, 64],
+        "bytes_per_token_int8": 2 * (64 + 4),
+        "bytes_per_token_bf16": 2 * 64 * 2,
+        "bytes_ratio": (2 * 64 * 2) / (2 * (64 + 4)),
+        "max_abs_err": 0.004,
+        "err_budget": 0.05,
+    })
     return report
 
 
@@ -95,6 +105,65 @@ def test_check_bench_below_floor_ragged_fails(tmp_path, good_report):
     assert check_bench.main(["check_bench.py", str(path)]) == 1
 
 
+def test_check_bench_int8_missing_row_fails(tmp_path, good_report):
+    del good_report["decode_int8"]
+    path = _write(tmp_path, good_report)
+    assert any("decode_int8" in p for p in check_bench.check(path))
+    assert check_bench.main(["check_bench.py", str(path)]) == 1
+
+
+def test_check_bench_int8_fabricated_ratio_fails(tmp_path, good_report):
+    """A report asserting a bytes ratio its own shape does not deliver
+    must fail — the gate recomputes from dh, never trusts the field."""
+    good_report["decode_int8"]["bytes_ratio"] = 4.0
+    path = _write(tmp_path, good_report)
+    problems = check_bench.check(path)
+    assert any("recomputed from shape" in p for p in problems)
+    assert check_bench.main(["check_bench.py", str(path)]) == 1
+
+
+def test_check_bench_int8_fabricated_bytes_fails(tmp_path, good_report):
+    good_report["decode_int8"]["bytes_per_token_int8"] = 1
+    path = _write(tmp_path, good_report)
+    assert any("fabricated bandwidth claim" in p
+               for p in check_bench.check(path))
+
+
+def test_check_bench_int8_small_dh_below_ratio_floor_fails(tmp_path,
+                                                           good_report):
+    """dh=8 only yields 2*8/(8+4) = 1.33x — below the 1.6x floor even
+    with every field internally consistent."""
+    good_report["decode_int8"].update({
+        "shape": [4, 2, 256, 8],
+        "bytes_per_token_int8": 2 * (8 + 4),
+        "bytes_per_token_bf16": 2 * 8 * 2,
+        "bytes_ratio": (2 * 8 * 2) / (2 * (8 + 4)),
+    })
+    path = _write(tmp_path, good_report)
+    problems = check_bench.check(path)
+    assert any("bytes ratio" in p and "1.6" in p for p in problems)
+    assert check_bench.main(["check_bench.py", str(path)]) == 1
+
+
+def test_check_bench_int8_error_over_budget_fails(tmp_path, good_report):
+    good_report["decode_int8"]["max_abs_err"] = 0.1
+    path = _write(tmp_path, good_report)
+    problems = check_bench.check(path)
+    assert any("accuracy regressed" in p for p in problems)
+    assert check_bench.main(["check_bench.py", str(path)]) == 1
+
+
+def test_check_bench_int8_fabricated_budget_fails(tmp_path, good_report):
+    """Declaring a loose budget to hide a bad error must fail: the
+    declared budget itself is capped by the gate."""
+    good_report["decode_int8"]["max_abs_err"] = 0.4
+    good_report["decode_int8"]["err_budget"] = 0.5
+    path = _write(tmp_path, good_report)
+    problems = check_bench.check(path)
+    assert any("budget fabrication refused" in p for p in problems)
+    assert check_bench.main(["check_bench.py", str(path)]) == 1
+
+
 def test_check_bench_unreadable_report_fails(tmp_path):
     path = tmp_path / "nope.json"
     assert check_bench.check(path) != []
@@ -142,7 +211,8 @@ def _good_summary(**overrides):
          "tokens_generated": 72, "tok_per_s": 10.0,
          "outcomes": {"completed": 6, "timed_out": 0, "failed": 0,
                       "rejected": 0, "evicted": 1, "retried": 1},
-         "ttft_ms": {"p50": 12.0, "p99": 30.0, "n": 6}}
+         "ttft_ms": {"p50": 12.0, "p99": 30.0, "n": 6},
+         "kv_dtype": "float32"}
     s.update(overrides)
     return s
 
@@ -257,6 +327,75 @@ def test_check_serve_chaos_failed_requests_fail(tmp_path):
 def test_check_serve_unreadable_log_fails(tmp_path):
     assert check_serve.main(["check_serve.py",
                              str(tmp_path / "nope.log")]) == 1
+
+
+def _write_serving_json(tmp_path, **overrides):
+    serving = {"batch": 4, "kv_dtype": "float32", "paging": None}
+    serving.update(overrides)
+    p = tmp_path / "serving.json"
+    p.write_text(json.dumps(serving))
+    return p
+
+
+def test_check_serve_serving_json_happy_path(tmp_path, capsys):
+    log = tmp_path / "serve.log"
+    log.write_text(GOOD_LOG)
+    sj = _write_serving_json(tmp_path)
+    assert check_serve.main(["check_serve.py", str(log),
+                             "--serving-json", str(sj)]) == 0
+    out = capsys.readouterr().out
+    assert "kv dtype float32" in out        # the ok line reports the dtype
+
+
+def test_check_serve_serving_json_kv_dtype_mismatch_fails(tmp_path):
+    """serving.json declaring int8 while the summary ran float32 means
+    resume would rebuild the wrong cache layout — must fail loudly."""
+    log = tmp_path / "serve.log"
+    log.write_text(GOOD_LOG)
+    sj = _write_serving_json(tmp_path, kv_dtype="int8")
+    assert check_serve.main(["check_serve.py", str(log),
+                             "--serving-json", str(sj)]) == 1
+    problems = check_serve.check_serving_json(
+        GOOD_LOG, json.loads(sj.read_text()))
+    assert any("kv dtype mismatch" in p for p in problems)
+
+
+def test_check_serve_serving_json_summary_without_kv_dtype_fails(tmp_path):
+    summary = _good_summary()
+    del summary["kv_dtype"]
+    problems = check_serve.check_serving_json(
+        _log(summary), {"batch": 4, "kv_dtype": "float32"})
+    assert any("kv_dtype" in p for p in problems)
+
+
+def test_check_serve_serving_json_paged_geometry_mismatch_fails(tmp_path):
+    """The paged-pool geometry cross-check: serving.json and the
+    summary's kv block disagreeing on num_pages must fail (previously
+    only the pages themselves were checked, never the declared
+    geometry)."""
+    summary = _good_summary(kv={"page_size": 4, "num_pages": 8,
+                                "pages_allocated": 0})
+    serving = {"batch": 4, "kv_dtype": "float32",
+               "paging": {"page_size": 4, "num_pages": 16}}
+    problems = check_serve.check_serving_json(_log(summary), serving)
+    assert any("geometry mismatch" in p and "num_pages" in p
+               for p in problems)
+    # and an agreeing geometry is clean
+    serving["paging"]["num_pages"] = 8
+    assert check_serve.check_serving_json(_log(summary), serving) == []
+
+
+def test_check_serve_serving_json_paging_without_kv_block_fails(tmp_path):
+    serving = {"batch": 4, "kv_dtype": "float32",
+               "paging": {"page_size": 4, "num_pages": 8}}
+    problems = check_serve.check_serving_json(GOOD_LOG, serving)
+    assert any("no \"kv\" block" in p for p in problems)
+
+
+def test_check_serve_serving_json_batch_mismatch_fails(tmp_path):
+    problems = check_serve.check_serving_json(
+        GOOD_LOG, {"batch": 2, "kv_dtype": "float32", "paging": None})
+    assert any("batch mismatch" in p for p in problems)
 
 
 # ---------------------------------------------------------------------------

@@ -19,6 +19,14 @@ Validates a BENCH_kernels.json produced by `benchmarks/run.py` (typically
    the fused decode kernel than the shared-scalar (batch-max) broadcast
    at the staggered steady-state length mix (deterministic block
    counting; wall-clock advisory off-TPU, as above).
+5. **The int8-decode row exists and holds the quantization claim** —
+   both sides recomputed here, never trusted from the report:
+   the per-token KV stream ratio is re-derived from the row's shape
+   (bf16 ``4*dh`` bytes vs int8+scale ``2*(dh+4)``) and must be
+   >= 1.6x AND agree with the reported bytes fields; the measured
+   ``max_abs_err`` must land under the declared ``err_budget``, and the
+   budget itself is capped at ``MAX_INT8_ERR_BUDGET`` so a report cannot
+   fabricate accuracy by declaring a loose budget.
 
 Usage: python tools/check_bench.py [BENCH_kernels.json]
 Exit code 0 = clean; 1 = problems (listed one per line).
@@ -46,9 +54,17 @@ REQUIRED_DICT_KEYS = {
                          "speedup_vs_fixed", "model_time_us"),
     "decode_ragged": ("lengths", "block_k", "fetched_speedup",
                       "wall_speedup", "ragged_us", "broadcast_us"),
+    "decode_int8": ("shape", "tuned_block_k", "tuned_us", "bf16_us",
+                    "bytes_per_token_int8", "bytes_per_token_bf16",
+                    "bytes_ratio", "max_abs_err", "err_budget"),
 }
 MIN_CAUSAL_KSTEP_SPEEDUP = 1.5
 MIN_RAGGED_FETCH_SPEEDUP = 1.3
+MIN_INT8_BYTES_RATIO = 1.6
+# Ceiling on the *declared* accuracy budget: err_budget is part of the
+# report, so without a cap a fabricated report could pass the accuracy
+# gate by declaring err_budget=1e9.
+MAX_INT8_ERR_BUDGET = 0.05
 
 
 def check(path: pathlib.Path) -> list[str]:
@@ -97,6 +113,53 @@ def check(path: pathlib.Path) -> list[str]:
                 f"{MIN_RAGGED_FETCH_SPEEDUP} — per-slot length skipping "
                 f"regressed (ragged batch must beat the shared-scalar "
                 f"broadcast)")
+
+    q8 = report.get("decode_int8")
+    if isinstance(q8, dict) and all(
+            f in q8 for f in REQUIRED_DICT_KEYS["decode_int8"]):
+        problems += _check_decode_int8(q8)
+    return problems
+
+
+def _check_decode_int8(q8: dict) -> list[str]:
+    """The quantized-stream gate.  The bandwidth claim is RECOMPUTED from
+    the row's shape — 2*dh bf16 bytes vs 2*(dh+4) int8+scale bytes per
+    token per kv head — and cross-checked against the reported fields, so
+    a report cannot assert a ratio its own geometry does not deliver."""
+    problems: list[str] = []
+    try:
+        dh = int(q8["shape"][3])
+    except (TypeError, ValueError, IndexError):
+        return [f"decode_int8: malformed shape {q8.get('shape')!r}"]
+    bpt_int8 = 2 * (dh + 4)         # K+V int8 rows + one f32 scale each
+    bpt_bf16 = 2 * dh * 2           # K+V bf16 rows
+    ratio = bpt_bf16 / bpt_int8
+    for field, want in (("bytes_per_token_int8", bpt_int8),
+                        ("bytes_per_token_bf16", bpt_bf16)):
+        if q8[field] != want:
+            problems.append(
+                f"decode_int8: {field} {q8[field]!r} != {want} recomputed "
+                f"from shape (dh={dh}) — fabricated bandwidth claim")
+    if abs(q8["bytes_ratio"] - ratio) > 1e-6:
+        problems.append(
+            f"decode_int8: bytes_ratio {q8['bytes_ratio']!r} != "
+            f"{ratio:.6f} recomputed from shape (dh={dh})")
+    if ratio < MIN_INT8_BYTES_RATIO:
+        problems.append(
+            f"decode_int8: recomputed bytes ratio {ratio:.3f} < "
+            f"{MIN_INT8_BYTES_RATIO} — the quantized stream no longer "
+            f"saves enough bandwidth at dh={dh}")
+    budget = q8["err_budget"]
+    if not isinstance(budget, (int, float)) or budget <= 0 \
+            or budget > MAX_INT8_ERR_BUDGET:
+        problems.append(
+            f"decode_int8: declared err_budget {budget!r} outside "
+            f"(0, {MAX_INT8_ERR_BUDGET}] — budget fabrication refused")
+    elif not isinstance(q8["max_abs_err"], (int, float)) \
+            or q8["max_abs_err"] > budget:
+        problems.append(
+            f"decode_int8: max_abs_err {q8['max_abs_err']!r} > declared "
+            f"budget {budget} — quantization accuracy regressed")
     return problems
 
 
@@ -108,7 +171,9 @@ def main(argv: list[str]) -> int:
     if not problems:
         print(f"ok: {path} (schema {SCHEMA}, causal kstep_speedup "
               f">= {MIN_CAUSAL_KSTEP_SPEEDUP}, ragged fetched_speedup "
-              f">= {MIN_RAGGED_FETCH_SPEEDUP})")
+              f">= {MIN_RAGGED_FETCH_SPEEDUP}, int8 bytes ratio "
+              f">= {MIN_INT8_BYTES_RATIO} within err budget "
+              f"<= {MAX_INT8_ERR_BUDGET})")
     return 1 if problems else 0
 
 

@@ -37,8 +37,18 @@ bounds the recovery block's ``replayed_steps``.  The journal fold here
 is a deliberate stdlib-only reimplementation — double-entry bookkeeping
 against `repro.runtime.journal`.
 
+**Geometry mode**: ``--serving-json PATH`` points at the durable
+``serving.json`` the run wrote to its state dir; the checker
+cross-checks the declared geometry against the summary — kv dtype, the
+paged pool's ``page_size``/``num_pages`` against the summary's ``kv``
+block, and the batch against the ``serving_plan`` line.  A mismatch
+means ``serve --resume`` would rebuild a cache whose layout does not
+match the snapshots on disk, so it fails loudly here instead of
+corrupting a recovery later.  The ok line always reports the kv dtype
+the summary ran with.
+
 Usage: python tools/check_serve.py serve.log [--requests N]
-       [--min-tokens T] [--chaos]
+       [--min-tokens T] [--chaos] [--serving-json serving.json]
        [--recovery [--crash-log LOG] [--journal J] [--snapshot-every N]]
 Exit code 0 = clean; 1 = problems (listed one per line).
 """
@@ -251,6 +261,61 @@ def check_recovery(text: str, crash_text: str | None = None,
     return problems
 
 
+def check_serving_json(text: str, serving: dict) -> list[str]:
+    """Cross-check the durable serving.json geometry against the run's
+    summary.  The kv dtype and the paged-pool geometry must agree — a
+    disagreement means `serve --resume` would rebuild a cache whose
+    layout (int8+scale leaves vs float, pool shape) does not match the
+    snapshots on disk, which must fail here, not mid-recovery."""
+    problems: list[str] = []
+    rows = _json_lines(text)
+    summaries = [r for r in rows if "tokens_generated" in r]
+    if not summaries:
+        return ["serving-json: no summary line to cross-check against"]
+    s = summaries[-1]
+
+    want_dtype = serving.get("kv_dtype", "float32")
+    got_dtype = s.get("kv_dtype")
+    if got_dtype is None:
+        problems.append(
+            "serving-json: summary reports no \"kv_dtype\" — cannot "
+            "confirm which cache layout the run actually used")
+    elif got_dtype != want_dtype:
+        problems.append(
+            f"serving-json: kv dtype mismatch — serving.json declares "
+            f"{want_dtype!r} but the summary ran {got_dtype!r} (resume "
+            f"would rebuild the wrong cache layout)")
+
+    pg = serving.get("paging")
+    kv = s.get("kv")
+    if pg is not None:
+        if not isinstance(kv, dict):
+            problems.append(
+                "serving-json: paged geometry declared but the summary "
+                "has no \"kv\" block — the run was not actually paged")
+        else:
+            for field in ("page_size", "num_pages"):
+                if kv.get(field) != pg.get(field):
+                    problems.append(
+                        f"serving-json: paged geometry mismatch — "
+                        f"serving.json {field}={pg.get(field)!r} but the "
+                        f"summary's kv block reports {kv.get(field)!r}")
+    elif isinstance(kv, dict):
+        problems.append(
+            "serving-json: summary has a paged \"kv\" block but "
+            "serving.json declares no paging geometry")
+
+    batch = serving.get("batch")
+    plans = [r["serving_plan"] for r in rows if "serving_plan" in r]
+    if batch is not None and plans and isinstance(plans[-1], dict) \
+            and plans[-1].get("batch") != batch:
+        problems.append(
+            f"serving-json: batch mismatch — serving.json declares "
+            f"{batch} but the serving_plan line chose "
+            f"{plans[-1].get('batch')!r}")
+    return problems
+
+
 def check(text: str, requests: int | None = None,
           min_tokens: int = 1, chaos: bool = False,
           require_plan: bool = True) -> list[str]:
@@ -317,6 +382,10 @@ def main(argv: list[str]) -> int:
     ap.add_argument("--snapshot-every", type=int, default=None,
                     help="snapshot interval that must bound "
                          "replayed_steps (recovery mode)")
+    ap.add_argument("--serving-json", type=pathlib.Path, default=None,
+                    help="the run's durable serving.json: cross-check its "
+                         "kv dtype / paged geometry / batch against the "
+                         "summary and fail loudly on disagreement")
     args = ap.parse_args(argv[1:])
 
     try:
@@ -337,14 +406,28 @@ def main(argv: list[str]) -> int:
         problems.extend(check_recovery(
             text, crash_text=crash_text, journal=args.journal,
             snapshot_every=args.snapshot_every))
+    if args.serving_json is not None:
+        try:
+            serving = json.loads(args.serving_json.read_text())
+        except (OSError, ValueError) as e:
+            serving = None
+            problems.append(f"{args.serving_json}: unreadable serving.json "
+                            f"({e!r})")
+        if isinstance(serving, dict):
+            problems.extend(check_serving_json(text, serving))
     for p in problems:
         print(p)
     if not problems:
+        summaries = [r for r in _json_lines(text)
+                     if "tokens_generated" in r]
+        kv_dtype = summaries[-1].get("kv_dtype", "?") if summaries else "?"
         extra = (", chaos schedule fired" if args.chaos else "") + \
             (", crash recovered with exactly-once accounting"
-             if args.recovery else "")
+             if args.recovery else "") + \
+            (", serving.json geometry agrees"
+             if args.serving_json is not None else "")
         print(f"ok: {args.log} (summary parsed, queue drained, outcomes "
-              f"conserve the submitted count{extra})")
+              f"conserve the submitted count, kv dtype {kv_dtype}{extra})")
     return 1 if problems else 0
 
 
